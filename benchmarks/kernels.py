@@ -1,0 +1,48 @@
+"""Kernel microbenchmarks: sliced OPA / MVM (interpret-mode wall time on CPU
+is NOT a TPU estimate — the derived column carries the structural numbers:
+bytes touched per call and the HBM-traffic saving of the fused form)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import DEFAULT_SPEC, slice_weights
+from repro.kernels.sliced_opa.ref import opa_deposit_ref, opa_fused_ref
+from repro.kernels.sliced_mvm.ref import mvm_sliced_ref
+import jax
+
+from .common import emit, time_jit
+
+
+def main():
+    rng = np.random.default_rng(0)
+    spec = DEFAULT_SPEC
+    for m, n, t in ((512, 512, 2048), (1024, 1024, 4096)):
+        q = jnp.asarray(rng.integers(-(2**28), 2**28, size=(m, n)), jnp.int32)
+        planes = slice_weights(q, spec)
+        p_upd = jnp.asarray(rng.integers(-(2**20), 2**20, size=(m, n)), jnp.int32)
+        dep = jax.jit(lambda pl, pq: opa_deposit_ref(pl, pq, spec))
+        us = time_jit(dep, planes, p_upd, iters=3, warmup=1)
+        # HBM traffic: deposit reads planes+update, writes planes
+        bytes_dep = planes.size + 4 * p_upd.size + planes.size
+        emit(f"kernels/opa_deposit_{m}x{n}", us, f"hbm_bytes={bytes_dep}")
+
+        x = jnp.asarray(rng.normal(size=(t, m)), jnp.float32)
+        dh = jnp.asarray(rng.normal(size=(t, n)) * 1e-4, jnp.float32)
+        fus = jax.jit(lambda pl, xx, dd: opa_fused_ref(pl, xx, dd, jnp.float32(2.0**20), spec))
+        us = time_jit(fus, planes, x, dh, iters=3, warmup=1)
+        # fused avoids materializing the f32 gradient (4*m*n) in HBM
+        saved = 2 * 4 * m * n
+        emit(f"kernels/opa_fused_{m}x{n}_T{t}", us, f"hbm_bytes_saved_vs_unfused={saved}")
+
+    m, n, b = 512, 512, 8
+    q = jnp.asarray(rng.integers(-(2**26), 2**26, size=(m, n)), jnp.int32)
+    planes = slice_weights(q, spec)
+    xq = jnp.asarray(rng.integers(-(2**14), 2**14, size=(b, m)), jnp.int32)
+    mv = jax.jit(lambda pl, xx: mvm_sliced_ref(pl, xx, spec, adc_bits=9))
+    us = time_jit(mv, planes, xq, iters=3, warmup=1)
+    emit(f"kernels/mvm_sliced_adc9_{m}x{n}", us, "bit_exact_fidelity_path")
+
+
+if __name__ == "__main__":
+    main()

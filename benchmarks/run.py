@@ -1,0 +1,62 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. The roofline module reads the
+dry-run artifacts if present (results/dryrun); run
+``python -m repro.launch.dryrun --all --out results/dryrun`` first for the
+full table.
+"""
+from __future__ import annotations
+
+import os
+import traceback
+
+
+def main() -> None:
+    from . import (
+        fig1_primitives,
+        fig9_slice_crs,
+        fig10_hetero,
+        fig11_sgd_energy,
+        fig12_minibatch_energy,
+        fig13_time,
+        fig14_variants,
+        fig15_gpu,
+        kernels,
+    )
+
+    print("name,us_per_call,derived")
+    for mod in (
+        fig1_primitives,
+        fig11_sgd_energy,
+        fig12_minibatch_energy,
+        fig13_time,
+        fig14_variants,
+        fig15_gpu,
+        kernels,
+        fig9_slice_crs,
+        fig10_hetero,
+    ):
+        try:
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            print(f"{mod.__name__},0.00,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc()
+
+    if os.path.isdir("results/dryrun"):
+        from . import roofline
+
+        try:
+            for mesh in ("single",):
+                for r in roofline.analyze("results/dryrun", mesh):
+                    if r.get("status") != "ok":
+                        print(f"roofline/{r['arch']}/{r['shape']},0.00,status=fail")
+                    else:
+                        print(roofline.fmt(r))
+        except Exception as e:  # noqa: BLE001
+            print(f"roofline,0.00,ERROR:{type(e).__name__}:{e}")
+    else:
+        print("roofline,0.00,SKIPPED(no results/dryrun; run repro.launch.dryrun --all)")
+
+
+if __name__ == "__main__":
+    main()

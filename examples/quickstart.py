@@ -1,0 +1,83 @@
+"""Quickstart: train a small MLP with the PANTHER sliced-OPA optimizer and
+watch it track float SGD, then inspect slice saturation and CRS.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import SliceSpec
+from repro.data import TeacherStudentDataset
+from repro.optim import PantherConfig, panther
+from repro.optim.baselines import sgd_init, sgd_update
+
+
+def mlp(key, sizes=(32, 128, 64, 8)):
+    ks = jax.random.split(key, len(sizes))
+    return {
+        f"w{i}": jax.random.normal(ks[i], (a, b)) / np.sqrt(a)
+        for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:]))
+    }
+
+
+def fwd(p, x):
+    h = x
+    for i in range(len(p)):
+        h = h @ p[f"w{i}"]
+        if i < len(p) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def main():
+    ds = TeacherStudentDataset(d_in=32, d_out=8, batch=256)
+    x, y = ds.batch()
+    loss = lambda p: jnp.mean((fwd(p, x) - y) ** 2)
+
+    params = mlp(jax.random.PRNGKey(0))
+    p_f, s_f = dict(params), sgd_init(params)
+    lr = jnp.float32(0.05)
+    step_f = jax.jit(lambda p, s: sgd_update(jax.grad(loss)(p), s, p, lr))
+
+    # Two CRS schedules. At this toy scale (large lr relative to the weight
+    # grid) carries pile up fast, so a rare CRS lets slices saturate and
+    # training FREEZES — exactly the paper's Fig-9 phenomenon. A frequent
+    # CRS resolves carries and PANTHER tracks float SGD.
+    runs = {}
+    for crs_every in (1024, 25):
+        cfg = PantherConfig(spec=SliceSpec((4, 4, 4, 6, 6, 5, 5, 5)), crs_every=crs_every)
+        state = panther.init(params, cfg)
+        p_q = panther.materialize(params, state, cfg)
+        step_q = jax.jit(
+            lambda p, s, _cfg=cfg: panther.update(jax.grad(loss)(p), s, p, lr, _cfg)
+        )
+        hist = []
+        for i in range(301):
+            p_q, state = step_q(p_q, state)
+            if i % 50 == 0:
+                hist.append(float(loss(p_q)))
+        runs[crs_every] = (hist, state, cfg)
+
+    hist_f = []
+    for i in range(301):
+        p_f, s_f = step_f(p_f, s_f)
+        if i % 50 == 0:
+            hist_f.append(float(loss(p_f)))
+
+    print(f"{'step':>5} {'panther(crs=1024)':>18} {'panther(crs=25)':>16} {'float sgd':>10}")
+    for j, i in enumerate(range(0, 301, 50)):
+        print(f"{i:5d} {runs[1024][0][j]:18.5f} {runs[25][0][j]:16.5f} {hist_f[j]:10.5f}")
+
+    for crs_every in (1024, 25):
+        _, state, cfg = runs[crs_every]
+        rep = panther.saturation_report(state, cfg)
+        print(f"\ncrs_every={crs_every}: per-plane saturation (w0), LSB->MSB:",
+              np.round(np.asarray(rep["w0"]), 3))
+    print("\nSaturation froze the rare-CRS run (paper §3.2/Fig 9); the frequent-CRS"
+          "\nrun tracks float SGD. PANTHER state is int8 digit planes:",
+          runs[25][1].sliced["w0"].planes.dtype, runs[25][1].sliced["w0"].planes.shape)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Batched serving example: prefill + decode with per-layer donated caches,
+serving weights straight from the sliced (crossbar) representation.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma-2b
+"""
+import sys
+
+sys.argv = [sys.argv[0], *sys.argv[1:]]
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if "--smoke" not in sys.argv:
+        sys.argv.append("--smoke")
+    main()

@@ -1,0 +1,66 @@
+"""Architecture registry: ``get(arch_id)`` returns the full LMConfig;
+``get_smoke(arch_id)`` returns a reduced same-family config for CPU tests.
+
+Shape cells (assigned): train_4k, prefill_32k, decode_32k, long_500k.
+``long_500k`` runs only for sub-quadratic archs (zamba2-1.2b, xlstm-125m) —
+see DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "zamba2_1p2b",
+    "musicgen_large",
+    "deepseek_v2_lite_16b",
+    "granite_moe_1b_a400m",
+    "xlstm_125m",
+    "minicpm_2b",
+    "gemma2_9b",
+    "gemma_2b",
+    "phi4_mini_3p8b",
+    "chameleon_34b",
+]
+
+# canonical hyphenated names from the assignment -> module ids
+ALIASES = {
+    "zamba2-1.2b": "zamba2_1p2b",
+    "musicgen-large": "musicgen_large",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "xlstm-125m": "xlstm_125m",
+    "minicpm-2b": "minicpm_2b",
+    "gemma2-9b": "gemma2_9b",
+    "gemma-2b": "gemma_2b",
+    "phi4-mini-3.8b": "phi4_mini_3p8b",
+    "chameleon-34b": "chameleon_34b",
+}
+
+SHAPES = {
+    "train_4k": {"kind": "train", "seq_len": 4096, "global_batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq_len": 32768, "global_batch": 32},
+    "decode_32k": {"kind": "decode", "seq_len": 32768, "global_batch": 128},
+    "long_500k": {"kind": "decode", "seq_len": 524288, "global_batch": 1},
+}
+
+
+def _module(arch_id: str):
+    arch_id = ALIASES.get(arch_id, arch_id)
+    return importlib.import_module(f"repro.configs.{arch_id}")
+
+
+def get(arch_id: str):
+    return _module(arch_id).CONFIG
+
+
+def get_smoke(arch_id: str):
+    return _module(arch_id).SMOKE
+
+
+def shape_cells(arch_id: str):
+    """The shape cells this arch participates in."""
+    cfg = get(arch_id)
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long_context:
+        cells.append("long_500k")
+    return cells

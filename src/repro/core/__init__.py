@@ -1,0 +1,42 @@
+"""PANTHER core: bit-sliced fixed-point weight representation, OPA, MVM, CRS."""
+from .fixed_point import IO_BITS, WEIGHT_BITS, choose_frac_bits, dequantize, quantize
+from .slicing import (
+    DEFAULT_SPEC,
+    LOGICAL_BITS,
+    RADIX,
+    SliceSpec,
+    crs,
+    dequantize_planes,
+    product_digits,
+    saturating_add,
+    saturation_fraction,
+    slice_weights,
+    unslice_weights,
+)
+from .opa import opa_batched, opa_stream, opa_stream_batch, outer_product_int
+from .mvm import mvm_fast, mvm_sliced
+
+__all__ = [
+    "IO_BITS",
+    "WEIGHT_BITS",
+    "choose_frac_bits",
+    "dequantize",
+    "quantize",
+    "DEFAULT_SPEC",
+    "LOGICAL_BITS",
+    "RADIX",
+    "SliceSpec",
+    "crs",
+    "dequantize_planes",
+    "product_digits",
+    "saturating_add",
+    "saturation_fraction",
+    "slice_weights",
+    "unslice_weights",
+    "opa_batched",
+    "opa_stream",
+    "opa_stream_batch",
+    "outer_product_int",
+    "mvm_fast",
+    "mvm_sliced",
+]

@@ -1,0 +1,62 @@
+"""Fixed-point quantization utilities for the PANTHER numerics.
+
+The paper (§4.1) uses 16-bit fixed point for activations/errors and 32-bit
+fixed point for weights. Scales are per-tensor powers of two, chosen once at
+initialization (the crossbar conductance range is fixed in hardware) and held
+constant through training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WEIGHT_BITS = 32
+IO_BITS = 16
+
+
+def choose_frac_bits(x: jax.Array, word_bits: int = WEIGHT_BITS, margin_bits: int = 2) -> jax.Array:
+    """Pick F (fraction bits) so that ``max|x| * 2**F`` fits in ``word_bits``-bit
+    signed with ``margin_bits`` of headroom for growth during training.
+
+    Returns an int32 scalar. Degenerate (all-zero) tensors get a default F
+    placing unit range at full scale.
+    """
+    max_abs = jnp.max(jnp.abs(x))
+    # int bits needed for the integer part of max_abs
+    int_bits = jnp.ceil(jnp.log2(jnp.maximum(max_abs, 1e-30)))
+    f = (word_bits - 1) - margin_bits - int_bits
+    f = jnp.where(max_abs == 0.0, jnp.asarray(word_bits - 1 - margin_bits, f.dtype), f)
+    return jnp.clip(f, 0, word_bits - 1).astype(jnp.int32)
+
+
+def quantize(
+    x: jax.Array,
+    frac_bits: jax.Array | int,
+    word_bits: int = WEIGHT_BITS,
+    *,
+    stochastic: bool = False,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Quantize float -> signed fixed point int32 with saturation.
+
+    ``stochastic=True`` uses unbiased stochastic rounding (needs ``key``) —
+    important for the tiny learning-rate-scaled gradient updates that would
+    otherwise deterministically round to zero.
+    """
+    scale = jnp.exp2(jnp.asarray(frac_bits, jnp.float32))
+    y = x.astype(jnp.float32) * scale
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        noise = jax.random.uniform(key, y.shape, jnp.float32)
+        y = jnp.floor(y + noise)
+    else:
+        y = jnp.round(y)
+    lim = float(2 ** (word_bits - 1) - 1)
+    y = jnp.clip(y, -lim, lim)
+    return y.astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, frac_bits: jax.Array | int, dtype=jnp.float32) -> jax.Array:
+    scale = jnp.exp2(-jnp.asarray(frac_bits, jnp.float32))
+    return (q.astype(jnp.float32) * scale).astype(dtype)

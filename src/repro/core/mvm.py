@@ -1,0 +1,76 @@
+"""Bit-sliced MVM / MᵀVM with a finite-ADC fidelity model (PANTHER §2.2.2, §3).
+
+``mvm_sliced`` is the hardware-exact form: the 16-bit input is bit-streamed
+(1 bit/cycle); each (slice, cycle) produces an analog column sum that passes
+through an ADC of ``adc_bits`` resolution before the digital shift-and-add.
+With ``adc_bits=None`` (ideal ADC) the result provably equals
+``dequantize(planes) @ x`` — that algebraic identity is what lets production
+training run the MVM on the MXU (``mvm_fast``) while remaining faithful.
+
+The MᵀVM (layer-gradient) op is the same crossbar driven from the columns.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .slicing import LOGICAL_BITS, DEFAULT_SPEC, SliceSpec, dequantize_planes
+
+
+def _adc(col_sum: jax.Array, full_scale: float, adc_bits: int | None) -> jax.Array:
+    """SAR-ADC model: uniform mid-tread quantizer over ±full_scale."""
+    if adc_bits is None:
+        return col_sum.astype(jnp.float32)
+    step = (2.0 * full_scale) / (2**adc_bits)
+    q = jnp.round(col_sum.astype(jnp.float32) / step) * step
+    return jnp.clip(q, -full_scale, full_scale)
+
+
+def mvm_sliced(
+    planes: jax.Array,
+    x_q: jax.Array,
+    spec: SliceSpec = DEFAULT_SPEC,
+    io_bits: int = 16,
+    adc_bits: int | None = None,
+    transpose: bool = False,
+) -> jax.Array:
+    """Bit-exact sliced MVM. planes int8 [S, M, N]; x_q int [M] (or [N] when
+    ``transpose``). Returns float32 accumulation on the product grid
+    (caller rescales by input/weight scales)."""
+    sx = jnp.sign(x_q).astype(jnp.int32)
+    mx = jnp.abs(x_q).astype(jnp.int32)
+    mag_bits = io_bits - 1
+    n_rows = planes.shape[1] if not transpose else planes.shape[2]
+
+    out = None
+    for s in range(spec.n_slices):
+        w = planes[s].astype(jnp.int32)
+        if transpose:
+            w = w.T
+        m_s = spec.plane_max[s]
+        full_scale = float(n_rows * m_s)
+        acc_s = None
+        for t in range(mag_bits):
+            bt = ((mx >> t) & 1) * sx  # [rows]
+            col = bt @ w  # analog column current (int32 exact here)
+            col = _adc(col, full_scale, adc_bits)
+            term = col * (2.0**t)
+            acc_s = term if acc_s is None else acc_s + term
+        term = acc_s * float(2 ** (LOGICAL_BITS * s))
+        out = term if out is None else out + term
+    return out
+
+
+def mvm_fast(
+    planes: jax.Array,
+    x: jax.Array,
+    frac_bits: jax.Array | int,
+    spec: SliceSpec = DEFAULT_SPEC,
+    transpose: bool = False,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Production MVM: dequantize planes once, matmul on the MXU."""
+    w = dequantize_planes(planes, frac_bits, spec, dtype=dtype)
+    if transpose:
+        w = w.T
+    return x @ w

@@ -1,0 +1,92 @@
+"""Bit-sliced Outer-Product-Accumulate (PANTHER §3.1, Fig 3).
+
+Two forms, both operating on digit planes (see ``slicing.py``):
+
+``opa_stream``   — the hardware-exact form. The row input ``x`` (activation)
+                   is bit-streamed one magnitude bit per cycle (m=1, paper
+                   §3.1); the column input ``a`` (= -η·δh, learning-rate
+                   folded) is left-shifted each cycle and carved into 4-bit
+                   chunks, one per weight slice. Each cycle deposits
+                   ``±x_bit · chunk_s`` into plane ``s`` with per-cycle
+                   saturation — carries accumulate *within* a slice's
+                   headroom and are never propagated across slices.
+
+``opa_batched``  — the production form: the summed outer product (already an
+                   int32 on the weight grid) is decomposed into balanced
+                   base-16 digits and deposited with a single saturating add.
+                   Value-equivalent to streaming each example when no plane
+                   saturates mid-batch (property-tested in
+                   tests/test_core_properties.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .slicing import LOGICAL_BITS, DEFAULT_SPEC, SliceSpec, product_digits, saturating_add
+
+IO_MAG_BITS = 15  # 16-bit signed magnitude inputs
+
+
+def opa_stream(
+    planes: jax.Array,
+    x_q: jax.Array,
+    a_q: jax.Array,
+    spec: SliceSpec = DEFAULT_SPEC,
+    io_bits: int = 16,
+) -> jax.Array:
+    """Hardware-exact OPA of one example onto the digit planes.
+
+    planes: int8 [S, M, N]; x_q: int [M] row input; a_q: int [N] column input
+    (both signed fixed point, magnitudes < 2**(io_bits-1)).
+    """
+    sx = jnp.sign(x_q).astype(jnp.int32)
+    mx = jnp.abs(x_q).astype(jnp.int32)
+    sa = jnp.sign(a_q).astype(jnp.int32)
+    ma = jnp.abs(a_q).astype(jnp.int32)
+
+    mag_bits = io_bits - 1
+    out = planes
+    for t in range(mag_bits):
+        bt = ((mx >> t) & 1) * sx  # [M] signed row pulse this cycle
+        v = ma << t  # [N] shifted column magnitude
+        deltas = []
+        for s in range(spec.n_slices):
+            chunk = ((v >> (LOGICAL_BITS * s)) & (2**LOGICAL_BITS - 1)) * sa  # [N]
+            deltas.append(bt[:, None] * chunk[None, :])
+        out = saturating_add(out, jnp.stack(deltas, axis=0), spec)
+    return out
+
+
+def opa_stream_batch(
+    planes: jax.Array,
+    x_q: jax.Array,
+    a_q: jax.Array,
+    spec: SliceSpec = DEFAULT_SPEC,
+    io_bits: int = 16,
+) -> jax.Array:
+    """Sequential per-example OPA over a batch (paper Table 2, steps 9-12).
+
+    x_q: [B, M], a_q: [B, N]. Examples are applied in order — saturation is
+    order-dependent, exactly as in the crossbar.
+    """
+
+    def body(p, xa):
+        x, a = xa
+        return opa_stream(p, x, a, spec, io_bits), None
+
+    out, _ = jax.lax.scan(body, planes, (x_q, a_q))
+    return out
+
+
+def opa_batched(planes: jax.Array, p_q: jax.Array, spec: SliceSpec = DEFAULT_SPEC) -> jax.Array:
+    """Production OPA: deposit an int32 grid-quantized update ``p_q`` (same
+    shape as the weight) into the planes with one saturating accumulate."""
+    return saturating_add(planes, product_digits(p_q, spec), spec)
+
+
+def outer_product_int(x_q: jax.Array, a_q: jax.Array) -> jax.Array:
+    """Summed int32 outer product over a batch: ``P = sum_b x_b a_b^T``."""
+    return jnp.einsum(
+        "bm,bn->mn", x_q.astype(jnp.int32), a_q.astype(jnp.int32), preferred_element_type=jnp.int32
+    )

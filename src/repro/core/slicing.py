@@ -1,0 +1,227 @@
+"""Bit-sliced weight representation (PANTHER §3).
+
+A 32-bit fixed-point weight is held as ``S`` signed digit *planes* in balanced
+base-16: ``w = sum_s plane[s] * 16**s`` with plane ``s`` covering logical bits
+``[4s, 4s+4)``. Each plane is stored in a crossbar whose cells have ``bits[s]``
+physical bits; the ``bits[s] - 4`` surplus bits are *carry headroom* — OPA
+partial products accumulate there without propagation (propagating eagerly
+would need serial reads/writes, the very thing the paper eliminates). A plane
+saturates (clips) at ``±(2**(bits[s]-1))``-ish bounds; saturation freezes
+learning in that plane until the periodic Carry Resolution Step (CRS)
+re-canonicalizes the digits.
+
+Plane order note: ``SliceSpec.bits`` is written MSB→LSB to match the paper's
+"44466555" notation; planes are indexed LSB-first internally (plane ``s``
+weighs ``16**s``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+LOGICAL_BITS = 4  # p=4 column-DAC chunk width (paper §3.3 choice)
+RADIX = 1 << LOGICAL_BITS  # 16
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceSpec:
+    """Heterogeneous weight-slicing configuration.
+
+    ``bits``: physical bits per slice, MSB→LSB (paper notation). The paper's
+    default is ``(4, 4, 4, 6, 6, 5, 5, 5)`` — "44466555", 39 bits total for a
+    32-bit weight.
+    """
+
+    bits: tuple = (4, 4, 4, 6, 6, 5, 5, 5)
+
+    def __post_init__(self):
+        object.__setattr__(self, "bits", tuple(int(b) for b in self.bits))
+        if any(b < 2 or b > 8 for b in self.bits):
+            raise ValueError(f"slice bits must be in [2, 8], got {self.bits}")
+
+    @property
+    def n_slices(self) -> int:
+        return len(self.bits)
+
+    @property
+    def total_bits(self) -> int:
+        return sum(self.bits)
+
+    @property
+    def bits_lsb_first(self) -> tuple:
+        return tuple(reversed(self.bits))
+
+    @property
+    def plane_max(self) -> tuple:
+        """Saturating bound per plane, LSB-first: plane in [-m, m]."""
+        return tuple((1 << (b - 1)) for b in self.bits_lsb_first)
+
+    @property
+    def word_bits(self) -> int:
+        return LOGICAL_BITS * self.n_slices
+
+    def name(self) -> str:
+        return "".join(str(b) for b in self.bits)
+
+    @staticmethod
+    def uniform(bits_per_slice: int, n_slices: int = 8) -> "SliceSpec":
+        return SliceSpec(bits=(bits_per_slice,) * n_slices)
+
+    @property
+    def canonical_limit(self) -> int:
+        """Largest magnitude exactly representable by canonical balanced
+        digits: ``7 * (16^S - 1) / 15`` (≈ 0.93·2^31 for S=8). The negative
+        side could reach ``-8/7`` of this, but we clip symmetrically — this
+        is the weight-rail value used by quantization and CRS."""
+        return (RADIX // 2 - 1) * (RADIX**self.n_slices - 1) // (RADIX - 1)
+
+
+DEFAULT_SPEC = SliceSpec()
+
+
+def _plane_max_arr(spec: SliceSpec) -> jnp.ndarray:
+    return jnp.asarray(spec.plane_max, jnp.int32)
+
+
+def slice_weights(q: jax.Array, spec: SliceSpec = DEFAULT_SPEC) -> jax.Array:
+    """Canonically decompose int32 fixed-point weights into digit planes.
+
+    Returns int8 ``[S, *q.shape]`` planes, LSB-first, balanced base-16 digits
+    in ``[-8, 7]`` (each fits any ``bits >= 4`` plane with zero carry
+    occupancy — the state right after a CRS). Input is clipped to
+    ``±canonical_limit`` (values beyond it are not representable).
+    """
+    lim = spec.canonical_limit
+    q = jnp.clip(q.astype(jnp.int32), -lim, lim)
+    planes = []
+    rem = q
+    for _ in range(spec.n_slices):
+        d = ((rem + RADIX // 2) % RADIX) - RADIX // 2  # balanced digit [-8, 7]
+        planes.append(d.astype(jnp.int8))
+        rem = (rem - d) // RADIX
+    return jnp.stack(planes, axis=0)
+
+
+def unslice_weights(planes: jax.Array, spec: SliceSpec = DEFAULT_SPEC) -> jax.Array:
+    """Reassemble int32 fixed-point weights: ``w = sum_s plane[s] * 16**s``.
+
+    Valid for canonical (post-CRS) planes; *dirty* planes can represent
+    values beyond int32 — use :func:`dequantize_planes` (float path) or
+    :func:`crs` first for those.
+    """
+    acc = planes[-1].astype(jnp.int32)
+    for s in range(spec.n_slices - 2, -1, -1):
+        acc = acc * RADIX + planes[s].astype(jnp.int32)
+    return acc
+
+
+def dequantize_planes(
+    planes: jax.Array,
+    frac_bits: jax.Array | int,
+    spec: SliceSpec = DEFAULT_SPEC,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Dequantize possibly-dirty planes to float: ``sum_s plane_s 2^{4s-F}``.
+
+    Safe for carry-laden planes whose represented value exceeds int32 (the
+    44466555 spec's dirty max is ~2.29e9 > 2^31-1): the per-plane sums run in
+    float32. Compute precision is the fp32 mantissa (24 bits) — the
+    mixed-precision contract of the fast path; full 32-bit state stays in the
+    planes and `mvm_sliced` provides bit-exact semantics.
+    """
+    f = jnp.asarray(frac_bits, jnp.float32)
+    acc = planes[-1].astype(jnp.float32)
+    for s in range(planes.shape[0] - 2, -1, -1):
+        acc = acc * float(RADIX) + planes[s].astype(jnp.float32)
+    return (acc * jnp.exp2(-f)).astype(dtype)
+
+
+def saturating_add(planes: jax.Array, delta: jax.Array, spec: SliceSpec = DEFAULT_SPEC) -> jax.Array:
+    """Per-plane saturating accumulate: ``clip(plane + delta, -m_s, m_s)``.
+
+    ``delta`` is int32 ``[S, ...]``; result is int8 planes. This is the
+    in-crossbar accumulate with carry-in-headroom and device saturation.
+    """
+    m = _plane_max_arr(spec).reshape((spec.n_slices,) + (1,) * (planes.ndim - 1))
+    out = planes.astype(jnp.int32) + delta.astype(jnp.int32)
+    out = jnp.clip(out, -m, m)
+    return out.astype(jnp.int8)
+
+
+def saturation_fraction(planes: jax.Array, spec: SliceSpec = DEFAULT_SPEC) -> jax.Array:
+    """Fraction of saturated cells per plane — the paper's Fig-9 metric."""
+    m = _plane_max_arr(spec).reshape((spec.n_slices,) + (1,) * (planes.ndim - 1))
+    sat = jnp.abs(planes.astype(jnp.int32)) >= m
+    return jnp.mean(sat.astype(jnp.float32), axis=tuple(range(1, planes.ndim)))
+
+
+def crs(planes: jax.Array, spec: SliceSpec = DEFAULT_SPEC) -> jax.Array:
+    """Carry Resolution Step (paper §3.2).
+
+    Digit-serial carry propagation from LSB to MSB — small integers only
+    (TPU-safe, no int64): ``v = plane[s] + carry_in; d = balanced_digit(v);
+    carry_out = (v - d) / 16``. A nonzero carry out of the MSB plane, or an
+    MSB digit outside the balanced range, means the logical weight exceeds
+    the canonical range; we saturate to ``±canonical_limit`` (the crossbar
+    analog: the weight rails).
+    """
+    new_planes = []
+    carry = jnp.zeros(planes.shape[1:], jnp.int32)
+    for s in range(spec.n_slices):
+        v = planes[s].astype(jnp.int32) + carry
+        d = ((v + RADIX // 2) % RADIX) - RADIX // 2
+        new_planes.append(d)
+        carry = (v - d) // RADIX
+    stacked = jnp.stack(new_planes, axis=0)
+
+    # Overflow rails: replace the whole digit vector with max/min canonical.
+    lim = spec.canonical_limit
+    pos_rail = slice_weights(jnp.asarray(lim, jnp.int32), spec).astype(jnp.int32)
+    neg_rail = slice_weights(jnp.asarray(-lim, jnp.int32), spec).astype(jnp.int32)
+    shape = (spec.n_slices,) + (1,) * (planes.ndim - 1)
+    pos_rail = pos_rail.reshape(shape)
+    neg_rail = neg_rail.reshape(shape)
+    overflow = carry[None]  # broadcast over planes
+    stacked = jnp.where(overflow > 0, pos_rail, stacked)
+    stacked = jnp.where(overflow < 0, neg_rail, stacked)
+
+    # Balanced digits reach -8 per plane, so carry-free values down to
+    # -8·Σ16^s < -lim exist; rail them via MSB-first lexicographic compare
+    # against the -lim digit vector (canonical digits are order-isomorphic).
+    neg_digits = []  # python-int balanced digits of -lim (static)
+    rem = -lim
+    for _ in range(spec.n_slices):
+        d = ((rem + RADIX // 2) % RADIX) - RADIX // 2
+        neg_digits.append(d)
+        rem = (rem - d) // RADIX
+    lt = jnp.zeros(planes.shape[1:], bool)
+    gt = jnp.zeros(planes.shape[1:], bool)
+    for s in range(spec.n_slices - 1, -1, -1):
+        d = stacked[s]
+        r = neg_digits[s]
+        lt_new = lt | (~gt & (d < r))
+        gt = gt | (~lt & (d > r))
+        lt = lt_new
+    stacked = jnp.where(lt[None], neg_rail, stacked)
+    return stacked.astype(jnp.int8)
+
+
+def product_digits(p: jax.Array, spec: SliceSpec = DEFAULT_SPEC) -> jax.Array:
+    """Decompose an int32 product/gradient into balanced base-16 digit deltas.
+
+    This is the *batched* OPA form: the summed outer product ``P`` is split
+    into per-plane contributions ``[S, ...]`` (int32, range [-8, 7]). When no
+    plane saturates mid-batch this is value-equivalent to streaming the
+    individual outer products (property-tested).
+    """
+    lim = spec.canonical_limit
+    digits = []
+    rem = jnp.clip(p.astype(jnp.int32), -lim, lim)
+    for _ in range(spec.n_slices):
+        d = ((rem + RADIX // 2) % RADIX) - RADIX // 2
+        digits.append(d)
+        rem = (rem - d) // RADIX
+    return jnp.stack(digits, axis=0)

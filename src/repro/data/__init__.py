@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLMDataset, TeacherStudentDataset
+
+__all__ = ["SyntheticLMDataset", "TeacherStudentDataset"]

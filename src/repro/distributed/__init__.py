@@ -1,0 +1,4 @@
+from . import sharding
+from .collectives import compressed_psum
+
+__all__ = ["sharding", "compressed_psum"]

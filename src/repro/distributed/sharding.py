@@ -1,0 +1,186 @@
+"""Sharding rules for the (pod, data, model) production mesh.
+
+Name-based rules assign a PartitionSpec to the *trailing* dims of each
+parameter; leading dims (lax.scan layer stacking, the S slice-plane dim of
+the PANTHER optimizer state, MoE expert stacking handled explicitly) are
+padded with None. The same rules therefore cover params, grads, and the int8
+digit planes (which shard exactly like their matrix — the paper's crossbar
+tiling maps one-to-one onto tensor parallelism).
+
+DP axes: batch shards over ('pod', 'data') — 'pod' is the cross-pod outer
+data axis (gradients cross the pod interconnect once per step).
+TP axis: 'model' — attention heads / FFN hidden / vocab / experts (EP) /
+mamba d_inner.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL = "model"
+
+# (regex over the flattened param path, trailing-dims spec)
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed$", (MODEL, None)),  # vocab-sharded embedding
+    (r"lm_head$", (None, MODEL)),
+    # MoE expert stacks [E, d, f] / [E, f, d]: expert-parallel on 'model'
+    (r"(experts_gate|experts_up|experts_down)$", (MODEL, None, None)),
+    (r"router$", (None, None)),
+    # column-parallel (output dim sharded)
+    (r"(wq|wk|wv|wi_gate|wi_up|w_up|w_gate|w_z|w_x|w_dt|ffn_up|mlp_up|w_uk|w_uv)$", (None, MODEL)),
+    # row-parallel (input dim sharded)
+    (r"(wo|w_down|w_out|ffn_down|mlp_down)$", (MODEL, None)),
+    # small / replicated
+    (r"(w_B|w_C|w_dkv|r|conv_w|conv_b|A_log|dt_bias|D|bias|scale|if_bias)$", ()),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+    return "/".join(parts)
+
+
+def trailing_spec(path_str: str) -> tuple:
+    for pat, spec in _RULES:
+        if re.search(pat, path_str):
+            return spec
+    return ()
+
+
+def leaf_spec(path_str: str, ndim: int) -> P:
+    t = trailing_spec(path_str)
+    if len(t) > ndim:
+        t = t[-ndim:]
+    return P(*((None,) * (ndim - len(t)) + tuple(t)))
+
+
+def sanitize_spec(spec: P, shape: tuple, mesh) -> P:
+    """Drop (or relocate) mesh axes that do not divide their dimension —
+    e.g. granite's vocab=49155 cannot shard 16-way, so 'model' moves to the
+    d_model axis of the embedding instead of crashing pjit."""
+    spec = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = list(spec)
+    homeless = []
+    for i, (s, d) in enumerate(zip(spec, shape)):
+        names = s if isinstance(s, tuple) else (s,) if s is not None else ()
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        if names and d % size != 0:
+            homeless.extend(names)
+            out[i] = None
+    for n in homeless:
+        for i, (s, d) in enumerate(zip(out, shape)):
+            if s is None and d % mesh.shape[n] == 0 and d >= mesh.shape[n]:
+                out[i] = n
+                break
+    return P(*out)
+
+
+def param_specs(params, mesh=None) -> Any:
+    """PartitionSpec pytree for a parameter (or gradient) tree."""
+
+    def spec(path, leaf):
+        s = leaf_spec(_path_str(path), leaf.ndim)
+        if mesh is not None:
+            s = sanitize_spec(s, leaf.shape, mesh)
+        return s
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def fsdp_spec(spec: P, shape: tuple, data_size: int, n_tail: int | None = None) -> P:
+    """ZeRO-3 transform: additionally shard the first unsharded, divisible
+    axis over 'data'. Storage shrinks by the data-axis size; XLA SPMD
+    inserts the per-layer all-gather (fwd) / reduce-scatter (bwd).
+    ``n_tail`` restricts eligibility to the trailing matrix axes (never the
+    lax.scan layer-stack axis or the slice-plane axis)."""
+    spec = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = list(spec)
+    start = len(shape) - (n_tail if n_tail is not None else len(shape))
+    for i in range(max(start, 0), len(shape)):
+        s, d = spec[i], shape[i]
+        if s is None and d % data_size == 0 and d >= data_size:
+            out[i] = "data"
+            return P(*out)
+    return P(*spec)
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """DP axes present in this mesh (('pod','data') multi-pod, ('data',) single)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_spec(mesh: Mesh, global_batch: int, ndim: int) -> P:
+    """Shard the batch dim over as many DP axes as divide it; rest replicated."""
+    axes = []
+    rem = global_batch
+    for a in batch_axes(mesh):
+        size = mesh.shape[a]
+        if rem % size == 0:
+            axes.append(a)
+            rem //= size
+    spec = tuple(axes) if axes else None
+    return P(spec, *((None,) * (ndim - 1)))
+
+
+def activation_spec(mesh: Mesh, global_batch: int) -> P:
+    """[B, S, d] activations: batch over DP axes; d replicated (TP keeps
+    hidden sharded only inside blocks)."""
+    return data_spec(mesh, global_batch, 3)
+
+
+def cache_specs(mesh: Mesh, cache_shapes, global_batch: int):
+    """Generic cache sharding: the batch axis (identified by size ==
+    global_batch… caches are [(L,)? B, ...]) shards over the DP axes that
+    divide it; then the first remaining axis divisible by the 'model' axis
+    (largest first) takes TP. Handles KV [B,S,KV,hd], MLA [B,S,rank],
+    SSM [B,H,hd,ds], mLSTM [B,H,hd,hd] uniformly, including B=1 long-context
+    cells where the model axis must carry the 500k-token cache."""
+    msize = mesh.shape[MODEL]
+    dp = []
+    rem = global_batch
+    for a in batch_axes(mesh):
+        if rem % mesh.shape[a] == 0:
+            dp.append(a)
+            rem //= mesh.shape[a]
+
+    def one(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        # find the batch axis: first axis whose size equals global_batch
+        b_ax = None
+        for i, d in enumerate(shape):
+            if d == global_batch:
+                b_ax = i
+                break
+        if b_ax is not None and dp:
+            spec[b_ax] = tuple(dp) if len(dp) > 1 else dp[0]
+        # TP: first divisible axis scanning from the TRAILING dims (head_dim,
+        # then kv-heads). Never prefer the sequence axis: seq-sharded caches
+        # force SPMD "involuntary full rematerialization" inside the chunked-
+        # attention scan (dynamic-slice across a sharded dim) — measured 60
+        # GiB/dev on minicpm prefill before this rule.
+        for i in range(len(shape) - 1, -1, -1):
+            d = shape[i]
+            if i != b_ax and spec[i] is None and d % msize == 0 and d >= msize:
+                spec[i] = MODEL
+                return P(*spec)
+        return P(*spec)
+
+    return jax.tree.map(one, cache_shapes)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

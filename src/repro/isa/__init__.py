@@ -1,0 +1,3 @@
+from . import compiler, energy, graph, isa, simulator
+
+__all__ = ["compiler", "energy", "graph", "isa", "simulator"]

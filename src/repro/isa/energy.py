@@ -1,0 +1,92 @@
+"""Energy/latency model for the PANTHER accelerator and its baselines.
+
+All per-op constants are for one 128x128 crossbar tile processing 16-bit
+streamed inputs. Disclosed anchors from the paper:
+
+  * ReRAM MVM            35.10 nJ   (§7.3 "ReRAM MVMs ... 35.10 nJ")
+  * CMOS  OPA            37.28 nJ   (§7.3 "... CMOS OPAs ... 37.28 nJ")
+  * ReRAM OPA            11.37 nJ   (§7.3 "performing OPA in the crossbar (11.37 nJ)")
+  * CMOS/ReRAM MVM       10.4x energy, 8.9x latency (Fig 1, same area, 32nm)
+  * PANTHER MVM ADC tax  +17.5% for the 44466555 spec (§6.3)
+  * ReRAM write >> read, both >> in-crossbar compute; write ~10x read and
+    ~order of magnitude over CMOS write (Fig 1, program-verify [9])
+
+Calibrated (derivation in comments — chosen to reproduce the paper's
+headline ratios, then held fixed across ALL experiments):
+
+  * ReRAM serial write/tile: PANTHER vs Base_mvm FC-layer SGD ratio peaks at
+    54.21x (§7.3). Base_mvm FC cost/tile ~= 2*35.10 + 37.28 + R + W;
+    PANTHER ~= 2*35.10*1.175 + 11.37 = 93.9 nJ  =>  R + W ~= 4983 nJ.
+    With W = 10R: W ~= 4530 nJ (~276 pJ/cell — consistent with tens of
+    program-verify pulses [9]), R ~= 453 nJ.
+  * SRAM read+write/tile (CMOS baseline is weight-stationary; its reads
+    stay on-chip): folded into E_MVM_CMOS = 10.4 * 35.10 = 365 nJ.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+XBAR = 128  # crossbar rows/cols
+CELLS = XBAR * XBAR
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyModel:
+    # --- energy per tile-op (nJ) ---
+    e_mvm_reram: float = 35.10
+    e_opa_reram: float = 11.37
+    e_opa_cmos: float = 37.28
+    e_mvm_cmos: float = 35.10 * 10.4  # Fig 1
+    adc_tax_panther: float = 1.175  # §6.3 (44466555 needs higher-precision ADC)
+    e_write_reram: float = 4530.0  # calibrated (see module docstring)
+    e_read_reram: float = 453.0
+    # digital vector op energy per 16-bit element (nJ) — VFU activations etc.
+    e_vfu_elem: float = 0.0004
+    # shared-memory / NoC movement per byte (nJ)
+    e_mem_byte: float = 0.0009
+
+    # --- latency per tile-op (ns) ---
+    # ReRAM MVM: 16 bit-serial cycles at ~6.4ns effective (ADC-limited), ~100ns.
+    l_mvm_reram: float = 100.0
+    l_opa_reram: float = 105.0  # 16 pulse-width cycles (m=1, §3.1)
+    l_mvm_cmos: float = 890.0  # 8.9x (Fig 1)
+    l_opa_cmos: float = 890.0
+    # serial row-by-row access: 128 rows; write uses program-verify pulses.
+    l_read_reram: float = 128 * 50.0  # 6.4 us/tile
+    l_write_reram: float = 128 * 500.0  # 64 us/tile (~10x read, Fig 1)
+    l_read_sram: float = 128 * 2.0
+    l_write_sram: float = 128 * 2.0
+
+    def mvm_panther(self):  # energy, latency of PANTHER MVM or MTVM
+        return self.e_mvm_reram * self.adc_tax_panther, self.l_mvm_reram
+
+    def mvm_base(self):  # Base_mvm / Base_opa-mvm crossbars (2-bit slices)
+        return self.e_mvm_reram, self.l_mvm_reram
+
+
+DEFAULT_ENERGY = EnergyModel()
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUModel:
+    """Analytical RTX 2080-Ti model (Table 3): utilization rises with batch
+    size and arithmetic intensity (ops/byte); calibrated so SGD batch-1 MLP
+    lands ~2 orders of magnitude behind PANTHER in time (§7.7 / Fig 15)."""
+
+    peak_flops: float = 13.4e12  # fp32
+    tdp_w: float = 250.0
+    mem_bw: float = 616e9  # GDDR6
+    idle_frac: float = 0.35  # fraction of TDP drawn regardless of utilization
+
+    def step_time_energy(self, flops: float, bytes_moved: float, batch: int):
+        # utilization: batch amortizes kernel-launch/occupancy; intensity
+        # decides compute vs memory bound.
+        occupancy = min(1.0, 0.05 + 0.95 * (batch / 256.0))
+        t_compute = flops / (self.peak_flops * occupancy)
+        t_memory = bytes_moved / self.mem_bw
+        t = max(t_compute, t_memory) + 6e-6  # fixed launch overhead per step
+        e = t * self.tdp_w * (self.idle_frac + (1 - self.idle_frac) * occupancy)
+        return t, e
+
+
+DEFAULT_GPU = GPUModel()

@@ -1,0 +1,22 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+
+def pick_block(dim: int, pref: int, granule: int = 128) -> int:
+    """Largest block <= pref that divides dim, preferring hardware granules.
+
+    Falls back to the full dimension (single block) when no aligned divisor
+    exists — correctness over perf for odd shapes; production shapes are
+    multiples of 128.
+    """
+    if dim <= pref:
+        return dim
+    if dim % pref == 0:
+        return pref
+    for cand in range(pref - (pref % granule), 0, -granule):
+        if dim % cand == 0:
+            return cand
+    for cand in range(pref, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim

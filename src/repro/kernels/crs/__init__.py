@@ -1,0 +1,3 @@
+from .ops import crs
+
+__all__ = ["crs"]

@@ -1,0 +1,19 @@
+"""Public entry point for the CRS kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.slicing import SliceSpec
+from . import kernel as _k
+from . import ref as _ref
+
+
+def crs(planes, spec: SliceSpec, *, use_kernel: bool | None = None, interpret: bool | None = None):
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel is None:
+        use_kernel = on_tpu
+    if interpret is None:
+        interpret = not on_tpu
+    if not use_kernel:
+        return _ref.crs_ref(planes, spec)
+    return _k.crs(planes, spec=spec, interpret=interpret)

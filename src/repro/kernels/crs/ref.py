@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the CRS kernel (delegates to repro.core)."""
+from __future__ import annotations
+
+from repro.core import SliceSpec, crs
+
+
+def crs_ref(planes, spec: SliceSpec):
+    """planes int8 [S,M,N] -> canonicalized planes (carry propagation +
+    canonical-limit rails)."""
+    return crs(planes, spec)

@@ -1,0 +1,3 @@
+from .ops import mvm_sliced
+
+__all__ = ["mvm_sliced"]

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for bit-exact sliced MVM with a finite-ADC model.
+
+The logical [M, N] weight is blocked into (xbar_rows=128)-row tiles — the
+physical crossbar height — so the ADC quantization boundary in the kernel is
+exactly the hardware's. Grid = (B/bb, N/bn, M/128) with the row-tile dim
+innermost ("arbitrary"): the f32 accumulator lives in VMEM scratch across row
+tiles and is written out once.
+
+Per (slice s, bit t) the analog column current is ``sign_bit_plane @ W_s``;
+ADC clips/quantizes it; the digital shift-and-add applies ``2**(t + 4s)``.
+This kernel is the fidelity path (and the Fig-9/10 engine); production
+training uses the lossless dequantize->MXU fast path, which equals this
+kernel at adc_bits=None (asserted in tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.slicing import LOGICAL_BITS, SliceSpec
+from repro.kernels.common import pick_block
+
+XBAR_ROWS = 128
+DEFAULT_BB = 8
+DEFAULT_BN = 256
+
+
+def _mvm_kernel(x_ref, planes_ref, out_ref, acc_ref, *, spec, io_bits, adc_bits, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xq = x_ref[...].astype(jnp.int32)  # [bb, 128]
+    sx = jnp.sign(xq)
+    mx = jnp.abs(xq)
+    acc = acc_ref[...]
+    for s in range(spec.n_slices):
+        w = planes_ref[s].astype(jnp.float32)  # [128, bn]
+        full_scale = float(XBAR_ROWS * spec.plane_max[s])
+        for t in range(io_bits - 1):
+            bt = (((mx >> t) & 1) * sx).astype(jnp.float32)
+            col = jax.lax.dot_general(
+                bt, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            if adc_bits is not None:
+                step = (2.0 * full_scale) / (2**adc_bits)
+                col = jnp.clip(jnp.round(col / step) * step, -full_scale, full_scale)
+            acc = acc + col * float(2**t * 2 ** (LOGICAL_BITS * s))
+    acc_ref[...] = acc
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "io_bits", "adc_bits", "bb", "bn", "interpret"))
+def mvm_sliced(
+    planes: jax.Array,
+    x_q: jax.Array,
+    *,
+    spec: SliceSpec,
+    io_bits: int = 16,
+    adc_bits: int | None = None,
+    bb: int = DEFAULT_BB,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> jax.Array:
+    """planes int8 [S,M,N]; x_q int32 [B,M] -> f32 [B,N] (product-grid)."""
+    S, M, N = planes.shape
+    B = x_q.shape[0]
+    assert x_q.shape == (B, M)
+    assert M % XBAR_ROWS == 0, f"M={M} must be a multiple of crossbar rows ({XBAR_ROWS})"
+    bb, bn = pick_block(B, bb, granule=8), pick_block(N, bn)
+    nk = M // XBAR_ROWS
+    grid = (B // bb, N // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_mvm_kernel, spec=spec, io_bits=io_bits, adc_bits=adc_bits, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, XBAR_ROWS), lambda i, j, k: (i, k)),
+            pl.BlockSpec((S, XBAR_ROWS, bn), lambda i, j, k: (0, k, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j, k: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bb, bn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="panther_mvm_sliced",
+    )(x_q, planes)

@@ -1,0 +1,30 @@
+"""Public entry point for bit-exact sliced MVM (fidelity path)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.slicing import SliceSpec
+from . import kernel as _k
+from . import ref as _ref
+
+
+def mvm_sliced(
+    planes,
+    x_q,
+    spec: SliceSpec,
+    *,
+    io_bits: int = 16,
+    adc_bits: int | None = None,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+):
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel is None:
+        use_kernel = on_tpu
+    if interpret is None:
+        interpret = not on_tpu
+    if not use_kernel:
+        return _ref.mvm_sliced_ref(planes, x_q, spec, io_bits, adc_bits)
+    return _k.mvm_sliced(
+        planes, x_q, spec=spec, io_bits=io_bits, adc_bits=adc_bits, interpret=interpret
+    )

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the sliced-MVM kernel.
+
+Models the physical 128x128 crossbar tiling: the logical [M, N] matrix is cut
+into 128-row tiles; each tile's analog column sum passes through its own ADC
+(per slice, per input-bit cycle) before the digital shift-and-add combines
+bits, slices, and row-tiles.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.mvm import _adc
+from repro.core.slicing import LOGICAL_BITS, SliceSpec
+
+XBAR_ROWS = 128
+
+
+def mvm_sliced_ref(
+    planes,
+    x_q,
+    spec: SliceSpec,
+    io_bits: int = 16,
+    adc_bits: int | None = None,
+    xbar_rows: int = XBAR_ROWS,
+):
+    """planes int8 [S,M,N]; x_q int [B,M] -> f32 [B,N] (product-grid units)."""
+    S, M, N = planes.shape
+    B = x_q.shape[0]
+    assert x_q.shape == (B, M)
+    n_tiles = -(-M // xbar_rows)
+    sx = jnp.sign(x_q).astype(jnp.int32)
+    mx = jnp.abs(x_q).astype(jnp.int32)
+    out = jnp.zeros((B, N), jnp.float32)
+    for tile in range(n_tiles):
+        lo, hi = tile * xbar_rows, min((tile + 1) * xbar_rows, M)
+        for s in range(S):
+            w = planes[s, lo:hi].astype(jnp.int32)
+            full_scale = float(xbar_rows * spec.plane_max[s])
+            for t in range(io_bits - 1):
+                bt = ((mx[:, lo:hi] >> t) & 1) * sx[:, lo:hi]
+                col = bt @ w  # [B, N] analog column current of this tile
+                col = _adc(col, full_scale, adc_bits)
+                out = out + col * float(2 ** t * 2 ** (LOGICAL_BITS * s))
+    return out

@@ -1,0 +1,3 @@
+from .ops import opa_deposit, opa_fused
+
+__all__ = ["opa_deposit", "opa_fused"]

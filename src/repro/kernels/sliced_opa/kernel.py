@@ -1,0 +1,167 @@
+"""Pallas TPU kernels for bit-sliced OPA (the paper's §3 on the MXU/VPU).
+
+Two entry points:
+
+``opa_deposit``  — reads an int32 grid-quantized update block and the S digit
+                   planes, performs the balanced base-16 decompose + per-plane
+                   saturating accumulate entirely in VMEM, writes planes back
+                   (aliased in-place). One HBM pass over planes + update.
+
+``opa_fused``    — the TPU-native analogue of in-crossbar OPA: computes the
+                   gradient outer product ``X^T @ dH`` on the MXU, tile by
+                   tile, and deposits straight into the digit planes. The
+                   full-precision gradient matrix **never exists in HBM** —
+                   this is the memory-roofline win corresponding to the
+                   paper's elimination of serial crossbar reads/writes.
+
+Blocking: planes are [S, bm, bn] per grid cell (S is a small leading dim —
+all slices of a tile co-reside in VMEM, like the S crossbars of one MCU).
+bm/bn default to 128/256: int8 native tile is (32, 128); f32 accumulate tile
+(8, 128); the MXU contraction dim inside ``opa_fused`` is ``bt=512``.
+VMEM budget at defaults: planes 8·128·256 int8 = 256 KiB + acc f32 128 KiB +
+x/dh blocks 512·(128+256)·4 B = 768 KiB ≈ 1.2 MiB « 16 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.slicing import LOGICAL_BITS, SliceSpec
+from repro.kernels.common import pick_block
+
+_RADIX_MASK = (1 << LOGICAL_BITS) - 1  # 15
+_HALF = 1 << (LOGICAL_BITS - 1)  # 8
+
+DEFAULT_BM = 128
+DEFAULT_BN = 256
+DEFAULT_BT = 512
+
+
+def _deposit(planes_i32, rem, spec: SliceSpec):
+    """Shared digit-decompose + saturating-add body. planes_i32 [S,bm,bn]."""
+    lim = spec.canonical_limit
+    rem = jnp.clip(rem, -lim, lim)  # beyond-canonical updates rail (match ref)
+    outs = []
+    for s in range(spec.n_slices):
+        d = ((rem + _HALF) & _RADIX_MASK) - _HALF  # balanced digit in [-8, 7]
+        m = spec.plane_max[s]
+        outs.append(jnp.clip(planes_i32[s] + d, -m, m))
+        # (rem - d) is an exact multiple of 16 -> arithmetic shift is exact.
+        rem = jax.lax.shift_right_arithmetic(rem - d, LOGICAL_BITS)
+    return jnp.stack(outs, axis=0).astype(jnp.int8)
+
+
+def _opa_deposit_kernel(p_ref, planes_ref, out_ref, *, spec: SliceSpec):
+    rem = p_ref[...]
+    out_ref[...] = _deposit(planes_ref[...].astype(jnp.int32), rem, spec)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "bm", "bn", "interpret"))
+def opa_deposit(
+    planes: jax.Array,
+    p_q: jax.Array,
+    *,
+    spec: SliceSpec,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+) -> jax.Array:
+    """planes int8 [S,M,N]; p_q int32 [M,N] on the weight grid -> new planes."""
+    S, M, N = planes.shape
+    assert S == spec.n_slices
+    bm, bn = pick_block(M, bm), pick_block(N, bn)
+    grid = (M // bm, N // bn)
+    return pl.pallas_call(
+        functools.partial(_opa_deposit_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((S, bm, bn), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((S, bm, bn), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct(planes.shape, jnp.int8),
+        input_output_aliases={1: 0},
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+        name="panther_opa_deposit",
+    )(p_q, planes)
+
+
+def _opa_fused_kernel(
+    scale_ref, x_ref, dh_ref, planes_ref, out_ref, acc_ref, *, spec: SliceSpec, nk: int
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU contraction over this token tile: [bm, bt] x [bt, bn].
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        dh_ref[...],
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        lim = float(2**31 - 1)
+        p_q = jnp.clip(jnp.round(acc_ref[...] * scale_ref[0, 0]), -lim, lim).astype(jnp.int32)
+        out_ref[...] = _deposit(planes_ref[...].astype(jnp.int32), p_q, spec)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "bm", "bn", "bt", "interpret"))
+def opa_fused(
+    planes: jax.Array,
+    x: jax.Array,
+    dh: jax.Array,
+    scale: jax.Array,
+    *,
+    spec: SliceSpec,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bt: int = DEFAULT_BT,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused ``planes <- deposit(planes, q(X^T dH * scale))``.
+
+    planes int8 [S,M,N]; x [T,M]; dh [T,N] (``-lr`` folded by caller);
+    scale f32 scalar (2**F).
+    """
+    S, M, N = planes.shape
+    T = x.shape[0]
+    assert x.shape == (T, M) and dh.shape == (T, N)
+    bm, bn, bt = pick_block(M, bm), pick_block(N, bn), pick_block(T, bt)
+    nk = T // bt
+    grid = (M // bm, N // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_opa_fused_kernel, spec=spec, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((bt, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bt, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((S, bm, bn), lambda i, j, k: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((S, bm, bn), lambda i, j, k: (0, i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct(planes.shape, jnp.int8),
+        input_output_aliases={3: 0},
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="panther_opa_fused",
+    )(
+        jnp.asarray(scale, jnp.float32).reshape(1, 1),
+        x.astype(jnp.float32),
+        dh.astype(jnp.float32),
+        planes,
+    )

@@ -1,0 +1,52 @@
+"""Public entry points for sliced-OPA.
+
+Dispatch policy (``use_kernel=None`` → auto): the Mosaic kernel engages on
+TPU; on CPU (this container, and the 512-device dry-run host) the pure-jnp
+reference path is used — it is value-equivalent (tested) and produces clean
+SPMD-shardable HLO. Tests force ``use_kernel=True, interpret=True`` to
+execute the kernel body on CPU.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.slicing import SliceSpec
+from . import kernel as _k
+from . import ref as _ref
+
+
+def _resolve(use_kernel: bool | None, interpret: bool | None) -> tuple[bool, bool]:
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel is None:
+        use_kernel = on_tpu
+    if interpret is None:
+        interpret = not on_tpu
+    return use_kernel, interpret
+
+
+def opa_deposit(planes, p_q, spec: SliceSpec, *, use_kernel: bool | None = None, interpret: bool | None = None):
+    """Saturating digit deposit of an int32 update into int8 planes [S, *w].
+
+    Accepts any parameter rank >= 2 (e.g. scan-stacked [S, L, M, N]);
+    leading dims are flattened for the rank-3 kernel.
+    """
+    use_kernel, interpret = _resolve(use_kernel, interpret)
+    if not use_kernel:
+        return _ref.opa_deposit_ref(planes, p_q, spec)
+    shape = planes.shape
+    if planes.ndim > 3:
+        m = 1
+        for d in shape[1:-1]:
+            m *= d
+        planes3 = planes.reshape(shape[0], m, shape[-1])
+        out = _k.opa_deposit(planes3, p_q.reshape(m, shape[-1]), spec=spec, interpret=interpret)
+        return out.reshape(shape)
+    return _k.opa_deposit(planes, p_q, spec=spec, interpret=interpret)
+
+
+def opa_fused(planes, x, dh, scale, spec: SliceSpec, *, use_kernel: bool | None = None, interpret: bool | None = None):
+    """Fused X^T@dH -> quantize -> deposit (gradient never hits HBM)."""
+    use_kernel, interpret = _resolve(use_kernel, interpret)
+    if not use_kernel:
+        return _ref.opa_fused_ref(planes, x, dh, scale, spec)
+    return _k.opa_fused(planes, x, dh, scale, spec=spec, interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the sliced-OPA kernels (delegates to repro.core)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import SliceSpec, opa_batched, product_digits, saturating_add
+
+
+def opa_deposit_ref(planes, p_q, spec: SliceSpec):
+    """planes int8 [S,M,N], p_q int32 [M,N] -> int8 [S,M,N]."""
+    return opa_batched(planes, p_q, spec)
+
+
+def opa_fused_ref(planes, x, dh, scale, spec: SliceSpec):
+    """Fused grad-outer-product + quantize + deposit oracle.
+
+    planes int8 [S,M,N]; x f32 [T,M] layer inputs; dh f32 [T,N] scaled output
+    errors (-lr already folded); scale f32 scalar = 2**F weight grid.
+    """
+    acc = jnp.einsum("tm,tn->mn", x.astype(jnp.float32), dh.astype(jnp.float32))
+    lim = float(2**31 - 1)
+    p_q = jnp.clip(jnp.round(acc * scale), -lim, lim).astype(jnp.int32)
+    return saturating_add(planes, product_digits(p_q, spec), spec)

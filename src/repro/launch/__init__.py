@@ -1,0 +1,8 @@
+"""Launchers: mesh construction, multi-pod dry-run, train, serve.
+
+NOTE: repro.launch.dryrun force-sets 512 host devices at import; never
+import it from test or library code.
+"""
+from .mesh import make_debug_mesh, make_production_mesh
+
+__all__ = ["make_debug_mesh", "make_production_mesh"]

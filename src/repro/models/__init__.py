@@ -1,0 +1,17 @@
+from . import attention, common, lm, mamba2, mlp, xlstm
+from .common import LMConfig, MLACfg, MoECfg, SSMCfg, XLSTMCfg, ZambaCfg
+
+__all__ = [
+    "attention",
+    "common",
+    "lm",
+    "mamba2",
+    "mlp",
+    "xlstm",
+    "LMConfig",
+    "MLACfg",
+    "MoECfg",
+    "SSMCfg",
+    "XLSTMCfg",
+    "ZambaCfg",
+]

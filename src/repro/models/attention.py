@@ -1,0 +1,344 @@
+"""Attention blocks: MHA/GQA/MQA with RoPE, sliding window, logit softcap,
+optional qk-norm and sandwich norms; plus DeepSeek-style MLA.
+
+Each block provides ``init`` (params), ``apply`` (full-sequence, training /
+prefill) and ``decode`` (single-step with KV cache). Caches are dicts of
+arrays so they stack cleanly under lax.scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import LMConfig, apply_rope, dense_init, rms_norm, rms_norm_init, softcap
+from .mlp import mlp_apply, mlp_init
+
+
+# ----------------------------- masks ---------------------------------------
+
+
+def causal_mask(s_q: int, s_k: int, window: int | None, q_offset: jax.Array | int = 0):
+    """[s_q, s_k] additive mask. ``q_offset`` = absolute position of query 0
+    (for prefill continuation / decode)."""
+    qpos = jnp.arange(s_q)[:, None] + q_offset
+    kpos = jnp.arange(s_k)[None, :]
+    ok = kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+# ----------------------------- GQA core -------------------------------------
+
+
+def attn_init(cfg: LMConfig, key) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd),
+        "wk": dense_init(ks[1], d, kv * hd),
+        "wv": dense_init(ks[2], d, kv * hd),
+        "wo": dense_init(ks[3], h * hd, d),
+        "ln": rms_norm_init(d),
+    }
+    if cfg.qk_norm:
+        p["qn"] = rms_norm_init(hd)
+        p["kn"] = rms_norm_init(hd)
+    if cfg.post_norm:
+        p["post_ln"] = rms_norm_init(d)
+    return p
+
+
+def _qkv(cfg: LMConfig, p, h_in, positions):
+    B, S, _ = h_in.shape
+    hN, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (h_in @ p["wq"].astype(h_in.dtype)).reshape(B, S, hN, hd)
+    k = (h_in @ p["wk"].astype(h_in.dtype)).reshape(B, S, kv, hd)
+    v = (h_in @ p["wv"].astype(h_in.dtype)).reshape(B, S, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(p["qn"], q, cfg.norm_eps)
+        k = rms_norm(p["kn"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(cfg: LMConfig, q, k, v, mask):
+    """q [B,Sq,H,hd]; k/v [B,Sk,KV,hd]; mask [Sq,Sk] additive."""
+    B, Sq, H, hd = q.shape
+    kv = k.shape[2]
+    groups = H // kv
+    qg = q.reshape(B, Sq, kv, groups, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k, preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = softcap(logits, cfg.softcap_attn)
+    logits = logits + mask  # broadcast [Sq,Sk]
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+CHUNK_THRESHOLD = 2048  # use online-softmax chunking above this key length
+_QC = 1024  # query chunk
+_KC = 1024  # key chunk
+
+
+def _sdpa_chunked(cfg: LMConfig, q, k, v, window: int | None):
+    """Flash-style causal attention in pure JAX: scan over query chunks,
+    inner scan over key chunks with a running (m, l, acc) online softmax.
+    Never materializes [Sq, Sk] — required for the 32k prefill cells.
+
+    Cross-chunk masking is positional (causal + optional window); fully
+    masked chunk pairs still execute (lax.scan is shape-static) — the ~2x
+    causal-flops overhead is a recorded roofline note / hillclimb item.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, kv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    g = H // kv
+    qc, kc = min(_QC, Sq), min(_KC, Skv)
+    nq, nk = Sq // qc, Skv // kc
+    assert Sq % qc == 0 and Skv % kc == 0, (Sq, Skv)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    # Chunks are carved with dynamic_slice on the ORIGINAL [B,S,...] layout
+    # per iteration. (Pre-stacking [nk, ...] chunk arrays lets SPMD shard the
+    # chunk dim, and the per-step slice across it triggers "involuntary full
+    # rematerialization" — measured ~60 GiB/dev on 32k MHA prefill.)
+    qpos_in = jnp.arange(qc)
+    kpos_in = jnp.arange(kc)
+
+    def q_step(_, qi):
+        qchunk = jax.lax.dynamic_slice_in_dim(q, qi * qc, qc, axis=1)  # [B,qc,H,hd]
+        qg = qchunk.reshape(B, qc, kv, g, hd).transpose(0, 2, 3, 1, 4)  # [B,kv,g,qc,hd]
+
+        def k_step(carry, ki):
+            m, l, acc = carry
+            kchunk = jax.lax.dynamic_slice_in_dim(k, ki * kc, kc, axis=1)  # [B,kc,kv,hd]
+            vchunk = jax.lax.dynamic_slice_in_dim(v, ki * kc, kc, axis=1)
+            logits = jnp.einsum(
+                "bkgqh,bskh->bkgqs", qg, kchunk, preferred_element_type=jnp.float32
+            ) * scale
+            logits = softcap(logits, cfg.softcap_attn)
+            qpos = qi * qc + qpos_in  # absolute positions
+            kpos = ki * kc + kpos_in
+            ok = kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                ok &= kpos[None, :] > qpos[:, None] - window
+            logits = jnp.where(ok[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(vchunk.dtype), vchunk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, kv, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, kv, g, qc), jnp.float32)
+        a0 = jnp.zeros((B, kv, g, qc, hd_v), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B,kv,g,qc,hd_v]
+        return None, out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # [B,qc,kv,g,hd_v]
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))  # [nq,B,qc,kv,g,hd_v]
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd_v)
+    return out
+
+
+def _attend(cfg: LMConfig, q, k, v, window: int | None):
+    """Full-sequence attention dispatch: explicit mask for short sequences,
+    chunked online softmax beyond CHUNK_THRESHOLD."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    if Sk > CHUNK_THRESHOLD and Sq % min(_QC, Sq) == 0 and Sk % min(_KC, Sk) == 0:
+        return _sdpa_chunked(cfg, q, k, v, window)
+    return _sdpa(cfg, q, k, v, causal_mask(Sq, Sk, window))
+
+
+def attn_apply(cfg: LMConfig, p, h, positions, window=None, with_cache=False):
+    """Full-sequence attention (train / prefill). Returns h (+ cache)."""
+    x = rms_norm(p["ln"], h, cfg.norm_eps)
+    q, k, v = _qkv(cfg, p, x, positions)
+    o = _attend(cfg, q, k, v, window)
+    o = o.reshape(*o.shape[:2], -1) @ p["wo"].astype(h.dtype)
+    if cfg.post_norm:
+        o = rms_norm(p["post_ln"], o, cfg.norm_eps)
+    out = h + o
+    if with_cache:
+        return out, {"k": {"q": k}, "v": {"q": v}}
+    return out
+
+
+def _cache_store(x, dtype):
+    """Quantize K/V for an int8 cache (per-head-dim symmetric absmax scale)
+    — the decode memory-term optimization (§Perf). bf16 caches pass through."""
+    if dtype != jnp.int8:
+        return {"q": x.astype(dtype)}
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    return {"q": jnp.round(x.astype(jnp.float32) / scale).astype(jnp.int8),
+            "s": scale.astype(jnp.float32)}
+
+
+def _cache_load(entry, dtype):
+    if "s" not in entry:
+        return entry["q"].astype(dtype)
+    return (entry["q"].astype(jnp.float32) * entry["s"]).astype(dtype)
+
+
+def attn_decode(cfg: LMConfig, p, h, cache, pos, window=None):
+    """One-token decode. h [B,1,d]; cache {k,v: {q:[B,Smax,KV,hd](, s)}};
+    pos scalar."""
+    x = rms_norm(p["ln"], h, cfg.norm_eps)
+    q, k_new, v_new = _qkv(cfg, p, x, pos[..., None] if pos.ndim else pos.reshape(1))
+    cdtype = cache["k"]["q"].dtype
+    # write the new K/V at position pos
+    k = jax.tree.map(
+        lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, pos, axis=1),
+        cache["k"], _cache_store(k_new, cdtype),
+    )
+    v = jax.tree.map(
+        lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, pos, axis=1),
+        cache["v"], _cache_store(v_new, cdtype),
+    )
+    S = k["q"].shape[1]
+    kpos = jnp.arange(S)
+    ok = kpos <= pos
+    if window is not None:
+        ok &= kpos > pos - window
+    mask = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[None, :]
+    o = _sdpa(cfg, q, _cache_load(k, q.dtype), _cache_load(v, q.dtype), mask)
+    o = o.reshape(*o.shape[:2], -1) @ p["wo"].astype(h.dtype)
+    if cfg.post_norm:
+        o = rms_norm(p["post_ln"], o, cfg.norm_eps)
+    return h + o, {"k": k, "v": v}
+
+
+def attn_cache_spec(cfg: LMConfig, batch: int, max_seq: int, dtype):
+    hd, kv = cfg.head_dim, cfg.n_kv_heads
+    shape = (batch, max_seq, kv, hd)
+    entry = {"q": jax.ShapeDtypeStruct(shape, dtype)}
+    if dtype == jnp.int8:
+        entry["s"] = jax.ShapeDtypeStruct((batch, max_seq, kv, 1), jnp.float32)
+    return {"k": dict(entry), "v": dict(entry)}
+
+
+# --------------------------- standard block: attn + MLP ---------------------
+
+
+def block_init(cfg: LMConfig, key, d_ff: int | None = None) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": attn_init(cfg, k1),
+        "mlp": mlp_init(cfg, k2, d_ff or cfg.d_ff),
+    }
+
+
+def block_apply(cfg: LMConfig, p, h, positions, window=None):
+    h = attn_apply(cfg, p["attn"], h, positions, window)
+    return mlp_apply(cfg, p["mlp"], h)
+
+
+def block_prefill(cfg: LMConfig, p, h, positions, window=None):
+    h, cache = attn_apply(cfg, p["attn"], h, positions, window, with_cache=True)
+    return mlp_apply(cfg, p["mlp"], h), cache
+
+
+def block_decode(cfg: LMConfig, p, h, cache, pos, window=None):
+    h, cache = attn_decode(cfg, p["attn"], h, cache, pos, window)
+    return mlp_apply(cfg, p["mlp"], h), cache
+
+
+# ------------------------------- MLA ----------------------------------------
+
+
+def mla_init(cfg: LMConfig, key) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq": dense_init(ks[0], d, H * qk_dim),
+        "w_dkv": dense_init(ks[1], d, m.kv_lora_rank + m.qk_rope_dim),
+        "w_uk": dense_init(ks[2], m.kv_lora_rank, H * m.qk_nope_dim),
+        "w_uv": dense_init(ks[3], m.kv_lora_rank, H * m.v_head_dim),
+        "wo": dense_init(ks[4], H * m.v_head_dim, d),
+        "ln": rms_norm_init(d),
+        "kv_ln": rms_norm_init(m.kv_lora_rank),
+    }
+
+
+def _mla_qkv(cfg: LMConfig, p, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = x @ p["w_dkv"].astype(x.dtype)  # [B,S,rank+rope]
+    c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(p["kv_ln"], c_kv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,rope]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(cfg: LMConfig, p, q_nope, q_rope, c_kv, k_rope, mask, dtype):
+    m = cfg.mla
+    B, Sk = c_kv.shape[:2]
+    H = cfg.n_heads
+    k_nope = (c_kv @ p["w_uk"].astype(dtype)).reshape(B, Sk, H, m.qk_nope_dim)
+    v = (c_kv @ p["w_uv"].astype(dtype)).reshape(B, Sk, H, m.v_head_dim)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(m.qk_nope_dim + m.qk_rope_dim, jnp.float32))
+    logits = (
+        jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope, preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhd,bsxd->bhqs", q_rope, jnp.broadcast_to(k_rope, (B, Sk, 1, m.qk_rope_dim)), preferred_element_type=jnp.float32)
+    ) * scale
+    logits = logits + mask
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", w, v)
+    return out.reshape(B, -1, H * m.v_head_dim)
+
+
+def mla_apply(cfg: LMConfig, p, h, positions, with_cache=False):
+    """Full-sequence MLA, reduced to standard SDPA by concatenating the nope
+    and rope sub-dims (scale 1/sqrt(nope+rope) matches _sdpa's 1/sqrt(hd)) —
+    this lets 32k prefill reuse the chunked online-softmax path."""
+    m = cfg.mla
+    x = rms_norm(p["ln"], h, cfg.norm_eps)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
+    B, S = x.shape[:2]
+    H = cfg.n_heads
+    k_nope = (c_kv @ p["w_uk"].astype(x.dtype)).reshape(B, S, H, m.qk_nope_dim)
+    v = (c_kv @ p["w_uv"].astype(x.dtype)).reshape(B, S, H, m.v_head_dim)
+    q_eff = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_eff = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_dim))], axis=-1)
+    o = _attend(cfg, q_eff, k_eff.astype(q_eff.dtype), v, None)
+    o = o.reshape(B, S, H * m.v_head_dim)
+    out = h + o @ p["wo"].astype(h.dtype)
+    if with_cache:
+        return out, {"c_kv": c_kv, "k_rope": k_rope}
+    return out
+
+
+def mla_decode(cfg: LMConfig, p, h, cache, pos):
+    """MLA decode caches the *compressed* c_kv (+ shared k_rope) — the point
+    of MLA. The up-projection runs over the cache each step (the absorbed-
+    matmul optimization is a recorded perf-iteration candidate)."""
+    x = rms_norm(p["ln"], h, cfg.norm_eps)
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(cfg, p, x, pos.reshape(1))
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    S = c_kv.shape[1]
+    mask = jnp.where(jnp.arange(S) <= pos, 0.0, -1e30).astype(jnp.float32)[None, :]
+    o = _mla_attend(cfg, p, q_nope, q_rope, c_kv.astype(x.dtype), k_rope.astype(x.dtype), mask, x.dtype)
+    return h + o @ p["wo"].astype(h.dtype), {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_cache_spec(cfg: LMConfig, batch: int, max_seq: int, dtype):
+    m = cfg.mla
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_seq, m.kv_lora_rank), dtype),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_seq, 1, m.qk_rope_dim), dtype),
+    }

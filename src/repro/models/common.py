@@ -1,0 +1,138 @@
+"""Shared model components: config, norms, RoPE, embeddings.
+
+Parameters are plain nested dicts of jnp arrays (no framework dependency);
+layer groups destined for ``lax.scan`` are stacked on a leading axis by
+``lm.py``. Initializers take explicit PRNG keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MLACfg:
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMCfg:
+    proj_factor: float = 2.0
+    n_heads: int = 4
+    conv_width: int = 4
+    slstm_ff_factor: float = 4 / 3  # int(4/3 * 768) = 1024 (hardware-aligned)
+
+
+@dataclasses.dataclass(frozen=True)
+class ZambaCfg:
+    share_every: int = 6  # shared attention block after every N mamba blocks
+    n_shared_invocations: int = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    arch_id: str
+    d_model: int
+    n_layers: int
+    vocab: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    # (block_name, count) groups applied in order; counted blocks in a group
+    # share a lax.scan with stacked params.
+    pattern: tuple = ()
+    act: str = "silu"  # gated-MLP activation: silu (SwiGLU) | gelu (GeGLU)
+    rope_theta: float = 10000.0
+    window: int | None = None  # sliding-window size for *_local blocks
+    softcap_attn: float | None = None
+    softcap_final: float | None = None
+    qk_norm: bool = False
+    embed_scale: bool = False  # multiply embeddings by sqrt(d_model) (gemma)
+    tie_embeddings: bool = True
+    input_mode: str = "tokens"  # "tokens" | "embeddings" (modality-stub archs)
+    post_norm: bool = False  # sandwich norms (gemma2)
+    norm_eps: float = 1e-6
+    moe: MoECfg | None = None
+    mla: MLACfg | None = None
+    ssm: SSMCfg | None = None
+    xlstm: XLSTMCfg | None = None
+    zamba: ZambaCfg | None = None
+    dense_ff_prefix: int | None = None  # deepseek layer-0 dense FFN width
+    dtype: Any = jnp.bfloat16
+    # which shape cells this arch supports (informational; launch reads it)
+    supports_long_context: bool = False
+
+    @property
+    def kv_groups(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+
+# ---------------------------------------------------------------------------
+
+
+def rms_norm_init(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rms_norm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return out.astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [d/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..., S, 1, d/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(jnp.float32)
+
+
+def embed_init(key, vocab: int, d: int) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(jnp.float32)

@@ -1,0 +1,181 @@
+"""Mamba2 (SSD) mixer block — chunked parallel scan for training/prefill,
+O(1) recurrent state update for decode.
+
+State-space: per head h with scalar decay ``a_t = exp(A * dt_t)``:
+    S_t = a_t * S_{t-1} + dt_t * (B_t ⊗ x_t)        S: [head_dim, d_state]
+    y_t = S_t @ C_t + D * x_t
+
+The chunked algorithm (chunk Q): intra-chunk contributions via a masked
+decay matrix L[t,s] = exp(cum_t - cum_s), inter-chunk via a lax.scan over
+chunk-final states — the standard TPU-friendly SSD formulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import LMConfig, dense_init, rms_norm, rms_norm_init
+
+
+def _dims(cfg: LMConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def mamba2_init(cfg: LMConfig, key) -> dict:
+    """Projections are kept separate (w_z / w_x / w_B / w_C / w_dt) rather
+    than one fused in_proj so each shards cleanly under tensor parallelism
+    (d_inner on 'model'; the tiny B/C/dt heads replicate)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": rms_norm_init(d),
+        "w_z": dense_init(ks[0], d, d_inner),
+        "w_x": dense_init(ks[1], d, d_inner),
+        "w_B": dense_init(ks[2], d, s.d_state),
+        "w_C": dense_init(ks[3], d, s.d_state),
+        "w_dt": dense_init(ks[4], d, H),
+        "conv_w": jnp.zeros((s.d_conv, d_inner + 2 * s.d_state), jnp.float32).at[-1].set(1.0),
+        "conv_b": jnp.zeros((d_inner + 2 * s.d_state,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1 at init
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),  # softplus(-2) ~ 0.126
+        "D": jnp.ones((H,), jnp.float32),
+        "out_ln": rms_norm_init(d_inner),
+        "w_out": dense_init(ks[5], d_inner, d),
+    }
+
+
+def _causal_conv(xbc, conv_w, conv_b, prev=None):
+    """Depthwise causal conv. xbc [B,S,C]; conv_w [K,C]. prev: [B,K-1,C] left
+    context (decode/prefill continuation); zeros otherwise."""
+    K = conv_w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([prev, xbc], axis=1)
+    out = sum(xp[:, i : i + xbc.shape[1]] * conv_w[i].astype(xbc.dtype) for i in range(K))
+    return jax.nn.silu(out + conv_b.astype(xbc.dtype)), xp[:, -(K - 1) :]
+
+
+def _split_in(cfg, p, x):
+    z = x @ p["w_z"].astype(x.dtype)
+    xbc = jnp.concatenate(
+        [x @ p["w_x"].astype(x.dtype), x @ p["w_B"].astype(x.dtype), x @ p["w_C"].astype(x.dtype)],
+        axis=-1,
+    )
+    dt = x @ p["w_dt"].astype(x.dtype)
+    return z, xbc, dt
+
+
+def mamba2_apply(cfg: LMConfig, p, h, with_state: bool = False):
+    """Full-sequence SSD. h [B,S,d]."""
+    s = cfg.ssm
+    d_inner, H = _dims(cfg)
+    hd, ds, Q = s.head_dim, s.d_state, s.chunk
+    B, S, _ = h.shape
+    x_in = rms_norm(p["ln"], h, cfg.norm_eps)
+    z, xbc, dt_raw = _split_in(cfg, p, x_in)
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    x, Bs, Cs = jnp.split(xbc, [d_inner, d_inner + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(p["A_log"])  # [H]
+    loga = dt * A  # [B,S,H] log decay per step
+
+    nq = -(-S // Q)
+    pad = nq * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        Bs = jnp.pad(Bs, ((0, 0), (0, pad), (0, 0)))
+        Cs = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+
+    xh = x.reshape(B, nq, Q, H, hd)
+    Bc = Bs.reshape(B, nq, Q, ds).astype(jnp.float32)
+    Cc = Cs.reshape(B, nq, Q, ds).astype(jnp.float32)
+    dtc = dt.reshape(B, nq, Q, H)
+    logac = loga.reshape(B, nq, Q, H)
+    cum = jnp.cumsum(logac, axis=2)  # [B,nq,Q,H]
+
+    # intra-chunk: y[t] = sum_{s<=t} C_t.B_s exp(cum_t - cum_s) dt_s x_s
+    Lmat = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nq,Q(t),Q(s),H]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(Lmat), 0.0)
+    CB = jnp.einsum("bqtn,bqsn->bqts", Cc, Bc)  # [B,nq,Q,Q]
+    G = CB[..., None] * Lmat  # [B,nq,Q,Q,H]
+    xdt = xh * dtc[..., None].astype(xh.dtype)  # [B,nq,Q,H,hd]
+    y_intra = jnp.einsum("bqtsh,bqshd->bqthd", G.astype(xh.dtype), xdt)
+
+    # chunk-final states and inter-chunk carry (scan over chunks)
+    total = cum[:, :, -1, :]  # [B,nq,H]
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)  # [B,nq,Q,H]
+    # S_chunk_contrib = sum_s decay_to_end[s] dt_s B_s (x) x_s  -> [B,nq,H,hd,ds]
+    contrib = jnp.einsum(
+        "bqsh,bqshd,bqsn->bqhdn",
+        (decay_to_end * dtc).astype(jnp.float32),
+        xh.astype(jnp.float32),
+        Bc,
+    )
+
+    def chunk_step(state, inp):
+        contrib_q, total_q = inp  # [B,H,hd,ds], [B,H]
+        new = state * jnp.exp(total_q)[:, :, None, None] + contrib_q
+        return new, state  # emit the state *entering* this chunk
+
+    init = jnp.zeros((B, H, hd, ds), jnp.float32)
+    final_state, entering = jax.lax.scan(
+        chunk_step, init, (contrib.swapaxes(0, 1), total.swapaxes(0, 1))
+    )
+    entering = entering.swapaxes(0, 1)  # [B,nq,H,hd,ds]
+
+    # inter-chunk: y[t] += C_t . (exp(cum_t) * S_entering)
+    y_inter = jnp.einsum(
+        "bqtn,bqth,bqhdn->bqthd", Cc, jnp.exp(cum), entering
+    ).astype(xh.dtype)
+
+    y = (y_intra + y_inter).reshape(B, nq * Q, H, hd)[:, :S]
+    y = y + x.reshape(B, nq * Q, H, hd)[:, :S] * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(p["out_ln"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = h + y @ p["w_out"].astype(h.dtype)
+    if with_state:
+        return out, {"ssd": final_state, "conv": conv_tail}
+    return out
+
+
+def mamba2_decode(cfg: LMConfig, p, h, cache, pos):
+    """Single-token recurrent step. cache: ssd [B,H,hd,ds] f32, conv [B,K-1,C]."""
+    s = cfg.ssm
+    d_inner, H = _dims(cfg)
+    hd, ds = s.head_dim, s.d_state
+    B = h.shape[0]
+    x_in = rms_norm(p["ln"], h, cfg.norm_eps)
+    z, xbc, dt_raw = _split_in(cfg, p, x_in)
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], prev=cache["conv"].astype(xbc.dtype))
+    x, Bs, Cs = jnp.split(xbc, [d_inner, d_inner + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]  # [B,H]
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"])))  # [B,H]
+    xh = x.reshape(B, H, hd).astype(jnp.float32)
+    state = cache["ssd"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bhd,bn->bhdn", dt, xh, Bs[:, 0].astype(jnp.float32)
+    )
+    y = jnp.einsum("bhdn,bn->bhd", state, Cs[:, 0].astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(h.dtype)
+    y = rms_norm(p["out_ln"], y * jax.nn.silu(z), cfg.norm_eps)
+    return h + y @ p["w_out"].astype(h.dtype), {"ssd": state, "conv": conv_tail}
+
+
+def mamba2_cache_spec(cfg: LMConfig, batch: int, max_seq: int, dtype):
+    s = cfg.ssm
+    d_inner, H = _dims(cfg)
+    conv_ch = d_inner + 2 * s.d_state
+    return {
+        "ssd": jax.ShapeDtypeStruct((batch, H, s.head_dim, s.d_state), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, conv_ch), dtype),
+    }

@@ -1,0 +1,132 @@
+"""Gated MLPs (SwiGLU / GeGLU) and MoE layers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import LMConfig, dense_init, rms_norm, rms_norm_init
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp_init(cfg: LMConfig, key, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    p = {
+        "wi_gate": dense_init(k1, d, d_ff),
+        "wi_up": dense_init(k2, d, d_ff),
+        "wo": dense_init(k3, d_ff, d),
+        "ln": rms_norm_init(d),
+    }
+    if cfg.post_norm:
+        p["post_ln"] = rms_norm_init(d)
+    return p
+
+
+def mlp_apply(cfg: LMConfig, p, h):
+    x = rms_norm(p["ln"], h, cfg.norm_eps)
+    act = _act(cfg.act)
+    y = act(x @ p["wi_gate"].astype(h.dtype)) * (x @ p["wi_up"].astype(h.dtype))
+    y = y @ p["wo"].astype(h.dtype)
+    if cfg.post_norm:
+        y = rms_norm(p["post_ln"], y, cfg.norm_eps)
+    return h + y
+
+
+# ------------------------------- MoE ----------------------------------------
+
+
+def moe_init(cfg: LMConfig, key) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    E, f = m.n_experts, m.d_ff_expert
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, E),
+        "experts_gate": (jax.random.normal(ks[1], (E, d, f), jnp.float32) * scale),
+        "experts_up": (jax.random.normal(ks[2], (E, d, f), jnp.float32) * scale),
+        "experts_down": (jax.random.normal(ks[3], (E, f, d), jnp.float32) / jnp.sqrt(f)),
+        "ln": rms_norm_init(d),
+    }
+    if m.n_shared > 0:
+        p["shared"] = mlp_init(cfg, ks[4], m.d_ff_shared * m.n_shared)
+    return p
+
+
+MOE_GROUP = 1024  # tokens per dispatch group (GShard-style)
+
+
+def moe_apply(cfg: LMConfig, p, h):
+    """Capacity-bounded dense-dispatch MoE (GShard style, EP-friendly).
+
+    Tokens are split into groups of <= MOE_GROUP; capacity is enforced
+    *per group* so the dispatch/combine one-hots are [G, S_g, E, C_g] —
+    linear in token count (a single global-capacity dispatch tensor would be
+    ~quadratic and blows HBM at 0.5M tokens/step). Experts live on the
+    'model' mesh axis; the group dim shards over DP axes; SPMD lowers the
+    dispatch einsums to all-to-alls.
+    """
+    m = cfg.moe
+    act = _act(cfg.act)
+    B, S, d = h.shape
+    x = rms_norm(p["ln"], h, cfg.norm_eps)
+    T = B * S
+    sg = min(MOE_GROUP, T)
+    G = T // sg
+    assert T % sg == 0, (T, sg)
+    xt = x.reshape(G, sg, d)
+    E, K = m.n_experts, m.top_k
+    C = max(K, int(m.capacity_factor * sg * K / E))  # per-expert per-group capacity
+
+    logits = jnp.einsum("gsd,de->gse", xt, p["router"].astype(xt.dtype)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, K)  # [G,S,K]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)  # renormalize
+
+    # position of each (s,k) assignment within its expert's per-group buffer
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.int32)  # [G,S,K,E]
+    flat = onehot.reshape(G, sg * K, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(G, sg, K, E)
+    pos = (pos_in_expert * onehot).sum(-1)  # [G,S,K]
+    keep = pos < C  # capacity-dropped tokens ride the residual
+
+    disp = jnp.zeros((G, sg, E, C), xt.dtype)
+    comb = jnp.zeros((G, sg, E, C), xt.dtype)
+    for k in range(K):  # K small (<=8); keeps peak at one [G,S,E,C] buffer
+        dk = (
+            jax.nn.one_hot(topi[..., k], E, dtype=xt.dtype)[..., None]
+            * jax.nn.one_hot(pos[..., k], C, dtype=xt.dtype)[..., None, :]
+            * keep[..., k, None, None].astype(xt.dtype)
+        )
+        disp = disp + dk
+        comb = comb + dk * topw[..., k, None, None].astype(xt.dtype)
+
+    xe = jnp.einsum("gsec,gsd->egcd", disp, xt).reshape(E, G * C, d)
+    ye = act(jnp.einsum("ecd,edf->ecf", xe, p["experts_gate"].astype(xt.dtype)))
+    ye = ye * jnp.einsum("ecd,edf->ecf", xe, p["experts_up"].astype(xt.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", ye, p["experts_down"].astype(xt.dtype))  # [E,G*C,d]
+    yt = jnp.einsum("gsec,egcd->gsd", comb, ye.reshape(E, G, C, d))
+
+    if m.n_shared > 0:
+        # shared experts run densely on every token (DeepSeek-style)
+        sh = p["shared"]
+        ys = act(jnp.einsum("gsd,df->gsf", xt, sh["wi_gate"].astype(xt.dtype)))
+        ys = ys * jnp.einsum("gsd,df->gsf", xt, sh["wi_up"].astype(xt.dtype))
+        yt = yt + jnp.einsum("gsf,fd->gsd", ys, sh["wo"].astype(xt.dtype))
+
+    return h + yt.reshape(B, S, d)
+
+
+def moe_aux_loss(cfg: LMConfig, p, h) -> jax.Array:
+    """Load-balance auxiliary loss (Switch): E * sum(frac_tokens * frac_prob)."""
+    m = cfg.moe
+    x = rms_norm(p["ln"], h, cfg.norm_eps).reshape(-1, h.shape[-1])
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topi = jnp.argmax(gates, axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(topi, m.n_experts, dtype=jnp.float32), axis=0)
+    frac_prob = jnp.mean(gates, axis=0)
+    return m.n_experts * jnp.sum(frac_tokens * frac_prob)

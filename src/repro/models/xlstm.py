@@ -1,0 +1,274 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel form for train, recurrent
+for decode) and sLSTM (scalar memory, sequential scan) — arXiv:2405.04517.
+
+mLSTM parallel form (stabilized exponential gating):
+    D[t,s] = exp(F[t] - F[s] + i[s] - m[t]),  F = cumsum(logsigmoid(f))
+    y[t] = ((q k^T / sqrt(d)) ⊙ D) v / max(|row-sum|, exp(-m))
+Decode keeps the matrix memory C [B,H,hd,hd] and normalizer n [B,H,hd].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import LMConfig, dense_init, rms_norm, rms_norm_init
+
+
+def _dims(cfg: LMConfig):
+    x = cfg.xlstm
+    d_up = int(x.proj_factor * cfg.d_model)
+    hd = d_up // x.n_heads
+    return d_up, x.n_heads, hd
+
+
+# --------------------------------- mLSTM ------------------------------------
+
+
+def mlstm_init(cfg: LMConfig, key) -> dict:
+    x = cfg.xlstm
+    d = cfg.d_model
+    d_up, H, hd = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": rms_norm_init(d),
+        "w_up": dense_init(ks[0], d, d_up),
+        "w_gate": dense_init(ks[1], d, d_up),
+        "conv_w": jnp.zeros((x.conv_width, d_up), jnp.float32).at[-1].set(1.0),
+        "conv_b": jnp.zeros((d_up,), jnp.float32),
+        "wq": dense_init(ks[2], d_up, d_up),
+        "wk": dense_init(ks[3], d_up, d_up),
+        "wv": dense_init(ks[4], d_up, d_up),
+        "w_if": dense_init(ks[5], d_up, 2 * H),  # input & forget gate preacts
+        "if_bias": jnp.concatenate([jnp.full((H,), -3.0), jnp.full((H,), 3.0)]),
+        "out_ln": rms_norm_init(d_up),
+        "w_down": dense_init(ks[6], d_up, d),
+    }
+
+
+def _mlstm_qkv(cfg, p, xu):
+    d_up, H, hd = _dims(cfg)
+    B, S, _ = xu.shape
+    K = p["conv_w"].shape[0]
+    pad = jnp.zeros((B, K - 1, d_up), xu.dtype)
+    xp = jnp.concatenate([pad, xu], axis=1)
+    conv = sum(xp[:, i : i + S] * p["conv_w"][i].astype(xu.dtype) for i in range(K))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(xu.dtype))
+    q = (conv @ p["wq"].astype(xu.dtype)).reshape(B, S, H, hd)
+    k = (conv @ p["wk"].astype(xu.dtype)).reshape(B, S, H, hd) / jnp.sqrt(jnp.asarray(hd, xu.dtype))
+    v = (xu @ p["wv"].astype(xu.dtype)).reshape(B, S, H, hd)
+    gif = (xu @ p["w_if"].astype(xu.dtype)).astype(jnp.float32) + p["if_bias"]
+    i_pre, f_pre = jnp.split(gif, 2, axis=-1)  # [B,S,H]
+    return q, k, v, i_pre, f_pre
+
+
+MLSTM_CHUNK = 512
+
+
+def mlstm_apply(cfg: LMConfig, p, h, with_state: bool = False):
+    """Chunkwise-parallel mLSTM: within-chunk decay matrix [Q,Q] + recurrent
+    (C, n, m) state carried across chunks by lax.scan. Linear memory in S —
+    required for 32k prefill — and bit-consistent with ``mlstm_decode``'s
+    per-step recurrence (same stabilized update, verified by the
+    prefill/decode consistency test)."""
+    B, S, d = h.shape
+    d_up, H, hd = _dims(cfg)
+    x = rms_norm(p["ln"], h, cfg.norm_eps)
+    xu = x @ p["w_up"].astype(h.dtype)
+    gate = jax.nn.silu(x @ p["w_gate"].astype(h.dtype))
+    q, k, v, i_pre, f_pre = _mlstm_qkv(cfg, p, xu)
+
+    Q = min(MLSTM_CHUNK, S)
+    assert S % Q == 0, (S, Q)
+    nq = S // Q
+    logf = jax.nn.log_sigmoid(f_pre)  # [B,S,H]
+
+    def to_chunks(t):  # [B,S,...] -> [nq,B,Q,...]
+        return t.reshape(B, nq, Q, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = map(to_chunks, (q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)))
+    ic, fc = to_chunks(i_pre), to_chunks(logf)
+
+    def chunk_step(carry, xs):
+        C_prev, n_prev, m_prev = carry  # [B,H,hd,hd], [B,H,hd], [B,H]
+        q_i, k_i, v_i, i_i, f_i = xs  # [B,Q,H,*]
+        b = jnp.cumsum(f_i, axis=1)  # [B,Q,H] cumulative log-decay from chunk start
+        # intra-chunk: D[t,s] = b_t - b_s + i_s (s <= t)
+        Dm = b[:, :, None, :] - b[:, None, :, :] + i_i[:, None, :, :]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        Dm = jnp.where(tri[None, :, :, None], Dm, -jnp.inf)
+        m_intra = jnp.max(Dm, axis=2)  # [B,Q,H]
+        # inter-chunk scale at t: b_t + m_prev
+        m_inter = b + m_prev[:, None, :]
+        m_t = jnp.maximum(m_intra, m_inter)  # [B,Q,H]
+        Dexp = jnp.exp(Dm - m_t[:, :, None, :])
+        inter_w = jnp.exp(m_inter - m_t)  # [B,Q,H]
+
+        logits = jnp.einsum("bthd,bshd->btsh", q_i, k_i)
+        W = logits * Dexp
+        num = jnp.einsum("btsh,bshe->bthe", W, v_i) + inter_w[..., None] * jnp.einsum(
+            "bthd,bhde->bthe", q_i, C_prev
+        )
+        n_t = jnp.einsum("btsh,bshd->bthd", Dexp, k_i) + inter_w[..., None] * n_prev[:, None]
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bthd,bthd->bth", n_t, q_i)), jnp.exp(-m_t))
+        y_i = num / denom[..., None]  # [B,Q,H,hd]
+
+        # chunk-final state (scale m_new)
+        btot = b[:, -1, :]  # [B,H]
+        a_end = btot[:, None, :] - b + i_i  # weight of step s at chunk end
+        m_end_intra = jnp.max(a_end, axis=1)  # [B,H]
+        m_new = jnp.maximum(m_prev + btot, m_end_intra)
+        w_end = jnp.exp(a_end - m_new[:, None, :])  # [B,Q,H]
+        C_new = C_prev * jnp.exp(m_prev + btot - m_new)[:, :, None, None] + jnp.einsum(
+            "bsh,bshd,bshe->bhde", w_end, k_i, v_i
+        )
+        n_new = n_prev * jnp.exp(m_prev + btot - m_new)[:, :, None] + jnp.einsum(
+            "bsh,bshd->bhd", w_end, k_i
+        )
+        return (C_new, n_new, m_new), y_i
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    (C_f, n_f, m_f), ys = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    y = ys.swapaxes(0, 1).reshape(B, S, d_up).astype(h.dtype)
+
+    y = rms_norm(p["out_ln"], y, cfg.norm_eps) * gate
+    out = h + y @ p["w_down"].astype(h.dtype)
+    if not with_state:
+        return out
+    K = p["conv_w"].shape[0]
+    state = {"C": C_f, "n": n_f, "m": m_f, "conv": xu[:, -(K - 1) :].astype(jnp.float32)}
+    return out, state
+
+
+def mlstm_decode(cfg: LMConfig, p, h, cache, pos):
+    """One-step mLSTM. cache: C [B,H,hd,hd] f32, n [B,H,hd], m [B,H], conv [B,K-1,d_up]."""
+    B = h.shape[0]
+    d_up, H, hd = _dims(cfg)
+    x = rms_norm(p["ln"], h, cfg.norm_eps)
+    xu = x @ p["w_up"].astype(h.dtype)  # [B,1,d_up]
+    gate = jax.nn.silu(x @ p["w_gate"].astype(h.dtype))
+
+    K = p["conv_w"].shape[0]
+    xp = jnp.concatenate([cache["conv"].astype(xu.dtype), xu], axis=1)  # [B,K,d_up]
+    conv = jax.nn.silu((xp * p["conv_w"].astype(xu.dtype)).sum(1, keepdims=True) + p["conv_b"].astype(xu.dtype))
+    q = (conv @ p["wq"].astype(xu.dtype)).reshape(B, H, hd).astype(jnp.float32)
+    k = ((conv @ p["wk"].astype(xu.dtype)).reshape(B, H, hd) / jnp.sqrt(jnp.asarray(hd, xu.dtype))).astype(jnp.float32)
+    v = (xu @ p["wv"].astype(xu.dtype)).reshape(B, H, hd).astype(jnp.float32)
+    gif = (xu @ p["w_if"].astype(xu.dtype)).astype(jnp.float32)[:, 0] + p["if_bias"]
+    i_pre, f_pre = jnp.split(gif, 2, axis=-1)  # [B,H]
+
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + cache["m"], i_pre)
+    fw = jnp.exp(logf + cache["m"] - m_new)[:, :, None]
+    iw = jnp.exp(i_pre - m_new)[:, :, None]
+    C = cache["C"] * fw[..., None] + iw[..., None] * jnp.einsum("bhd,bhe->bhde", k, v)
+    n = cache["n"] * fw + iw * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), jnp.exp(-m_new))
+    y = (jnp.einsum("bhde,bhd->bhe", C, q) / denom[..., None]).reshape(B, 1, d_up).astype(h.dtype)
+    y = rms_norm(p["out_ln"], y, cfg.norm_eps) * gate
+    out = h + y @ p["w_down"].astype(h.dtype)
+    return out, {"C": C, "n": n, "m": m_new, "conv": xp[:, -(K - 1) :].astype(jnp.float32)}
+
+
+def mlstm_cache_spec(cfg: LMConfig, batch: int, max_seq: int, dtype):
+    d_up, H, hd = _dims(cfg)
+    K = cfg.xlstm.conv_width
+    return {
+        "C": jax.ShapeDtypeStruct((batch, H, hd, hd), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, H, hd), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, H), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, K - 1, d_up), jnp.float32),
+    }
+
+
+# --------------------------------- sLSTM ------------------------------------
+
+
+def slstm_init(cfg: LMConfig, key) -> dict:
+    x = cfg.xlstm
+    d = cfg.d_model
+    H = x.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 4)
+    d_ff = int(x.slstm_ff_factor * d)
+    return {
+        "ln": rms_norm_init(d),
+        "w_x": dense_init(ks[0], d, 4 * d),  # i,f,z,o preacts from input
+        "r": (jax.random.normal(ks[1], (H, hd, 4 * hd), jnp.float32) / jnp.sqrt(hd)),
+        "bias": jnp.zeros((4 * d,), jnp.float32).at[d : 2 * d].set(3.0),  # f-bias
+        "ffn_ln": rms_norm_init(d),
+        "ffn_up": dense_init(ks[2], d, d_ff),
+        "ffn_down": dense_init(ks[3], d_ff, d),
+    }
+
+
+def _slstm_cell(cfg, p, xg, state):
+    """One step. xg [B,4d] input preacts; state dict of [B,H,hd] (+m,n)."""
+    H = cfg.xlstm.n_heads
+    d = cfg.d_model
+    hd = d // H
+    h_prev = state["h"]  # [B,H,hd]
+    rec = jnp.einsum("bhd,hde->bhe", h_prev, p["r"])  # [B,H,4hd]
+    # xg layout: (i,f,z,o) each d = H*hd wide -> per-head [B,H,4hd]
+    xg_h = xg.reshape(-1, 4, H, hd).transpose(0, 2, 1, 3).reshape(-1, H, 4 * hd)
+    pre = xg_h + rec
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)  # [B,H,hd] each
+
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    iw = jnp.exp(i_pre - m_new)
+    fw = jnp.exp(logf + state["m"] - m_new)
+    c = fw * state["c"] + iw * jnp.tanh(z_pre)
+    n = jnp.maximum(fw * state["n"] + iw, jnp.exp(-m_new))
+    h = jax.nn.sigmoid(o_pre) * c / n
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_apply(cfg: LMConfig, p, hseq, with_state: bool = False):
+    B, S, d = hseq.shape
+    H = cfg.xlstm.n_heads
+    hd = d // H
+    x = rms_norm(p["ln"], hseq, cfg.norm_eps)
+    xg_all = (x @ p["w_x"].astype(hseq.dtype)).astype(jnp.float32) + p["bias"]
+
+    state0 = {
+        "h": jnp.zeros((B, H, hd), jnp.float32),
+        "c": jnp.zeros((B, H, hd), jnp.float32),
+        "n": jnp.ones((B, H, hd), jnp.float32),
+        "m": jnp.zeros((B, H, hd), jnp.float32),
+    }
+
+    def step(st, xg):
+        st = _slstm_cell(cfg, p, xg, st)
+        return st, st["h"]
+
+    final, hs = jax.lax.scan(step, state0, xg_all.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(B, S, d).astype(hseq.dtype)
+    out = hseq + y
+    # post-FFN (xLSTM sLSTM block)
+    xf = rms_norm(p["ffn_ln"], out, cfg.norm_eps)
+    out = out + jax.nn.gelu(xf @ p["ffn_up"].astype(out.dtype)) @ p["ffn_down"].astype(out.dtype)
+    if with_state:
+        return out, final
+    return out
+
+
+def slstm_decode(cfg: LMConfig, p, h, cache, pos):
+    B = h.shape[0]
+    x = rms_norm(p["ln"], h, cfg.norm_eps)
+    xg = ((x @ p["w_x"].astype(h.dtype)).astype(jnp.float32) + p["bias"])[:, 0]
+    st = _slstm_cell(cfg, p, xg, cache)
+    d = cfg.d_model
+    y = st["h"].reshape(B, 1, d).astype(h.dtype)
+    out = h + y
+    xf = rms_norm(p["ffn_ln"], out, cfg.norm_eps)
+    out = out + jax.nn.gelu(xf @ p["ffn_up"].astype(out.dtype)) @ p["ffn_down"].astype(out.dtype)
+    return out, st
+
+
+def slstm_cache_spec(cfg: LMConfig, batch: int, max_seq: int, dtype):
+    H = cfg.xlstm.n_heads
+    hd = cfg.d_model // H
+    sd = jax.ShapeDtypeStruct((batch, H, hd), jnp.float32)
+    return {"h": sd, "c": sd, "n": sd, "m": sd}

@@ -1,0 +1,4 @@
+from . import baselines, panther, schedules
+from .panther import PantherConfig, PantherState, SlicedTensor
+
+__all__ = ["baselines", "panther", "schedules", "PantherConfig", "PantherState", "SlicedTensor"]

@@ -1,0 +1,77 @@
+"""Float-path optimizers: the functional equivalent of Base_digital.
+
+``sgd`` is the exact-arithmetic counterpart of the PANTHER update — used by
+tests to bound the sliced path's deviation, and by benchmarks as the digital
+baseline. ``adamw`` is provided for general framework use (not part of the
+paper's evaluation, which is SGD-based).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Any
+
+
+def sgd_init(params, momentum: float = 0.0) -> SGDState:
+    mom = jax.tree.map(lambda p: jnp.zeros_like(p) if momentum > 0 else None, params)
+    return SGDState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+
+def sgd_update(grads, state: SGDState, params, lr, momentum: float = 0.0):
+    def upd(g, p, m):
+        if momentum > 0 and m is not None:
+            m = momentum * m + g
+            g = m
+        return (p - lr * g).astype(p.dtype), m
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = treedef.flatten_up_to(params)
+    flat_m = treedef.flatten_up_to(state.momentum)
+    out = [upd(g, p, m) for g, p, m in zip(flat_g, flat_p, flat_m)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_p, SGDState(step=state.step + 1, momentum=new_m)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(jnp.zeros((), jnp.int32), jax.tree.map(z, params), jax.tree.map(z, params))
+
+
+def adamw_update(grads, state: AdamWState, params, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.0):
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, p, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * g32 * g32
+        upd_val = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd_val).astype(p.dtype), mu, nu
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = treedef.flatten_up_to(params)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    out = [upd(*t) for t in zip(flat_g, flat_p, flat_mu, flat_nu)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in out]),
+        AdamWState(
+            step,
+            jax.tree.unflatten(treedef, [o[1] for o in out]),
+            jax.tree.unflatten(treedef, [o[2] for o in out]),
+        ),
+    )

@@ -1,0 +1,241 @@
+"""PANTHER sliced-SGD: the paper's technique as a first-class JAX optimizer.
+
+Every matrix-shaped parameter ("crossbar-mapped", ndim >= 2) lives as int8
+digit planes ``[S, *shape]`` plus a per-tensor fixed-point scale. The update
+is the paper's OPA: quantize ``-lr * grad`` onto the weight grid (stochastic
+rounding) and deposit it into the planes with per-plane saturating carry
+accumulation. A Carry Resolution Step re-canonicalizes every ``crs_every``
+steps (paper default 1024). Vector parameters (norm scales, biases, SSM
+``A_log``/dt, conv1d taps) take the paper's digital-VFU path: plain float
+SGD.
+
+MCU variants (paper §4): V1/V2/V3 have identical *step-level* numerics (the
+ISA simulator models their scheduling/energy differences); the trainer
+records the variant for the benchmark layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DEFAULT_SPEC,
+    SliceSpec,
+    choose_frac_bits,
+    crs as crs_fn,
+    dequantize_planes,
+    saturation_fraction,
+    slice_weights,
+)
+from repro.core.fixed_point import quantize
+from repro.kernels.crs import crs as crs_op
+from repro.kernels.sliced_opa import opa_deposit
+
+
+@dataclasses.dataclass(frozen=True)
+class PantherConfig:
+    spec: SliceSpec = DEFAULT_SPEC
+    crs_every: int = 1024
+    stochastic_round: bool = True
+    momentum: float = 0.0  # optional digital-VFU momentum (paper uses plain SGD)
+    min_ndim: int = 2  # crossbar-map params with ndim >= this
+    min_dim: int = 8  # ... and every dim >= this (conv taps etc. stay digital)
+    variant: str = "v2"  # informational: v1 (SGD), v2 (mini-batch), v3 (large-batch)
+    margin_bits: int = 2  # headroom when choosing the per-tensor scale
+    compute_dtype: Any = jnp.float32
+
+
+class SlicedTensor(NamedTuple):
+    """Optimizer-side state of one crossbar-mapped parameter."""
+
+    planes: jax.Array  # int8 [S, *shape]
+    frac_bits: jax.Array  # int32 scalar: weight grid = 2^-F
+
+
+class PantherState(NamedTuple):
+    step: jax.Array
+    sliced: Any  # pytree: SlicedTensor | None per param leaf
+    momentum: Any  # pytree: float buffer | None  (digital VFU)
+
+
+def _crs_dispatch(planes, spec):
+    """CRS via the Pallas kernel on TPU (rank-3 planes), jnp ref otherwise."""
+    if planes.ndim == 3 and jax.default_backend() == "tpu":
+        return crs_op(planes, spec)
+    return crs_fn(planes, spec)
+
+
+def _is_crossbar_mapped(p, cfg: PantherConfig) -> bool:
+    return (
+        p.ndim >= cfg.min_ndim
+        and min(p.shape) >= cfg.min_dim
+        and p.dtype in (jnp.float32, jnp.bfloat16, jnp.float16)
+    )
+
+
+def init(params, cfg: PantherConfig = PantherConfig()) -> PantherState:
+    def init_leaf(p):
+        if not _is_crossbar_mapped(p, cfg):
+            return None
+        f = choose_frac_bits(p, margin_bits=cfg.margin_bits)
+        q = quantize(p, f)
+        return SlicedTensor(planes=slice_weights(q, cfg.spec), frac_bits=f)
+
+    sliced = jax.tree.map(init_leaf, params)
+    mom = jax.tree.map(lambda p: jnp.zeros_like(p) if cfg.momentum > 0 else None, params)
+    return PantherState(step=jnp.zeros((), jnp.int32), sliced=sliced, momentum=mom)
+
+
+def materialize(params, state: PantherState, cfg: PantherConfig = PantherConfig()):
+    """Dequantize the sliced state into compute-dtype parameters.
+
+    The returned tree is what the forward/backward runs on (the paper's MVM /
+    MᵀVM read the same crossbar cells the OPA writes).
+    """
+
+    def mat_leaf(p, s):
+        if s is None:
+            return p
+        return dequantize_planes(s.planes, s.frac_bits, cfg.spec, dtype=cfg.compute_dtype)
+
+    return jax.tree.map(mat_leaf, params, state.sliced, is_leaf=lambda x: x is None or isinstance(x, SlicedTensor))
+
+
+def update(
+    grads,
+    state: PantherState,
+    params,
+    lr: jax.Array,
+    cfg: PantherConfig = PantherConfig(),
+    rng: jax.Array | None = None,
+):
+    """One PANTHER step. Returns (new_params, new_state).
+
+    grads/params are float trees; the sliced leaves' float values are
+    regenerated from the planes after the OPA deposit (single source of
+    truth = the crossbar state).
+    """
+    step = state.step
+    do_crs = (step % cfg.crs_every) == (cfg.crs_every - 1)
+    base_key = rng if rng is not None else jax.random.PRNGKey(0)
+    base_key = jax.random.fold_in(base_key, step)
+
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_p = treedef.flatten_up_to(params)
+    leaves_s = treedef.flatten_up_to(state.sliced)
+    leaves_m = treedef.flatten_up_to(state.momentum)
+
+    new_p, new_s, new_m = [], [], []
+    for i, (g, p, s, m) in enumerate(zip(leaves_g, leaves_p, leaves_s, leaves_m)):
+        if cfg.momentum > 0 and m is not None:
+            m = cfg.momentum * m + g
+            g_eff = m
+        else:
+            g_eff = g
+        if s is None:
+            new_p.append((p - lr * g_eff).astype(p.dtype))
+            new_s.append(None)
+            new_m.append(m)
+            continue
+        # OPA path: quantize -lr*g onto the weight grid, deposit, maybe CRS.
+        key = jax.random.fold_in(base_key, i)
+        upd = quantize(
+            -lr * g_eff.astype(jnp.float32),
+            s.frac_bits,
+            stochastic=cfg.stochastic_round,
+            key=key,
+        )
+        planes = opa_deposit(s.planes, upd, cfg.spec)
+        planes = jax.lax.cond(do_crs, lambda x: _crs_dispatch(x, cfg.spec), lambda x: x, planes)
+        new_sliced = SlicedTensor(planes=planes, frac_bits=s.frac_bits)
+        new_s.append(new_sliced)
+        new_m.append(m)
+        new_p.append(dequantize_planes(planes, s.frac_bits, cfg.spec, dtype=p.dtype))
+
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        PantherState(
+            step=step + 1,
+            sliced=jax.tree.unflatten(treedef, new_s),
+            momentum=jax.tree.unflatten(treedef, new_m),
+        ),
+    )
+
+
+# --------------------- split-state API (production trainer) -----------------
+# The trainer does not store a float copy of crossbar-mapped weights: the
+# int8 planes are the single source of truth (exactly the accelerator's
+# memory layout). ``digital`` holds only the VFU-path leaves.
+
+
+def _is_none_or_leaf(x):
+    return x is None or isinstance(x, (SlicedTensor, jax.Array)) or hasattr(x, "shape")
+
+
+def init_split(params, cfg: PantherConfig = PantherConfig()):
+    """-> (digital, sliced): complementary trees (None at the other's leaves)."""
+
+    def split(p):
+        if _is_crossbar_mapped(p, cfg):
+            f = choose_frac_bits(p, margin_bits=cfg.margin_bits)
+            return (None, SlicedTensor(planes=slice_weights(quantize(p, f), cfg.spec), frac_bits=f))
+        return (p, None)
+
+    pairs = jax.tree.map(split, params)
+    digital = jax.tree.map(lambda pr: pr[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    sliced = jax.tree.map(lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return digital, sliced
+
+
+def materialize_split(digital, sliced, cfg: PantherConfig = PantherConfig()):
+    """Rebuild the compute-dtype parameter tree (crossbar read = dequantize)."""
+
+    def pick(d, s):
+        if s is None:
+            return d
+        return dequantize_planes(s.planes, s.frac_bits, cfg.spec, dtype=cfg.compute_dtype)
+
+    return jax.tree.map(pick, digital, sliced, is_leaf=lambda x: x is None or isinstance(x, SlicedTensor))
+
+
+def update_split(grads, digital, sliced, step, lr, cfg: PantherConfig = PantherConfig(), rng=None):
+    """One OPA step on the split state. Returns (digital', sliced').
+
+    The dequantized new params are *not* returned — the next step
+    re-materializes from the planes, so XLA dead-code-eliminates any unused
+    dequantization (no redundant HBM traffic).
+    """
+    do_crs = (step % cfg.crs_every) == (cfg.crs_every - 1)
+    base_key = rng if rng is not None else jax.random.PRNGKey(0)
+    base_key = jax.random.fold_in(base_key, step)
+
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_d = treedef.flatten_up_to(digital)
+    leaves_s = treedef.flatten_up_to(sliced)
+    new_d, new_s = [], []
+    for i, (g, d, s) in enumerate(zip(leaves_g, leaves_d, leaves_s)):
+        if s is None:
+            new_d.append((d - lr * g.astype(d.dtype)).astype(d.dtype))
+            new_s.append(None)
+            continue
+        key = jax.random.fold_in(base_key, i)
+        upd = quantize(-lr * g.astype(jnp.float32), s.frac_bits, stochastic=cfg.stochastic_round, key=key)
+        planes = opa_deposit(s.planes, upd, cfg.spec)
+        planes = jax.lax.cond(do_crs, lambda x: _crs_dispatch(x, cfg.spec), lambda x: x, planes)
+        new_d.append(None)
+        new_s.append(SlicedTensor(planes=planes, frac_bits=s.frac_bits))
+    return jax.tree.unflatten(treedef, new_d), jax.tree.unflatten(treedef, new_s)
+
+
+def saturation_report(state: PantherState, cfg: PantherConfig = PantherConfig()):
+    """Per-parameter per-plane saturation fractions (paper Fig 9 metric)."""
+
+    def rep(s):
+        if s is None:
+            return None
+        return saturation_fraction(s.planes, cfg.spec)
+
+    return jax.tree.map(rep, state.sliced, is_leaf=lambda x: x is None or isinstance(x, SlicedTensor))

@@ -1,0 +1,39 @@
+"""Learning-rate schedules.
+
+WSD (warmup-stable-decay) is included because the assigned minicpm-2b
+architecture trains with it (arXiv:2404.06395 §4).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos).astype(jnp.float32)
+
+    return f
+
+
+def wsd(lr: float, warmup: int, stable: int, decay: int, final_frac: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, long flat stage, short
+    exponential-ish decay tail."""
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        flat = jnp.asarray(lr, jnp.float32)
+        prog = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        tail = lr * (final_frac ** prog)
+        out = jnp.where(step < warmup, warm, jnp.where(step < warmup + stable, flat, tail))
+        return out.astype(jnp.float32)
+
+    return f

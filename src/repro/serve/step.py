@@ -1,0 +1,66 @@
+"""Serving steps: batched prefill and single-token decode with caches.
+
+Weights are served from the sliced crossbar state (dequantized once outside
+the step — inference reads the same cells training wrote). ``decode_step``
+is the unit the decode_32k / long_500k dry-run cells lower.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.models.common import LMConfig
+
+
+def make_prefill(cfg: LMConfig, mesh=None, global_batch: int | None = None, max_seq: int | None = None):
+    cshard = None
+    if mesh is not None and global_batch is not None:
+        act_spec = shd.activation_spec(mesh, global_batch)
+        shard_fn = lambda x: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, act_spec))
+        if max_seq is not None:
+            # per-layer cache constraints (inside the prefill scan body)
+            cshard = []
+            for name, count in cfg.pattern:
+                spec_shapes = lm.BLOCKS[name].cache_spec(cfg, global_batch, max_seq, cfg.dtype)
+                specs = shd.cache_specs(mesh, spec_shapes, global_batch)
+
+                def mk(specs=specs):
+                    def f(cache):
+                        return jax.tree.map(
+                            lambda c, s: jax.lax.with_sharding_constraint(
+                                c, NamedSharding(mesh, s)
+                            ),
+                            cache, specs,
+                        )
+
+                    return f
+
+                cshard.append(mk())
+    else:
+        shard_fn = None
+
+    def prefill(params, inputs):
+        return lm.prefill(cfg, params, inputs, shard_fn=shard_fn, cshard=cshard)
+
+    return prefill
+
+
+def make_decode_step(cfg: LMConfig, mesh=None, global_batch: int | None = None, sample: bool = False):
+    if mesh is not None and global_batch is not None:
+        act_spec = shd.activation_spec(mesh, global_batch)
+        shard_fn = lambda x: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, act_spec))
+    else:
+        shard_fn = None
+
+    def decode_step(params, token, caches, pos, rng=None):
+        logits, caches = lm.decode_step(cfg, params, token, caches, pos, shard_fn=shard_fn)
+        if sample:
+            nxt = jax.random.categorical(rng, logits.astype(jnp.float32), axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), logits, caches
+
+    return decode_step

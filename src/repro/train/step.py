@@ -1,0 +1,211 @@
+"""Production train step: bf16 forward/backward on dequantized crossbar
+state + PANTHER OPA update. Built once per (config, mesh); pjit-ready.
+
+Memory layout per crossbar-mapped weight: int8 planes [S, *w] (source of
+truth, 8 B/param at the default 8-slice spec — the paper's §6.3 configuration)
++ transient bf16 compute copy inside the step. No fp32 master copy exists —
+the planes ARE the master (32-bit fixed point, as in the accelerator).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.models.common import LMConfig
+from repro.optim import PantherConfig, panther
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    digital: Any  # float leaves (VFU path); None at crossbar leaves
+    sliced: Any  # SlicedTensor leaves; None at digital leaves
+    rng: jax.Array
+
+
+def train_state_init(cfg: LMConfig, opt_cfg: PantherConfig, key) -> TrainState:
+    params = lm.init_params(cfg, key)
+    digital, sliced = panther.init_split(params, opt_cfg)
+    return TrainState(
+        step=jnp.zeros((), jnp.int32), digital=digital, sliced=sliced, rng=jax.random.PRNGKey(7)
+    )
+
+
+def train_state_specs(cfg: LMConfig, opt_cfg: PantherConfig, mesh=None, fsdp: bool = False):
+    """PartitionSpec pytree for TrainState (planes shard like their matrix
+    with a leading None for the slice dim). With ``fsdp``, planes
+    additionally shard an unsharded axis over 'data' (ZeRO-3)."""
+    shapes = jax.eval_shape(lambda: train_state_init(cfg, opt_cfg, jax.random.PRNGKey(0)))
+    dsize = mesh.shape["data"] if (fsdp and mesh is not None) else 1
+
+    def digital_spec(path, leaf):
+        s = shd.leaf_spec(shd._path_str(path), leaf.ndim)
+        if mesh is not None:
+            s = shd.sanitize_spec(s, leaf.shape, mesh)
+        return s
+
+    def sliced_spec(path, leaf):
+        ps = shd._path_str(path)
+        if ps.endswith("frac_bits"):
+            return P()
+        # planes [S, *w] shard like their matrix w (strip the /planes suffix
+        # so the name rules see the parameter path), S replicated
+        ppath = ps.removesuffix("/planes")
+        base = shd.leaf_spec(ppath, leaf.ndim - 1)
+        full = P(*((None,) + tuple(base)))
+        if mesh is not None:
+            full = shd.sanitize_spec(full, leaf.shape, mesh)
+        if fsdp:
+            # FSDP only on the trailing matrix axes (never S or scan stacks)
+            n_tail = len(shd.trailing_spec(ppath)) or 2
+            full = shd.fsdp_spec(full, leaf.shape, dsize, n_tail=n_tail)
+        return full
+
+    return TrainState(
+        step=P(),
+        digital=jax.tree_util.tree_map_with_path(digital_spec, shapes.digital),
+        sliced=jax.tree_util.tree_map_with_path(sliced_spec, shapes.sliced),
+        rng=P(),
+    )
+
+
+def grad_specs(cfg: LMConfig, opt_cfg: PantherConfig, mesh=None, fsdp: bool = False):
+    """Gradient sharding (mirrors the stored planes minus the S dim) —
+    pinning this keeps the f32 accumulation buffer ZeRO-sharded instead of
+    letting SPMD fall back to TP-only (which blows HBM on 34B models)."""
+    shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    dsize = mesh.shape["data"] if (fsdp and mesh is not None) else 1
+
+    def spec(path, leaf):
+        ps = shd._path_str(path)
+        base = shd.leaf_spec(ps, leaf.ndim)
+        if mesh is not None:
+            base = shd.sanitize_spec(base, leaf.shape, mesh)
+        if fsdp and panther._is_crossbar_mapped(leaf, opt_cfg):
+            n_tail = len(shd.trailing_spec(ps)) or 2
+            base = shd.fsdp_spec(base, leaf.shape, dsize, n_tail=n_tail)
+        return base
+
+    return jax.tree_util.tree_map_with_path(spec, shapes)
+
+
+def batch_specs(cfg: LMConfig, mesh, global_batch: int, microbatches: int = 1):
+    mb = global_batch // microbatches
+    lead = (None,) if microbatches > 1 else ()
+    b2 = shd.data_spec(mesh, mb, 2)
+    b3 = shd.data_spec(mesh, mb, 3)
+    b = P(*(lead + tuple(b2)))
+    if cfg.input_mode == "tokens":
+        return {"inputs": b, "labels": b}
+    return {"inputs": P(*(lead + tuple(b3))), "labels": b}
+
+
+def make_train_step(
+    cfg: LMConfig,
+    opt_cfg: PantherConfig,
+    lr_schedule,
+    mesh=None,
+    global_batch: int | None = None,
+    remat="full",
+    microbatches: int = 1,
+    fsdp: bool = False,
+    grad_dtype=jnp.float32,
+):
+    """Returns ``train_step(state, batch) -> (state', metrics)``.
+
+    Under a mesh, activations get explicit batch-sharding constraints and
+    logits are constrained to keep the vocab dim on 'model' (never gathering
+    the [B,S,V] tensor). ``microbatches > 1`` expects the batch leaves
+    pre-shaped [G, B/G, ...] and accumulates gradients over a lax.scan —
+    the standard activation-memory lever (paper variant-2 semantics: one
+    weight update per global batch)."""
+    mb_batch = global_batch // microbatches if global_batch else None
+    gshard = None
+    if mesh is not None and global_batch is not None:
+        act_spec = shd.activation_spec(mesh, mb_batch)
+        shard_fn = lambda x: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, act_spec))
+        gspecs = grad_specs(cfg, opt_cfg, mesh=mesh, fsdp=fsdp)
+        gnamed = jax.tree.map(lambda s: NamedSharding(mesh, s), gspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+        gshard = lambda g: jax.tree.map(jax.lax.with_sharding_constraint, g, gnamed)
+    else:
+        shard_fn = None
+    pshard = gshard  # params share the grad sharding (ZeRO storage layout)
+
+    # per-layer weight constraints applied inside the scan bodies
+    wshard = None
+    if mesh is not None and global_batch is not None:
+        wshard = []
+        for gi, (name, count) in enumerate(cfg.pattern):
+            gsub = gspecs["groups"][gi]
+
+            def mk(gsub=gsub, count=count):
+                def f(p_i):
+                    def c(spec, leaf):
+                        s = tuple(spec)
+                        if count > 1 and len(s) > leaf.ndim:  # drop stack axis
+                            s = s[1:]
+                        s = s + (None,) * (leaf.ndim - len(s))
+                        return jax.lax.with_sharding_constraint(
+                            leaf, NamedSharding(mesh, P(*s))
+                        )
+
+                    return jax.tree.map(c, gsub, p_i, is_leaf=lambda x: isinstance(x, P))
+
+                return f
+
+            wshard.append(mk())
+
+    remat_mode = {"full": True, "dots": "dots", "none": False}.get(remat, remat)
+
+    def loss_of(params, mb):
+        return lm.loss_fn(cfg, params, mb, remat=remat_mode, shard_fn=shard_fn, wshard=wshard)
+
+    def train_step(state: TrainState, batch):
+        params = panther.materialize_split(state.digital, state.sliced, opt_cfg)
+        if gshard is not None:
+            # keep the compute copy ZeRO-sharded in storage; the per-layer
+            # all-gather happens inside the layer scan, not up front
+            params = pshard(params)
+
+        if microbatches == 1:
+            loss_val, grads = jax.value_and_grad(loss_of)(params, batch)
+            if gshard is not None:
+                grads = gshard(grads)
+        else:
+            # grad_dtype=bf16 halves the reduce-scatter bytes and the
+            # accumulator footprint (§Perf collective-term lever; the OPA
+            # deposit's stochastic rounding keeps the update unbiased)
+            gz = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype), params)
+            if gshard is not None:
+                gz = gshard(gz)
+
+            def mb_body(carry, mb):
+                acc_l, acc_g = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                if gshard is not None:
+                    g = gshard(g)
+                acc_g = jax.tree.map(lambda a, x: a + x.astype(grad_dtype), acc_g, g)
+                return (acc_l + l, acc_g), None
+
+            (lsum, gsum), _ = jax.lax.scan(mb_body, (jnp.zeros((), jnp.float32), gz), batch)
+            loss_val = lsum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+
+        lr = lr_schedule(state.step)
+        new_digital, new_sliced = panther.update_split(
+            grads, state.digital, state.sliced, state.step, lr, opt_cfg, rng=state.rng
+        )
+        new_state = TrainState(
+            step=state.step + 1, digital=new_digital, sliced=new_sliced, rng=state.rng
+        )
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+        )
+        return new_state, {"loss": loss_val, "lr": lr, "grad_norm": gnorm}
+
+    return train_step

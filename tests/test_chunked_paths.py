@@ -1,0 +1,105 @@
+"""Chunked long-context paths vs exact references.
+
+These are the memory-bounded algorithms the 32k/500k dry-run cells rely on:
+  * _sdpa_chunked (flash-style online softmax) vs exact masked softmax
+  * chunkwise mLSTM: different chunk sizes must produce identical outputs
+  * chunked Mamba2 SSD: different chunk sizes must agree
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import attention as att
+from repro.models import mamba2 as m2
+from repro.models import xlstm as xl
+from repro.models.common import LMConfig, SSMCfg, XLSTMCfg
+
+
+def _mk_cfg(**kw):
+    base = dict(
+        arch_id="test",
+        d_model=64,
+        n_layers=1,
+        vocab=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        dtype=jnp.float32,
+    )
+    base.update(kw)
+    return LMConfig(**base)
+
+
+@pytest.mark.parametrize("window", [None, 256], ids=["global", "win256"])
+@pytest.mark.parametrize("cap", [None, 50.0], ids=["nocap", "cap50"])
+def test_sdpa_chunked_matches_exact(window, cap):
+    cfg = _mk_cfg(softcap_attn=cap)
+    rng = np.random.default_rng(0)
+    B, S, H, KV, hd = 2, 2048, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    exact = att._sdpa(cfg, q, k, v, att.causal_mask(S, S, window))
+    chunked = att._sdpa_chunked(cfg, q, k, v, window)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(exact), rtol=2e-5, atol=2e-5)
+
+
+def test_sdpa_chunked_different_vdim():
+    cfg = _mk_cfg()
+    rng = np.random.default_rng(1)
+    B, S, H, KV = 1, 2048, 4, 4
+    q = jnp.asarray(rng.normal(size=(B, S, H, 24)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, 24)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, 16)), jnp.float32)  # MLA-style hd_v != hd_qk
+    exact = att._sdpa(cfg, q, k, v, att.causal_mask(S, S, None))
+    chunked = att._sdpa_chunked(cfg, q, k, v, None)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(exact), rtol=2e-5, atol=2e-5)
+
+
+def test_mlstm_chunk_size_invariance(monkeypatch):
+    cfg = _mk_cfg(xlstm=XLSTMCfg(proj_factor=2.0, n_heads=2, conv_width=4))
+    params = xl.mlstm_init(cfg, jax.random.PRNGKey(0))
+    h = jax.random.normal(jax.random.PRNGKey(1), (2, 512, 64), jnp.float32)
+
+    monkeypatch.setattr(xl, "MLSTM_CHUNK", 512)
+    out_big = xl.mlstm_apply(cfg, params, h)
+    monkeypatch.setattr(xl, "MLSTM_CHUNK", 64)
+    out_small, state_small = xl.mlstm_apply(cfg, params, h, with_state=True)
+    np.testing.assert_allclose(np.asarray(out_small), np.asarray(out_big), rtol=1e-4, atol=1e-4)
+
+    # and the carried state must continue identically to one-shot decode
+    h_next = jax.random.normal(jax.random.PRNGKey(2), (2, 1, 64), jnp.float32)
+    monkeypatch.setattr(xl, "MLSTM_CHUNK", 512)
+    _, state_big = xl.mlstm_apply(cfg, params, h, with_state=True)
+    o1, _ = xl.mlstm_decode(cfg, params, h_next, state_small, jnp.int32(512))
+    o2, _ = xl.mlstm_decode(cfg, params, h_next, state_big, jnp.int32(512))
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("chunks", [(8, 64), (16, 128)])
+def test_mamba2_chunk_size_invariance(chunks):
+    c1, c2 = chunks
+    cfg1 = _mk_cfg(ssm=SSMCfg(d_state=16, d_conv=4, expand=2, head_dim=16, chunk=c1))
+    cfg2 = dataclasses.replace(cfg1, ssm=dataclasses.replace(cfg1.ssm, chunk=c2))
+    params = m2.mamba2_init(cfg1, jax.random.PRNGKey(0))
+    h = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 64), jnp.float32)
+    o1, s1 = m2.mamba2_apply(cfg1, params, h, with_state=True)
+    o2, s2 = m2.mamba2_apply(cfg2, params, h, with_state=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1["ssd"]), np.asarray(s2["ssd"]), rtol=1e-4, atol=1e-4)
+
+
+def test_mamba2_prefill_state_continues_decode():
+    cfg = _mk_cfg(ssm=SSMCfg(d_state=16, d_conv=4, expand=2, head_dim=16, chunk=16))
+    params = m2.mamba2_init(cfg, jax.random.PRNGKey(0))
+    h = jax.random.normal(jax.random.PRNGKey(1), (2, 65, 64), jnp.float32)
+    # full pass over 65 tokens vs prefill(64) + decode(1)
+    full = m2.mamba2_apply(cfg, params, h)
+    hpad = jnp.pad(h[:, :64], ((0, 0), (0, 0), (0, 0)))
+    _, state = m2.mamba2_apply(cfg, params, hpad, with_state=True)
+    out, _ = m2.mamba2_decode(cfg, params, h[:, 64:65], state, jnp.int32(64))
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, 64]), rtol=2e-4, atol=2e-4)

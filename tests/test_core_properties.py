@@ -1,0 +1,153 @@
+"""Property-based tests (hypothesis) for the PANTHER numerics invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SliceSpec,
+    crs,
+    opa_batched,
+    opa_stream,
+    opa_stream_batch,
+    outer_product_int,
+    mvm_sliced,
+    product_digits,
+    saturating_add,
+    slice_weights,
+    unslice_weights,
+)
+
+from hypothesis import assume
+
+specs = st.sampled_from(
+    [
+        SliceSpec((4, 4, 4, 6, 6, 5, 5, 5)),
+        SliceSpec.uniform(5),
+        SliceSpec.uniform(6),
+        SliceSpec.uniform(8),
+        SliceSpec((8, 7, 6, 5, 4, 4, 4, 4)),
+    ]
+)
+ints32 = st.integers(min_value=-(2**30), max_value=2**30)
+
+
+def _no_saturation(planes, spec) -> bool:
+    caps = np.asarray(spec.plane_max).reshape((spec.n_slices,) + (1,) * (planes.ndim - 1))
+    return bool((np.abs(np.asarray(planes, np.int32)) < caps).all())
+
+
+def _stream_never_clips(planes0, x, a, spec) -> bool:
+    """Sound bound: |plane| at ANY point during streaming <= |start digit| +
+    sum of |deposit| magnitudes (deposits commute in magnitude). A final
+    state inside the caps does NOT imply no mid-stream clipping."""
+    P = np.abs(np.asarray(planes0, np.int64))  # [S,M,N]
+    xs = np.asarray(x, np.int64)
+    as_ = np.asarray(a, np.int64)
+    for bi in range(xs.shape[0]):
+        mx, ma = np.abs(xs[bi]), np.abs(as_[bi])
+        for t in range(15):
+            bt = (mx >> t) & 1  # [M]
+            v = ma << t  # [N]
+            for s in range(spec.n_slices):
+                chunk = (v >> (4 * s)) & 15
+                P[s] += bt[:, None] * chunk[None, :]
+    caps = np.asarray(spec.plane_max).reshape(spec.n_slices, 1, 1)
+    return bool((P < caps).all())
+
+
+@settings(max_examples=30, deadline=None)
+@given(specs, st.lists(ints32, min_size=1, max_size=16))
+def test_roundtrip_property(spec, vals):
+    q = jnp.asarray(vals, jnp.int32)
+    assert (unslice_weights(slice_weights(q, spec), spec) == q).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(specs, st.lists(ints32, min_size=1, max_size=16))
+def test_crs_value_preserving(spec, vals):
+    """CRS never changes the represented weight unless it rails at word max."""
+    q = jnp.asarray(vals, jnp.int32)
+    planes = slice_weights(q, spec)
+    rng = np.random.default_rng(abs(hash(tuple(vals))) % 2**31)
+    delta = jnp.asarray(rng.integers(-5, 6, size=planes.shape), jnp.int32)
+    dirty = saturating_add(planes, delta, spec)
+    # true dirty value in int64 (may exceed int32 — that's the point of CRS)
+    v = sum(np.asarray(dirty[s], np.int64) * 16**s for s in range(spec.n_slices))
+    out = np.asarray(unslice_weights(crs(dirty, spec), spec), np.int64)
+    lim = spec.canonical_limit
+    expect = np.clip(v, -lim, lim)
+    assert (out == expect).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=4),  # M
+    st.integers(min_value=1, max_value=4),  # N
+    st.integers(min_value=1, max_value=3),  # B
+    st.integers(min_value=0, max_value=2**31 - 1),  # seed
+)
+def test_stream_equals_batched_value_when_headroom(m, n, b, seed):
+    """Paper §3.1/Fig 3: streaming per-example OPA deposits the exact product
+    (value-wise) when no plane saturates — so it matches the batched
+    digit-decompose of the summed outer product. Saturating draws are
+    discarded (a single 16-bit OPA *can* legitimately fill an 8-bit plane —
+    the paper's §3.2 within-OPA overflow case, covered by other tests)."""
+    spec = SliceSpec.uniform(8)  # widest device headroom
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-(2**10), 2**10, size=(b, m)), jnp.int32)
+    a = jnp.asarray(rng.integers(-(2**10), 2**10, size=(b, n)), jnp.int32)
+    planes = slice_weights(jnp.asarray(rng.integers(-(2**20), 2**20, size=(m, n)), jnp.int32), spec)
+
+    assume(_stream_never_clips(planes, x, a, spec))
+    streamed = opa_stream_batch(planes, x, a, spec)
+    batched = opa_batched(planes, outer_product_int(x, a), spec)
+    assume(_no_saturation(batched, spec))
+    v_s = unslice_weights(streamed, spec)
+    v_b = unslice_weights(batched, spec)
+    assert (v_s == v_b).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_stream_opa_exact_product(seed):
+    spec = SliceSpec.uniform(8)
+    rng = np.random.default_rng(seed)
+    m, n = int(rng.integers(1, 6)), int(rng.integers(1, 6))
+    x = jnp.asarray(rng.integers(-(2**14), 2**14, size=(m,)), jnp.int32)
+    a = jnp.asarray(rng.integers(-(2**14), 2**14, size=(n,)), jnp.int32)
+    planes = slice_weights(jnp.zeros((m, n), jnp.int32), spec)
+    assume(_stream_never_clips(planes, x[None], a[None], spec))
+    out = opa_stream(planes, x, a, spec)
+    val = np.asarray(unslice_weights(out, spec), np.int64)
+    expect = np.asarray(x, np.int64)[:, None] * np.asarray(a, np.int64)[None, :]
+    assert (val == expect).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_ideal_adc_mvm_equals_int_matmul(seed):
+    """The algebraic identity licensing the MXU fast path (DESIGN.md §4)."""
+    spec = SliceSpec((4, 4, 4, 6, 6, 5, 5, 5))
+    rng = np.random.default_rng(seed)
+    m, n = int(rng.integers(1, 5)), int(rng.integers(1, 5))
+    q = jnp.asarray(rng.integers(-(2**26), 2**26, size=(m, n)), jnp.int32)
+    x = jnp.asarray(rng.integers(-(2**14), 2**14, size=(m,)), jnp.int32)
+    planes = slice_weights(q, spec)
+    y = np.asarray(mvm_sliced(planes, x, spec, adc_bits=None), np.float64)
+    expect = np.asarray(x, np.float64) @ np.asarray(q, np.float64)
+    np.testing.assert_allclose(y, expect, rtol=1e-6, atol=1e-6 * (1 + np.abs(expect).max()))
+
+
+@settings(max_examples=20, deadline=None)
+@given(specs, st.integers(min_value=0, max_value=2**31 - 1))
+def test_digit_deposit_linear_in_headroom(spec, seed):
+    """deposit(deposit(P1), P2) == deposit(P1 + P2) when nothing saturates."""
+    wide = SliceSpec.uniform(8)
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(-(2**24), 2**24, size=(5,)), jnp.int32)
+    p1 = jnp.asarray(rng.integers(-(2**20), 2**20, size=(5,)), jnp.int32)
+    p2 = jnp.asarray(rng.integers(-(2**20), 2**20, size=(5,)), jnp.int32)
+    planes = slice_weights(q, wide)
+    a = opa_batched(opa_batched(planes, p1, wide), p2, wide)
+    b = opa_batched(planes, p1 + p2, wide)
+    assert (unslice_weights(a, wide) == unslice_weights(b, wide)).all()

@@ -1,0 +1,116 @@
+"""Unit tests for the bit-sliced representation (PANTHER §3)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    DEFAULT_SPEC,
+    SliceSpec,
+    choose_frac_bits,
+    crs,
+    dequantize,
+    quantize,
+    product_digits,
+    saturating_add,
+    saturation_fraction,
+    slice_weights,
+    unslice_weights,
+)
+
+
+def test_spec_paper_default():
+    # "44466555": 39 bits over 8 slices for a 32-bit weight (paper §6.3).
+    assert DEFAULT_SPEC.name() == "44466555"
+    assert DEFAULT_SPEC.n_slices == 8
+    assert DEFAULT_SPEC.total_bits == 39
+    assert DEFAULT_SPEC.word_bits == 32
+
+
+@pytest.mark.parametrize("spec", [DEFAULT_SPEC, SliceSpec.uniform(4), SliceSpec.uniform(6), SliceSpec((8, 5, 4, 4, 7, 6, 5, 4))])
+def test_slice_roundtrip(spec):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.integers(-(2**30), 2**30, size=(17, 23)), jnp.int32)
+    planes = slice_weights(q, spec)
+    assert planes.dtype == jnp.int8
+    assert planes.shape == (spec.n_slices, 17, 23)
+    assert (unslice_weights(planes, spec) == q).all()
+
+
+def test_canonical_digits_are_balanced():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.integers(-(2**30), 2**30, size=(64,)), jnp.int32)
+    planes = slice_weights(q, DEFAULT_SPEC)
+    assert int(planes.max()) <= 7 and int(planes.min()) >= -8
+
+
+def test_crs_identity_on_canonical():
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.integers(-(2**30), 2**30, size=(9, 5)), jnp.int32)
+    planes = slice_weights(q, DEFAULT_SPEC)
+    assert (crs(planes, DEFAULT_SPEC) == planes).all()
+
+
+def test_crs_resolves_carry_preserving_value():
+    spec = SliceSpec.uniform(7)
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.integers(-(2**27), 2**27, size=(11, 13)), jnp.int32)
+    planes = slice_weights(q, spec)
+    # load non-canonical carry into low planes
+    delta = jnp.zeros_like(planes, dtype=jnp.int32)
+    delta = delta.at[0].set(37).at[1].set(-29)
+    dirty = saturating_add(planes, delta, spec)
+    v_dirty = unslice_weights(dirty, spec)
+    clean = crs(dirty, spec)
+    assert (unslice_weights(clean, spec) == v_dirty).all()
+    # canonical afterwards
+    assert int(jnp.abs(clean).max()) <= 8
+
+
+def test_crs_overflow_rails():
+    spec = SliceSpec.uniform(8, n_slices=8)
+    lim = spec.canonical_limit
+    big = jnp.full((4,), lim, jnp.int32)
+    planes = slice_weights(big, spec)
+    pushed = saturating_add(planes, jnp.ones_like(planes, dtype=jnp.int32) * 100, spec)
+    out = crs(pushed, spec)
+    v = unslice_weights(out, spec)
+    assert (v == lim).all()  # railed at +max canonical, not wrapped
+
+
+def test_saturating_add_clips_per_plane():
+    spec = SliceSpec((4, 4, 4, 6, 6, 5, 5, 5))
+    planes = jnp.zeros((8, 3, 3), jnp.int8)
+    delta = jnp.full((8, 3, 3), 1000, jnp.int32)
+    out = saturating_add(planes, delta, spec)
+    # LSB-first plane maxima: 16,16,16,32,32,8,8,8
+    expect = np.array([16, 16, 16, 32, 32, 8, 8, 8])
+    assert (np.asarray(out)[:, 0, 0] == expect).all()
+
+
+def test_saturation_fraction():
+    spec = SliceSpec.uniform(5)
+    planes = jnp.zeros((spec.n_slices, 4, 4), jnp.int8).at[0, 0, 0].set(16)
+    frac = saturation_fraction(planes, spec)
+    assert frac.shape == (spec.n_slices,)
+    assert np.isclose(float(frac[0]), 1 / 16)
+    assert float(frac[1:].sum()) == 0.0
+
+
+def test_product_digits_value():
+    rng = np.random.default_rng(4)
+    p = jnp.asarray(rng.integers(-(2**30), 2**30, size=(31,)), jnp.int32)
+    d = product_digits(p, DEFAULT_SPEC)
+    val = sum(np.asarray(d[s], np.int64) * 16**s for s in range(8))
+    assert (val == np.asarray(p, np.int64)).all()
+
+
+def test_fixed_point_roundtrip():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(128,)) * 0.1, jnp.float32)
+    f = choose_frac_bits(x)
+    q = quantize(x, f)
+    back = dequantize(q, f)
+    # grid error + fp32 mantissa limit (32-bit fixed point carries more
+    # precision than float32 can round-trip)
+    tol = float(jnp.exp2(-f.astype(jnp.float32))) + float(jnp.max(jnp.abs(x))) * 2**-23
+    assert float(jnp.max(jnp.abs(back - x))) <= tol

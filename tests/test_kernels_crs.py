@@ -1,0 +1,57 @@
+"""Pallas CRS kernel vs pure-jnp oracle: shape/spec sweeps incl. rails."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import DEFAULT_SPEC, SliceSpec, saturating_add, slice_weights, unslice_weights
+from repro.kernels.crs import crs as crs_kernel
+from repro.kernels.crs.ref import crs_ref
+
+SPECS = [DEFAULT_SPEC, SliceSpec.uniform(6), SliceSpec((8, 7, 6, 5, 4, 4, 4, 4))]
+SHAPES = [(128, 128), (256, 384), (64, 96)]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name())
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+def test_crs_kernel_matches_ref(spec, shape):
+    rng = np.random.default_rng(hash((spec.name(), shape)) % 2**31)
+    m, n = shape
+    q = jnp.asarray(rng.integers(-(2**28), 2**28, size=(m, n)), jnp.int32)
+    planes = slice_weights(q, spec)
+    # load carries into the planes
+    delta = jnp.asarray(rng.integers(-9, 10, size=planes.shape), jnp.int32)
+    dirty = saturating_add(planes, delta, spec)
+    out_k = crs_kernel(dirty, spec, use_kernel=True, interpret=True)
+    out_r = crs_ref(dirty, spec)
+    assert (np.asarray(out_k) == np.asarray(out_r)).all()
+    # canonical afterwards
+    assert int(jnp.abs(out_k).max()) <= 8
+
+
+def test_crs_kernel_rails():
+    spec = SliceSpec.uniform(8)
+    lim = spec.canonical_limit
+    m = n = 128
+    planes = slice_weights(jnp.full((m, n), lim, jnp.int32), spec)
+    pushed = saturating_add(planes, jnp.full(planes.shape, 100, jnp.int32), spec)
+    out = crs_kernel(pushed, spec, use_kernel=True, interpret=True)
+    assert (np.asarray(unslice_weights(out, spec)) == lim).all()
+
+    neg = saturating_add(slice_weights(jnp.full((m, n), -lim, jnp.int32), spec),
+                         jnp.full(planes.shape, -100, jnp.int32), spec)
+    out = crs_kernel(neg, spec, use_kernel=True, interpret=True)
+    assert (np.asarray(unslice_weights(out, spec)) == -lim).all()
+
+
+def test_crs_kernel_value_preserving_in_range():
+    spec = DEFAULT_SPEC
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.integers(-(2**27), 2**27, size=(64, 128)), jnp.int32)
+    planes = slice_weights(q, spec)
+    delta = jnp.asarray(rng.integers(-5, 6, size=planes.shape), jnp.int32)
+    dirty = saturating_add(planes, delta, spec)
+    v_true = sum(np.asarray(dirty[s], np.int64) * 16**s for s in range(spec.n_slices))
+    out = crs_kernel(dirty, spec, use_kernel=True, interpret=True)
+    got = np.asarray(unslice_weights(out, spec), np.int64)
+    lim = spec.canonical_limit
+    assert (got == np.clip(v_true, -lim, lim)).all()

@@ -1,0 +1,75 @@
+"""Pallas sliced-OPA kernels vs pure-jnp oracle: shape/dtype sweeps.
+
+Kernels run in interpret mode on CPU (TPU is the lowering target).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import DEFAULT_SPEC, SliceSpec, slice_weights, unslice_weights
+from repro.kernels.sliced_opa import opa_deposit, opa_fused
+from repro.kernels.sliced_opa.ref import opa_deposit_ref, opa_fused_ref
+
+SPECS = [DEFAULT_SPEC, SliceSpec.uniform(5), SliceSpec((8, 7, 6, 5, 4, 4, 4, 4))]
+SHAPES = [(128, 128), (256, 384), (64, 512), (128, 96), (40, 72)]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name())
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+def test_opa_deposit_matches_ref(spec, shape):
+    rng = np.random.default_rng(hash((spec.name(), shape)) % 2**31)
+    m, n = shape
+    q = jnp.asarray(rng.integers(-(2**28), 2**28, size=(m, n)), jnp.int32)
+    planes = slice_weights(q, spec)
+    p_upd = jnp.asarray(rng.integers(-(2**22), 2**22, size=(m, n)), jnp.int32)
+    out_k = opa_deposit(planes, p_upd, spec, interpret=True)
+    out_r = opa_deposit_ref(planes, p_upd, spec)
+    assert out_k.dtype == jnp.int8
+    assert (np.asarray(out_k) == np.asarray(out_r)).all()
+
+
+@pytest.mark.parametrize("spec", SPECS[:2], ids=lambda s: s.name())
+@pytest.mark.parametrize("shape,tokens", [((128, 128), 512), ((256, 384), 1024), ((64, 256), 768)], ids=str)
+@pytest.mark.parametrize("in_dtype", [jnp.float32, jnp.bfloat16], ids=["f32", "bf16"])
+def test_opa_fused_matches_ref(spec, shape, tokens, in_dtype):
+    rng = np.random.default_rng(hash((spec.name(), shape, str(in_dtype))) % 2**31)
+    m, n = shape
+    q = jnp.asarray(rng.integers(-(2**28), 2**28, size=(m, n)), jnp.int32)
+    planes = slice_weights(q, spec)
+    x = jnp.asarray(rng.normal(size=(tokens, m)), in_dtype)
+    dh = jnp.asarray(rng.normal(size=(tokens, n)) * 1e-4, in_dtype)
+    scale = jnp.float32(2.0**20)
+    out_k = opa_fused(planes, x, dh, scale, spec, interpret=True)
+    out_r = opa_fused_ref(planes, x.astype(jnp.float32), dh.astype(jnp.float32), scale, spec)
+    # Tile-order float accumulation may shift a rounding boundary by 1 LSB.
+    vk = np.asarray(unslice_weights(out_k, spec), np.int64)
+    vr = np.asarray(unslice_weights(out_r, spec), np.int64)
+    assert np.abs(vk - vr).max() <= 1
+
+
+def test_opa_deposit_saturation_semantics():
+    """Kernel honors per-plane saturation exactly (not just values)."""
+    spec = SliceSpec((4, 4, 4, 6, 6, 5, 5, 5))
+    m = n = 128
+    planes = jnp.zeros((8, m, n), jnp.int8)
+    huge = jnp.full((m, n), 2**29, jnp.int32)
+    out = opa_deposit(planes, huge, spec, interpret=True)
+    ref = opa_deposit_ref(planes, huge, spec)
+    assert (np.asarray(out) == np.asarray(ref)).all()
+    caps = np.asarray(spec.plane_max)
+    assert (np.abs(np.asarray(out, np.int32)).max(axis=(1, 2)) <= caps).all()
+
+
+def test_opa_fused_is_incremental_over_token_tiles():
+    """Accumulation across the token grid dim must equal a single big matmul."""
+    spec = DEFAULT_SPEC
+    rng = np.random.default_rng(7)
+    m, n, t = 128, 128, 2048  # 4 token tiles at bt=512
+    planes = slice_weights(jnp.zeros((m, n), jnp.int32), spec)
+    x = jnp.asarray(rng.normal(size=(t, m)), jnp.float32)
+    dh = jnp.asarray(rng.normal(size=(t, n)) * 1e-5, jnp.float32)
+    out = opa_fused(planes, x, dh, jnp.float32(2.0**16), spec, interpret=True)
+    ref = opa_fused_ref(planes, x, dh, jnp.float32(2.0**16), spec)
+    vk = np.asarray(unslice_weights(out, spec), np.int64)
+    vr = np.asarray(unslice_weights(ref, spec), np.int64)
+    assert np.abs(vk - vr).max() <= 1

@@ -1,0 +1,49 @@
+"""Roofline analytic-model consistency: the parameter-count formulas that
+drive MODEL_FLOPS must match the real (abstract) initialized models, and
+the configs must land at their nominal public sizes."""
+import jax
+import pytest
+
+from benchmarks.roofline import analytic_cell, model_params
+from repro import configs
+from repro.models import lm
+
+NOMINAL_B = {
+    "zamba2-1.2b": 1.2,
+    "musicgen-large": 3.3,
+    "deepseek-v2-lite-16b": 15.7,
+    "granite-moe-1b-a400m": 1.3,
+    "xlstm-125m": 0.154,
+    "minicpm-2b": 2.7,
+    "gemma2-9b": 9.2,
+    "gemma-2b": 2.5,
+    "phi4-mini-3.8b": 3.8,
+    "chameleon-34b": 34.3,
+}
+
+
+@pytest.mark.parametrize("arch", list(configs.ALIASES))
+def test_analytic_params_match_model(arch):
+    cfg = configs.get(arch)
+    shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    actual = sum(l.size for l in jax.tree.leaves(shapes))
+    pred = model_params(cfg)["total"]
+    assert abs(actual - pred) / actual < 0.005, (actual, pred)
+    # and the config is at its nominal public size (within 12%)
+    assert abs(actual / 1e9 - NOMINAL_B[arch]) / NOMINAL_B[arch] < 0.12, actual / 1e9
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "deepseek-v2-lite-16b", "zamba2-1.2b"])
+def test_analytic_terms_positive_and_ordered(arch):
+    cfg = configs.get(arch)
+    for shape_name in configs.shape_cells(arch):
+        sh = configs.SHAPES[shape_name]
+        a = analytic_cell(cfg, sh, 256, microbatches=2)
+        assert a["useful_flops_dev"] > 0
+        assert a["actual_flops_dev"] >= a["useful_flops_dev"]
+        assert a["hbm_bytes_dev"] > 0 and a["link_bytes_dev"] > 0
+
+
+def test_moe_active_less_than_total():
+    p = model_params(configs.get("deepseek-v2-lite-16b"))
+    assert p["active"] < 0.35 * p["total"]  # 2.4B active of 15.7B (public)
