@@ -38,16 +38,9 @@ _RULES: list[tuple[str, tuple]] = [
 ]
 
 
-def _path_str(path) -> str:
-    parts = []
-    for k in path:
-        if hasattr(k, "key"):
-            parts.append(str(k.key))
-        elif hasattr(k, "idx"):
-            parts.append(str(k.idx))
-        elif hasattr(k, "name"):
-            parts.append(str(k.name))
-    return "/".join(parts)
+# canonical key-path formatter: shared with operand-eligibility decisions so
+# name rules and operandization can never disagree on a leaf's path
+from repro.models.common import path_str as _path_str  # noqa: E402
 
 
 def trailing_spec(path_str: str) -> tuple:
@@ -97,6 +90,34 @@ def param_specs(params, mesh=None) -> Any:
         return s
 
     return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def operand_grad_spec(path_str: str, wshape: tuple, mesh, mb_batch: int | None):
+    """Sharding for an outer-product gradient leaf ``OuterProductGrad(x, dh)``
+    of the weight at ``path_str`` with dense shape ``wshape`` [*stack, M, N].
+
+    The operands are activation-shaped: the token axis shards over the DP
+    axes (tokens flatten [B, S] with B leading, so B-divisibility carries
+    over), and the feature axis inherits the weight's own M/N rule — x
+    columns align with W rows, dh columns with W columns. Returns an
+    ``OuterProductGrad`` of PartitionSpecs (x: [*stack, T, M], dh:
+    [*stack, T, N]).
+    """
+    from repro.models.common import OuterProductGrad  # local: avoid cycles
+
+    base = leaf_spec(path_str, len(wshape))
+    if mesh is not None:
+        base = sanitize_spec(base, wshape, mesh)
+    base = tuple(base) + (None,) * (len(wshape) - len(tuple(base)))
+    stack = base[:-2]
+    m_ax, n_ax = base[-2], base[-1]
+    dp = None
+    if mesh is not None and mb_batch is not None:
+        dp = tuple(data_spec(mesh, mb_batch, 1))[0]
+    return OuterProductGrad(
+        x=P(*stack, dp, m_ax),
+        dh=P(*stack, dp, n_ax),
+    )
 
 
 def fsdp_spec(spec: P, shape: tuple, data_size: int, n_tail: int | None = None) -> P:

@@ -1,6 +1,16 @@
 """Shared kernel utilities."""
 from __future__ import annotations
 
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-compat shim: pltpu.CompilerParams (new name) falls back to
+    pltpu.TPUCompilerParams (pre-0.5 name). All three kernel families route
+    through this instead of touching the pltpu attribute directly."""
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
 
 def pick_block(dim: int, pref: int, granule: int = 128) -> int:
     """Largest block <= pref that divides dim, preferring hardware granules.

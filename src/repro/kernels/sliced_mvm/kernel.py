@@ -22,7 +22,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.slicing import LOGICAL_BITS, SliceSpec
-from repro.kernels.common import pick_block
+from repro.kernels.common import pick_block, tpu_compiler_params
 
 XBAR_ROWS = 128
 DEFAULT_BB = 8
@@ -89,7 +89,7 @@ def mvm_sliced(
         out_specs=pl.BlockSpec((bb, bn), lambda i, j, k: (i, j)),
         scratch_shapes=[pltpu.VMEM((bb, bn), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,3 +1,3 @@
-from .ops import opa_deposit, opa_fused
+from .ops import opa_deposit, opa_fused, opa_fused_update
 
-__all__ = ["opa_deposit", "opa_fused"]
+__all__ = ["opa_deposit", "opa_fused", "opa_fused_update"]

@@ -31,7 +31,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.slicing import LOGICAL_BITS, SliceSpec
-from repro.kernels.common import pick_block
+from repro.kernels.common import pick_block, tpu_compiler_params
 
 _RADIX_MASK = (1 << LOGICAL_BITS) - 1  # 15
 _HALF = 1 << (LOGICAL_BITS - 1)  # 8
@@ -85,7 +85,7 @@ def opa_deposit(
         out_specs=pl.BlockSpec((S, bm, bn), lambda i, j: (0, i, j)),
         out_shape=jax.ShapeDtypeStruct(planes.shape, jnp.int8),
         input_output_aliases={1: 0},
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,
@@ -94,8 +94,13 @@ def opa_deposit(
 
 
 def _opa_fused_kernel(
-    scale_ref, x_ref, dh_ref, planes_ref, out_ref, acc_ref, *, spec: SliceSpec, nk: int
+    scale_ref, x_ref, dh_ref, planes_ref, *rest, spec: SliceSpec, nk: int, stochastic: bool
 ):
+    if stochastic:
+        noise_ref, out_ref, acc_ref = rest
+    else:
+        noise_ref = None
+        out_ref, acc_ref = rest
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -113,7 +118,15 @@ def _opa_fused_kernel(
     @pl.when(k == nk - 1)
     def _finalize():
         lim = float(2**31 - 1)
-        p_q = jnp.clip(jnp.round(acc_ref[...] * scale_ref[0, 0]), -lim, lim).astype(jnp.int32)
+        y = acc_ref[...] * scale_ref[0, 0]
+        if stochastic:
+            # unbiased stochastic rounding: floor(y + u), u ~ U[0, 1) fed as
+            # a grid input (matches core.fixed_point.quantize bit-for-bit;
+            # in-kernel pltpu.prng generation is the recorded follow-up)
+            y = jnp.floor(y + noise_ref[...])
+        else:
+            y = jnp.round(y)
+        p_q = jnp.clip(y, -lim, lim).astype(jnp.int32)
         out_ref[...] = _deposit(planes_ref[...].astype(jnp.int32), p_q, spec)
 
 
@@ -129,39 +142,48 @@ def opa_fused(
     bn: int = DEFAULT_BN,
     bt: int = DEFAULT_BT,
     interpret: bool = False,
+    noise: jax.Array | None = None,
 ) -> jax.Array:
     """Fused ``planes <- deposit(planes, q(X^T dH * scale))``.
 
-    planes int8 [S,M,N]; x [T,M]; dh [T,N] (``-lr`` folded by caller);
-    scale f32 scalar (2**F).
+    planes int8 [S,M,N]; x [T,M]; dh [T,N] (``-lr`` folded by caller into
+    ``scale``); scale f32 scalar (±lr·2**F). ``noise`` f32 [M,N] in [0, 1)
+    switches the final quantization to unbiased stochastic rounding
+    (``floor(y + noise)``) — the gradient itself still never leaves VMEM.
     """
     S, M, N = planes.shape
     T = x.shape[0]
     assert x.shape == (T, M) and dh.shape == (T, N)
+    stochastic = noise is not None
     bm, bn, bt = pick_block(M, bm), pick_block(N, bn), pick_block(T, bt)
     nk = T // bt
     grid = (M // bm, N // bn, nk)
-    return pl.pallas_call(
-        functools.partial(_opa_fused_kernel, spec=spec, nk=nk),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0), memory_space=pltpu.SMEM),
-            pl.BlockSpec((bt, bm), lambda i, j, k: (k, i)),
-            pl.BlockSpec((bt, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((S, bm, bn), lambda i, j, k: (0, i, j)),
-        ],
-        out_specs=pl.BlockSpec((S, bm, bn), lambda i, j, k: (0, i, j)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        out_shape=jax.ShapeDtypeStruct(planes.shape, jnp.int8),
-        input_output_aliases={3: 0},
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-        name="panther_opa_fused",
-    )(
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i, j, k: (0, 0), memory_space=pltpu.SMEM),
+        pl.BlockSpec((bt, bm), lambda i, j, k: (k, i)),
+        pl.BlockSpec((bt, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((S, bm, bn), lambda i, j, k: (0, i, j)),
+    ]
+    args = [
         jnp.asarray(scale, jnp.float32).reshape(1, 1),
         x.astype(jnp.float32),
         dh.astype(jnp.float32),
         planes,
-    )
+    ]
+    if stochastic:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)))
+        args.append(noise.astype(jnp.float32))
+    return pl.pallas_call(
+        functools.partial(_opa_fused_kernel, spec=spec, nk=nk, stochastic=stochastic),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((S, bm, bn), lambda i, j, k: (0, i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct(planes.shape, jnp.int8),
+        input_output_aliases={3: 0},
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="panther_opa_fused",
+    )(*args)

@@ -9,6 +9,7 @@ execute the kernel body on CPU.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.slicing import SliceSpec
 from . import kernel as _k
@@ -50,3 +51,79 @@ def opa_fused(planes, x, dh, scale, spec: SliceSpec, *, use_kernel: bool | None 
     if not use_kernel:
         return _ref.opa_fused_ref(planes, x, dh, scale, spec)
     return _k.opa_fused(planes, x, dh, scale, spec=spec, interpret=interpret)
+
+
+def opa_fused_update(
+    planes,
+    x,
+    dh,
+    lr,
+    frac_bits,
+    spec: SliceSpec,
+    *,
+    stochastic: bool = False,
+    key=None,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+):
+    """The full PANTHER weight update from gradient *operands*.
+
+    Semantically ``opa_deposit(planes, quantize(-lr * x^T@dh, frac_bits,
+    stochastic, key))`` — but on the kernel path the ``[M, N]`` gradient is
+    formed tile-by-tile in VMEM and deposited in the same pass, never
+    reaching HBM. ``-lr`` and the ``2**F`` weight grid fold into the kernel's
+    scalar scale; stochastic rounding feeds the same ``U[0,1)`` draw the
+    dense path uses (grid-shaped HBM read; in-kernel pltpu.prng is the
+    recorded follow-up).
+
+    Shapes: planes int8 ``[S, *stack, M, N]``; x ``[*stack, T, M]``;
+    dh ``[*stack, T, N]``. Stacked (lax.scan layer-group) leaves run the
+    kernel per layer under a lax.scan; the stochastic draw uses the same
+    ``[*stack, M, N]`` shape/key as the dense path so both pipelines
+    consume identical noise.
+    """
+    use_kernel, interpret = _resolve(use_kernel, interpret)
+    if stochastic and key is None:
+        raise ValueError("stochastic rounding requires a PRNG key")
+    if not use_kernel:
+        return _ref.opa_fused_update_ref(
+            planes, x, dh, lr, frac_bits, spec, stochastic=stochastic, key=key
+        )
+
+    scale = -jnp.asarray(lr, jnp.float32) * jnp.exp2(jnp.asarray(frac_bits, jnp.float32))
+    noise = None
+    if stochastic:
+        noise = jax.random.uniform(key, planes.shape[1:], jnp.float32)
+
+    if planes.ndim == 3:
+        return _k.opa_fused(planes, x, dh, scale, spec=spec, interpret=interpret, noise=noise)
+
+    # stacked leaf [S, *stack, M, N]: one kernel launch per stacked layer
+    S = planes.shape[0]
+    M, N = planes.shape[-2:]
+    L = 1
+    for d in planes.shape[1:-2]:
+        L *= d
+    T = x.shape[-2]
+    p_l = jnp.moveaxis(planes.reshape(S, L, M, N), 1, 0)  # [L, S, M, N]
+    x_l = x.reshape(L, T, M)
+    dh_l = dh.reshape(L, T, N)
+
+    if noise is None:
+
+        def body(_, args):
+            p_i, x_i, dh_i = args
+            return None, _k.opa_fused(p_i, x_i, dh_i, scale, spec=spec, interpret=interpret)
+
+        _, out = jax.lax.scan(body, None, (p_l, x_l, dh_l))
+    else:
+        n_l = noise.reshape(L, M, N)
+
+        def body_n(_, args):
+            p_i, x_i, dh_i, n_i = args
+            return None, _k.opa_fused(
+                p_i, x_i, dh_i, scale, spec=spec, interpret=interpret, noise=n_i
+            )
+
+        _, out = jax.lax.scan(body_n, None, (p_l, x_l, dh_l, n_l))
+    return jnp.moveaxis(out, 0, 1).reshape(planes.shape)

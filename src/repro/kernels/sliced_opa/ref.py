@@ -4,11 +4,27 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import SliceSpec, opa_batched, product_digits, saturating_add
+from repro.core.fixed_point import quantize
 
 
 def opa_deposit_ref(planes, p_q, spec: SliceSpec):
     """planes int8 [S,M,N], p_q int32 [M,N] -> int8 [S,M,N]."""
     return opa_batched(planes, p_q, spec)
+
+
+def opa_fused_update_ref(planes, x, dh, lr, frac_bits, spec: SliceSpec, *,
+                         stochastic: bool = False, key=None):
+    """Operand-form OPA update oracle: exact mirror of the dense pipeline.
+
+    ``einsum(x, dh)`` in the operand dtype is the same contraction XLA's AD
+    emits for ``x @ w`` on the dense-grad path, and ``quantize`` is the same
+    call ``optim.panther`` makes there — so this oracle (and the CPU
+    dispatch of ``opa_fused_update``) is bit-identical to dense-grad +
+    ``opa_deposit``, including the stochastic-rounding draw for a given key.
+    """
+    g = jnp.einsum("...tm,...tn->...mn", x, dh)
+    upd = quantize(-lr * g.astype(jnp.float32), frac_bits, stochastic=stochastic, key=key)
+    return opa_batched(planes, upd, spec)
 
 
 def opa_fused_ref(planes, x, dh, scale, spec: SliceSpec):

@@ -1,5 +1,6 @@
 from . import attention, common, lm, mamba2, mlp, xlstm
-from .common import LMConfig, MLACfg, MoECfg, SSMCfg, XLSTMCfg, ZambaCfg
+from .common import (LMConfig, MLACfg, MoECfg, OuterProductGrad, SSMCfg,
+                     XbarWeight, XLSTMCfg, ZambaCfg)
 
 __all__ = [
     "attention",
@@ -9,6 +10,8 @@ __all__ = [
     "mlp",
     "xlstm",
     "LMConfig",
+    "OuterProductGrad",
+    "XbarWeight",
     "MLACfg",
     "MoECfg",
     "SSMCfg",

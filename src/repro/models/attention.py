@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import LMConfig, apply_rope, dense_init, rms_norm, rms_norm_init, softcap
+from .common import LMConfig, apply_rope, dense_init, rms_norm, rms_norm_init, softcap, xbar_linear
 from .mlp import mlp_apply, mlp_init
 
 
@@ -52,9 +52,9 @@ def attn_init(cfg: LMConfig, key) -> dict:
 def _qkv(cfg: LMConfig, p, h_in, positions):
     B, S, _ = h_in.shape
     hN, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = (h_in @ p["wq"].astype(h_in.dtype)).reshape(B, S, hN, hd)
-    k = (h_in @ p["wk"].astype(h_in.dtype)).reshape(B, S, kv, hd)
-    v = (h_in @ p["wv"].astype(h_in.dtype)).reshape(B, S, kv, hd)
+    q = xbar_linear(h_in, p["wq"], h_in.dtype).reshape(B, S, hN, hd)
+    k = xbar_linear(h_in, p["wk"], h_in.dtype).reshape(B, S, kv, hd)
+    v = xbar_linear(h_in, p["wv"], h_in.dtype).reshape(B, S, kv, hd)
     if cfg.qk_norm:
         q = rms_norm(p["qn"], q, cfg.norm_eps)
         k = rms_norm(p["kn"], k, cfg.norm_eps)
@@ -161,7 +161,7 @@ def attn_apply(cfg: LMConfig, p, h, positions, window=None, with_cache=False):
     x = rms_norm(p["ln"], h, cfg.norm_eps)
     q, k, v = _qkv(cfg, p, x, positions)
     o = _attend(cfg, q, k, v, window)
-    o = o.reshape(*o.shape[:2], -1) @ p["wo"].astype(h.dtype)
+    o = xbar_linear(o.reshape(*o.shape[:2], -1), p["wo"], h.dtype)
     if cfg.post_norm:
         o = rms_norm(p["post_ln"], o, cfg.norm_eps)
     out = h + o
@@ -209,7 +209,7 @@ def attn_decode(cfg: LMConfig, p, h, cache, pos, window=None):
         ok &= kpos > pos - window
     mask = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[None, :]
     o = _sdpa(cfg, q, _cache_load(k, q.dtype), _cache_load(v, q.dtype), mask)
-    o = o.reshape(*o.shape[:2], -1) @ p["wo"].astype(h.dtype)
+    o = xbar_linear(o.reshape(*o.shape[:2], -1), p["wo"], h.dtype)
     if cfg.post_norm:
         o = rms_norm(p["post_ln"], o, cfg.norm_eps)
     return h + o, {"k": k, "v": v}
@@ -273,11 +273,11 @@ def _mla_qkv(cfg: LMConfig, p, x, positions):
     m = cfg.mla
     B, S, _ = x.shape
     H = cfg.n_heads
-    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q = xbar_linear(x, p["wq"], x.dtype).reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
 
-    dkv = x @ p["w_dkv"].astype(x.dtype)  # [B,S,rank+rope]
+    dkv = xbar_linear(x, p["w_dkv"], x.dtype)  # [B,S,rank+rope]
     c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
     c_kv = rms_norm(p["kv_ln"], c_kv, cfg.norm_eps)
     k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,rope]
@@ -310,13 +310,13 @@ def mla_apply(cfg: LMConfig, p, h, positions, with_cache=False):
     q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
     B, S = x.shape[:2]
     H = cfg.n_heads
-    k_nope = (c_kv @ p["w_uk"].astype(x.dtype)).reshape(B, S, H, m.qk_nope_dim)
-    v = (c_kv @ p["w_uv"].astype(x.dtype)).reshape(B, S, H, m.v_head_dim)
+    k_nope = xbar_linear(c_kv, p["w_uk"], x.dtype).reshape(B, S, H, m.qk_nope_dim)
+    v = xbar_linear(c_kv, p["w_uv"], x.dtype).reshape(B, S, H, m.v_head_dim)
     q_eff = jnp.concatenate([q_nope, q_rope], axis=-1)
     k_eff = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_dim))], axis=-1)
     o = _attend(cfg, q_eff, k_eff.astype(q_eff.dtype), v, None)
     o = o.reshape(B, S, H * m.v_head_dim)
-    out = h + o @ p["wo"].astype(h.dtype)
+    out = h + xbar_linear(o, p["wo"], h.dtype)
     if with_cache:
         return out, {"c_kv": c_kv, "k_rope": k_rope}
     return out
@@ -333,7 +333,7 @@ def mla_decode(cfg: LMConfig, p, h, cache, pos):
     S = c_kv.shape[1]
     mask = jnp.where(jnp.arange(S) <= pos, 0.0, -1e30).astype(jnp.float32)[None, :]
     o = _mla_attend(cfg, p, q_nope, q_rope, c_kv.astype(x.dtype), k_rope.astype(x.dtype), mask, x.dtype)
-    return h + o @ p["wo"].astype(h.dtype), {"c_kv": c_kv, "k_rope": k_rope}
+    return h + xbar_linear(o, p["wo"], h.dtype), {"c_kv": c_kv, "k_rope": k_rope}
 
 
 def mla_cache_spec(cfg: LMConfig, batch: int, max_seq: int, dtype):

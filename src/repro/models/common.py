@@ -13,6 +13,235 @@ import jax
 import jax.numpy as jnp
 
 
+# --------------------- outer-product gradient operands ----------------------
+#
+# PANTHER's update is an in-crossbar outer product: the weight gradient is
+# never formed as a dense [M, N] matrix; the crossbar consumes the operands
+# (x, dh) directly. The TPU mapping mirrors that: crossbar-mapped linear
+# layers route through ``xbar_linear`` below, whose backward returns the
+# operands as the weight cotangent, and the optimizer feeds them straight to
+# the fused quantize+deposit kernel (``kernels.sliced_opa.opa_fused_update``).
+
+
+@jax.tree_util.register_pytree_node_class
+class OuterProductGrad:
+    """A weight cotangent in operand form: ``dW = x^T @ dh``, unmaterialized.
+
+    ``x``: ``[*stack, T, M]`` flattened-token layer inputs; ``dh``:
+    ``[*stack, T, N]`` output cotangents. Leading ``stack`` dims are lax.scan
+    layer stacks. Registered as a pytree node so it flows through
+    ``jax.grad``/``lax.scan``/``jit`` transparently; optimizer code treats a
+    whole node as one gradient leaf (``is_leaf=is_outer_product_grad``).
+    """
+
+    __slots__ = ("x", "dh")
+
+    def __init__(self, x, dh):
+        self.x = x
+        self.dh = dh
+
+    def tree_flatten(self):
+        return (self.x, self.dh), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        """Shape of the (virtual) dense gradient."""
+        return (*self.x.shape[:-2], self.x.shape[-1], self.dh.shape[-1])
+
+    @property
+    def tokens(self):
+        return self.x.shape[-2]
+
+    def materialize(self, dtype=None):
+        """Dense ``[*stack, M, N]`` gradient — debug/fallback only (this is
+        exactly the HBM materialization the fused path exists to avoid)."""
+        g = jnp.einsum("...tm,...tn->...mn", self.x, self.dh,
+                       preferred_element_type=jnp.float32)
+        return g if dtype is None else g.astype(dtype)
+
+    def scale_dh(self, c):
+        """dW is linear in dh: fold a scalar (e.g. 1/microbatches) into it."""
+        return OuterProductGrad(self.x, (self.dh.astype(jnp.float32) * c).astype(self.dh.dtype))
+
+    # token-chunk size for sq_norm: bounds the Gram intermediate to
+    # [SQ_NORM_CHUNK, T] instead of [T, T] for long token axes
+    SQ_NORM_CHUNK = 2048
+
+    def sq_norm(self):
+        """``||x^T dh||_F^2`` via the Gram identity ``<X X^T, dH dH^T>_F`` —
+        computable from the operands without ever forming the [M, N]
+        product. Cross-microbatch terms are exact because the token axis
+        concatenates accumulation tiles.
+
+        Flops are O(T^2 (M+N)) — inherent to the operand form. Memory is
+        bounded by chunking the Gram rows ([chunk, T] tiles) once T exceeds
+        ``SQ_NORM_CHUNK``; below it the direct [T, T] pair runs in one shot.
+        """
+        x = self.x.astype(jnp.float32)
+        dh = self.dh.astype(jnp.float32)
+        T = x.shape[-2]
+        C = self.SQ_NORM_CHUNK
+
+        def rows(x_i, dh_i):
+            # one row block against all columns: rows partition the (t, t')
+            # pair sum, so full + ragged-tail blocks cover it exactly
+            gx = jnp.einsum("...tm,...sm->...ts", x_i, x)
+            gh = jnp.einsum("...tn,...sn->...ts", dh_i, dh)
+            return jnp.sum(gx * gh)
+
+        if T <= C:
+            return rows(x, dh)
+
+        nc, rem = divmod(T, C)
+        xh, dhh = x[..., : nc * C, :], dh[..., : nc * C, :]
+        xc = jnp.moveaxis(xh.reshape(*x.shape[:-2], nc, C, x.shape[-1]), -3, 0)
+        dhc = jnp.moveaxis(dhh.reshape(*dh.shape[:-2], nc, C, dh.shape[-1]), -3, 0)
+
+        def row_chunk(acc, args):
+            x_i, dh_i = args  # [*stack, C, M] / [*stack, C, N]
+            return acc + rows(x_i, dh_i), None
+
+        total, _ = jax.lax.scan(row_chunk, jnp.zeros((), jnp.float32), (xc, dhc))
+        if rem:
+            total = total + rows(x[..., nc * C :, :], dh[..., nc * C :, :])
+        return total
+
+
+def is_outer_product_grad(x) -> bool:
+    return isinstance(x, OuterProductGrad)
+
+
+@jax.tree_util.register_pytree_node_class
+class XbarWeight:
+    """A crossbar-mapped weight as seen by the differentiated train step.
+
+    ``w`` is the transient dense compute copy (dequantized planes); ``g``
+    holds zero-filled operand *slots* ``OuterProductGrad(zeros[*stack,T,M],
+    zeros[*stack,T,N])`` whose only job is to give the custom-vjp backward a
+    matching cotangent structure to return the real operands through. The
+    cotangent of an ``XbarWeight`` is ``XbarWeight(zeros_like(w),
+    OuterProductGrad(x, dh))`` — the dense ``w`` cotangent is identically
+    zero (dead code after ``optim.panther`` strips it) and the planes update
+    reads only the operands.
+
+    Deliberately NO dense duck-typing (``.astype`` etc.): a model site that
+    consumes a wrapped weight without going through ``xbar_linear`` must fail
+    loudly at trace time rather than silently dropping its gradient.
+    """
+
+    __slots__ = ("w", "g")
+
+    def __init__(self, w, g):
+        self.w = w
+        self.g = g
+
+    def tree_flatten(self):
+        return (self.w, self.g), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.w.shape
+
+    @property
+    def ndim(self):
+        return self.w.ndim
+
+    @property
+    def dtype(self):
+        return self.w.dtype
+
+
+def path_str(path) -> str:
+    """'/'-join a jax.tree_util key path (the canonical leaf-path string used
+    by both operand-eligibility and the sharding name rules — keep single)."""
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+    return "/".join(parts)
+
+
+# Param-dict keys consumed through ``xbar_linear`` (each used exactly once
+# per layer application — operand cotangents do not sum, so multi-invocation
+# weights such as the zamba shared block or the tied LM head must stay on the
+# dense-grad path). ``embed`` is excluded: its cotangent is a scatter.
+OPERAND_LINEAR_KEYS = frozenset(
+    {"wq", "wk", "wv", "wo", "wi_gate", "wi_up", "w_dkv", "w_uk", "w_uv"}
+)
+
+
+def is_operand_path(path_str: str) -> bool:
+    """Whether the parameter at this '/'-joined path flows operand grads.
+
+    The leaf key alone is not enough: xlstm's mlstm block also names its
+    projections ``wq``/``wk``/``wv`` (at ``groups/<i>/wq``, no block
+    segment) but consumes them through plain matmuls — so eligibility also
+    requires the immediately enclosing ``attn``/``mlp`` subtree, which is
+    exactly where every ``xbar_linear`` call site lives. Excludes any path
+    under a ``shared`` subtree (zamba shared transformer, MoE shared
+    experts): those weights are applied more than once per step, and
+    outer-product operands from distinct call sites cannot be summed
+    leaf-wise."""
+    parts = path_str.split("/")
+    return (
+        parts[-1] in OPERAND_LINEAR_KEYS
+        and len(parts) >= 2
+        and parts[-2] in ("attn", "mlp")
+        and "shared" not in parts
+    )
+
+
+@jax.custom_vjp
+def _xbar_linear(x, ww):
+    return x @ ww.w.astype(x.dtype)
+
+
+def _xbar_linear_fwd(x, ww):
+    return x @ ww.w.astype(x.dtype), (x, ww.w)
+
+
+def _xbar_linear_bwd(res, dy):
+    x, w = res
+    dx = dy @ w.astype(dy.dtype).T
+    # Weight cotangent in operand form: the [M, N] product is never built;
+    # the dense-copy cotangent is identically zero (stripped by the trainer).
+    x2 = x.reshape(-1, x.shape[-1])
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    dw = XbarWeight(jnp.zeros_like(w), OuterProductGrad(x2, dy2))
+    return dx, dw
+
+
+_xbar_linear.defvjp(_xbar_linear_fwd, _xbar_linear_bwd)
+
+
+def xbar_linear(x, w, dtype=None):
+    """``x @ w`` where ``w`` may be a plain array or an ``XbarWeight``.
+
+    Plain arrays (inference, serving, the dense-grad fallback path) take the
+    ordinary matmul with dense AD. ``XbarWeight`` params take the custom-vjp
+    path whose weight cotangent is an ``OuterProductGrad`` — the crossbar
+    OPA's operand flow. ``dtype`` is the compute dtype on both branches (the
+    operand branch casts ``x``, so the two stay numerically interchangeable;
+    all model sites pass the activation dtype)."""
+    if isinstance(w, XbarWeight):
+        if dtype is not None:
+            x = x.astype(dtype)
+        return _xbar_linear(x, w)
+    return x @ w.astype(dtype if dtype is not None else x.dtype)
+
+
 @dataclasses.dataclass(frozen=True)
 class MoECfg:
     n_experts: int

@@ -22,6 +22,7 @@ from . import attention as att
 from . import mamba2 as m2
 from . import xlstm as xl
 from .common import LMConfig, dense_init, embed_init, rms_norm, rms_norm_init, softcap
+from .common import xbar_linear as common_xbar_linear
 from .mlp import mlp_apply, mlp_init, moe_apply, moe_aux_loss, moe_init
 
 
@@ -99,7 +100,7 @@ def _local_decode(cfg, p, h, cache, ctx):
     ok = (age >= 0) & (age > pos - cfg.window)  # window mask, not ring size
     mask = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[None, :]
     o = att._sdpa(cfg, q, att._cache_load(k, q.dtype), att._cache_load(v, q.dtype), mask)
-    o = o.reshape(*o.shape[:2], -1) @ p["attn"]["wo"].astype(h.dtype)
+    o = common_xbar_linear(o.reshape(*o.shape[:2], -1), p["attn"]["wo"], h.dtype)
     if cfg.post_norm:
         o = rms_norm(p["attn"]["post_ln"], o, cfg.norm_eps)
     h = h + o

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import LMConfig, dense_init, rms_norm, rms_norm_init
+from .common import LMConfig, dense_init, rms_norm, rms_norm_init, xbar_linear
 
 
 def _act(name: str):
@@ -28,8 +28,8 @@ def mlp_init(cfg: LMConfig, key, d_ff: int) -> dict:
 def mlp_apply(cfg: LMConfig, p, h):
     x = rms_norm(p["ln"], h, cfg.norm_eps)
     act = _act(cfg.act)
-    y = act(x @ p["wi_gate"].astype(h.dtype)) * (x @ p["wi_up"].astype(h.dtype))
-    y = y @ p["wo"].astype(h.dtype)
+    y = act(xbar_linear(x, p["wi_gate"], h.dtype)) * xbar_linear(x, p["wi_up"], h.dtype)
+    y = xbar_linear(y, p["wo"], h.dtype)
     if cfg.post_norm:
         y = rms_norm(p["post_ln"], y, cfg.norm_eps)
     return h + y

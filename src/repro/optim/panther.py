@@ -32,7 +32,14 @@ from repro.core import (
 )
 from repro.core.fixed_point import quantize
 from repro.kernels.crs import crs as crs_op
-from repro.kernels.sliced_opa import opa_deposit
+from repro.kernels.sliced_opa import opa_deposit, opa_fused_update
+from repro.models.common import (
+    OuterProductGrad,
+    XbarWeight,
+    is_operand_path,
+    is_outer_product_grad,
+    path_str as _leaf_path_str,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +53,11 @@ class PantherConfig:
     variant: str = "v2"  # informational: v1 (SGD), v2 (mini-batch), v3 (large-batch)
     margin_bits: int = 2  # headroom when choosing the per-tensor scale
     compute_dtype: Any = jnp.float32
+    # OPA kernel dispatch override (None = auto: Pallas on TPU, jnp ref on
+    # CPU). Tests force (True, True) to run the fused kernel in interpret
+    # mode; the ref path is bit-identical to dense-grad + opa_deposit.
+    opa_use_kernel: bool | None = None
+    opa_interpret: bool | None = None
 
 
 class SlicedTensor(NamedTuple):
@@ -69,11 +81,71 @@ def _crs_dispatch(planes, spec):
 
 
 def _is_crossbar_mapped(p, cfg: PantherConfig) -> bool:
+    # Crossbar eligibility is a property of the *matrix* dims [-2:]: leading
+    # dims are lax.scan layer stacks / MoE expert stacks (each slice is its
+    # own crossbar tile). Checking min over the whole shape would kick every
+    # few-layer stacked group off the planes ([2, M, N] has min 2), silently
+    # putting most of the model on the float path.
     return (
         p.ndim >= cfg.min_ndim
-        and min(p.shape) >= cfg.min_dim
+        and min(p.shape[-2:]) >= cfg.min_dim
         and p.dtype in (jnp.float32, jnp.bfloat16, jnp.float16)
     )
+
+
+def _grad_leaf(x) -> bool:
+    """Treat an OuterProductGrad node as ONE gradient leaf when flattening a
+    grads tree — keeps leaf indexing (and so per-leaf stochastic-rounding
+    keys) identical between the dense and operand pipelines."""
+    return is_outer_product_grad(x)
+
+
+def operandize(params, sliced, tokens: int, act_dtype):
+    """Wrap operand-eligible crossbar leaves of a materialized param tree in
+    ``XbarWeight`` so the model's backward returns ``OuterProductGrad``
+    weight cotangents instead of dense ``[M, N]`` matrices.
+
+    ``tokens`` is the flattened token count per differentiated forward (one
+    microbatch: ``B * S``); the zero slots give the custom-vjp backward a
+    matching cotangent structure to thread the real operands through.
+    Eligibility: the leaf has optimizer planes (``sliced`` non-None) and its
+    path passes ``models.common.is_operand_path`` (single-use matmul
+    weights only).
+    """
+
+    def wrap(path, p, s):
+        if s is None or not is_operand_path(_leaf_path_str(path)):
+            return p
+        stack = p.shape[:-2]
+        xz = jnp.zeros((*stack, tokens, p.shape[-2]), act_dtype)
+        dhz = jnp.zeros((*stack, tokens, p.shape[-1]), act_dtype)
+        return XbarWeight(p, OuterProductGrad(xz, dhz))
+
+    return jax.tree_util.tree_map_with_path(wrap, params, sliced)
+
+
+def strip_operand_grads(grads):
+    """Normalize a cotangent tree from an operandized step: ``XbarWeight``
+    cotangents (identically-zero dense leaf + real operands) become bare
+    ``OuterProductGrad`` leaves; everything else passes through. The dropped
+    zeros leaf is dead code XLA eliminates."""
+    return jax.tree.map(
+        lambda g: g.g if isinstance(g, XbarWeight) else g,
+        grads,
+        is_leaf=lambda x: isinstance(x, XbarWeight),
+    )
+
+
+def global_grad_norm(grads) -> jax.Array:
+    """Global L2 norm over a mixed dense/operand gradient tree. Operand
+    leaves use the Gram-matrix identity (no ``[M, N]`` materialization)."""
+    total = jnp.zeros((), jnp.float32)
+    for g in jax.tree.leaves(grads, is_leaf=_grad_leaf):
+        if is_outer_product_grad(g):
+            total = total + g.sq_norm()
+        else:
+            total = total + jnp.sum(g.astype(jnp.float32) ** 2)
+    return jnp.sqrt(total)
 
 
 def init(params, cfg: PantherConfig = PantherConfig()) -> PantherState:
@@ -123,13 +195,15 @@ def update(
     base_key = rng if rng is not None else jax.random.PRNGKey(0)
     base_key = jax.random.fold_in(base_key, step)
 
-    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_g, treedef = jax.tree.flatten(grads, is_leaf=_grad_leaf)
     leaves_p = treedef.flatten_up_to(params)
     leaves_s = treedef.flatten_up_to(state.sliced)
     leaves_m = treedef.flatten_up_to(state.momentum)
 
     new_p, new_s, new_m = [], [], []
     for i, (g, p, s, m) in enumerate(zip(leaves_g, leaves_p, leaves_s, leaves_m)):
+        if is_outer_product_grad(g) and (s is None or (cfg.momentum > 0 and m is not None)):
+            g = g.materialize()  # momentum/VFU buffers are dense by nature
         if cfg.momentum > 0 and m is not None:
             m = cfg.momentum * m + g
             g_eff = m
@@ -140,15 +214,26 @@ def update(
             new_s.append(None)
             new_m.append(m)
             continue
-        # OPA path: quantize -lr*g onto the weight grid, deposit, maybe CRS.
         key = jax.random.fold_in(base_key, i)
-        upd = quantize(
-            -lr * g_eff.astype(jnp.float32),
-            s.frac_bits,
-            stochastic=cfg.stochastic_round,
-            key=key,
-        )
-        planes = opa_deposit(s.planes, upd, cfg.spec)
+        if is_outer_product_grad(g_eff):
+            # operand path: X^T@dH -> quantize -> deposit in one fused pass
+            planes = opa_fused_update(
+                s.planes, g_eff.x, g_eff.dh, lr, s.frac_bits, cfg.spec,
+                stochastic=cfg.stochastic_round, key=key,
+                use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
+            )
+        else:
+            # dense path: quantize -lr*g onto the weight grid, deposit.
+            upd = quantize(
+                -lr * g_eff.astype(jnp.float32),
+                s.frac_bits,
+                stochastic=cfg.stochastic_round,
+                key=key,
+            )
+            planes = opa_deposit(
+                s.planes, upd, cfg.spec,
+                use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
+            )
         planes = jax.lax.cond(do_crs, lambda x: _crs_dispatch(x, cfg.spec), lambda x: x, planes)
         new_sliced = SlicedTensor(planes=planes, frac_bits=s.frac_bits)
         new_s.append(new_sliced)
@@ -204,6 +289,12 @@ def materialize_split(digital, sliced, cfg: PantherConfig = PantherConfig()):
 def update_split(grads, digital, sliced, step, lr, cfg: PantherConfig = PantherConfig(), rng=None):
     """One OPA step on the split state. Returns (digital', sliced').
 
+    Gradient leaves may be dense arrays (VFU path / non-operand crossbar
+    leaves: quantize + ``opa_deposit``) or ``OuterProductGrad`` operands
+    (``opa_fused_update``: the ``[M, N]`` gradient never materializes).
+    Leaf enumeration — and therefore each leaf's stochastic-rounding key —
+    is identical in both modes, so the two pipelines are bit-compatible.
+
     The dequantized new params are *not* returned — the next step
     re-materializes from the planes, so XLA dead-code-eliminates any unused
     dequantization (no redundant HBM traffic).
@@ -212,18 +303,30 @@ def update_split(grads, digital, sliced, step, lr, cfg: PantherConfig = PantherC
     base_key = rng if rng is not None else jax.random.PRNGKey(0)
     base_key = jax.random.fold_in(base_key, step)
 
-    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_g, treedef = jax.tree.flatten(grads, is_leaf=_grad_leaf)
     leaves_d = treedef.flatten_up_to(digital)
     leaves_s = treedef.flatten_up_to(sliced)
     new_d, new_s = [], []
     for i, (g, d, s) in enumerate(zip(leaves_g, leaves_d, leaves_s)):
         if s is None:
+            if is_outer_product_grad(g):
+                g = g.materialize()
             new_d.append((d - lr * g.astype(d.dtype)).astype(d.dtype))
             new_s.append(None)
             continue
         key = jax.random.fold_in(base_key, i)
-        upd = quantize(-lr * g.astype(jnp.float32), s.frac_bits, stochastic=cfg.stochastic_round, key=key)
-        planes = opa_deposit(s.planes, upd, cfg.spec)
+        if is_outer_product_grad(g):
+            planes = opa_fused_update(
+                s.planes, g.x, g.dh, lr, s.frac_bits, cfg.spec,
+                stochastic=cfg.stochastic_round, key=key,
+                use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
+            )
+        else:
+            upd = quantize(-lr * g.astype(jnp.float32), s.frac_bits, stochastic=cfg.stochastic_round, key=key)
+            planes = opa_deposit(
+                s.planes, upd, cfg.spec,
+                use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
+            )
         planes = jax.lax.cond(do_crs, lambda x: _crs_dispatch(x, cfg.spec), lambda x: x, planes)
         new_d.append(None)
         new_s.append(SlicedTensor(planes=planes, frac_bits=s.frac_bits))

@@ -5,6 +5,22 @@ Memory layout per crossbar-mapped weight: int8 planes [S, *w] (source of
 truth, 8 B/param at the default 8-slice spec — the paper's §6.3 configuration)
 + transient bf16 compute copy inside the step. No fp32 master copy exists —
 the planes ARE the master (32-bit fixed point, as in the accelerator).
+
+Gradient-operand pipeline (default, ``operand_grads=True``): single-use
+matmul weights (attention wq/wk/wv/wo, MLA projections, gated-MLP
+wi_gate/wi_up/wo) are wrapped in ``models.common.XbarWeight`` so the
+backward returns ``OuterProductGrad(x, dh)`` — the paper's in-crossbar
+outer-product operands — instead of a dense ``[M, N]`` matrix. The
+optimizer feeds the operands to ``kernels.sliced_opa.opa_fused_update``
+(quantize + deposit fused with the MXU contraction: the weight gradient
+never exists in HBM), microbatch accumulation concatenates per-microbatch
+token tiles through the gradient scan's stacked outputs, and the grad-norm
+metric comes from the Gram identity ``||X^T dH||_F^2 = <XX^T, dHdH^T>``.
+Remaining dense-grad leaves: embeddings / tied LM head (gather + multi-use
+cotangents), zamba/MoE ``shared`` weights (multi-invocation — operand
+cotangents do not sum), and conv/mamba2/xlstm layers (non-matmul
+structure); they take the seed quantize + ``opa_deposit`` path, which is
+bit-compatible per leaf.
 """
 from __future__ import annotations
 
@@ -16,8 +32,16 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed import sharding as shd
 from repro.models import lm
-from repro.models.common import LMConfig
+from repro.models.common import LMConfig, OuterProductGrad, XbarWeight, is_operand_path
 from repro.optim import PantherConfig, panther
+
+
+def _is_opg(x) -> bool:
+    return isinstance(x, OuterProductGrad)
+
+
+def _is_xw(x) -> bool:
+    return isinstance(x, XbarWeight)
 
 
 class TrainState(NamedTuple):
@@ -73,15 +97,29 @@ def train_state_specs(cfg: LMConfig, opt_cfg: PantherConfig, mesh=None, fsdp: bo
     )
 
 
-def grad_specs(cfg: LMConfig, opt_cfg: PantherConfig, mesh=None, fsdp: bool = False):
+def grad_specs(
+    cfg: LMConfig,
+    opt_cfg: PantherConfig,
+    mesh=None,
+    fsdp: bool = False,
+    operand: bool = False,
+    mb_batch: int | None = None,
+):
     """Gradient sharding (mirrors the stored planes minus the S dim) —
     pinning this keeps the f32 accumulation buffer ZeRO-sharded instead of
-    letting SPMD fall back to TP-only (which blows HBM on 34B models)."""
+    letting SPMD fall back to TP-only (which blows HBM on 34B models).
+
+    With ``operand=True``, operand-eligible crossbar leaves get an
+    ``OuterProductGrad`` of specs instead (token axis over the DP axes,
+    feature axes inheriting the weight's own M/N rules) — operands are
+    activation-shaped, so they never need the ZeRO transform."""
     shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
     dsize = mesh.shape["data"] if (fsdp and mesh is not None) else 1
 
     def spec(path, leaf):
         ps = shd._path_str(path)
+        if operand and panther._is_crossbar_mapped(leaf, opt_cfg) and is_operand_path(ps):
+            return shd.operand_grad_spec(ps, leaf.shape, mesh, mb_batch)
         base = shd.leaf_spec(ps, leaf.ndim)
         if mesh is not None:
             base = shd.sanitize_spec(base, leaf.shape, mesh)
@@ -114,6 +152,7 @@ def make_train_step(
     microbatches: int = 1,
     fsdp: bool = False,
     grad_dtype=jnp.float32,
+    operand_grads: bool = True,
 ):
     """Returns ``train_step(state, batch) -> (state', metrics)``.
 
@@ -122,26 +161,44 @@ def make_train_step(
     the [B,S,V] tensor). ``microbatches > 1`` expects the batch leaves
     pre-shaped [G, B/G, ...] and accumulates gradients over a lax.scan —
     the standard activation-memory lever (paper variant-2 semantics: one
-    weight update per global batch)."""
+    weight update per global batch).
+
+    ``operand_grads`` selects the fused outer-product pipeline (module
+    docstring); ``False`` is the seed dense-grad path, kept for
+    equivalence testing and as a fallback."""
     mb_batch = global_batch // microbatches if global_batch else None
-    gshard = None
+    gshard = pshard = None
+    gnamed = None
     if mesh is not None and global_batch is not None:
         act_spec = shd.activation_spec(mesh, mb_batch)
         shard_fn = lambda x: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, act_spec))
-        gspecs = grad_specs(cfg, opt_cfg, mesh=mesh, fsdp=fsdp)
-        gnamed = jax.tree.map(lambda s: NamedSharding(mesh, s), gspecs,
-                              is_leaf=lambda x: isinstance(x, P))
+        gspecs_d = grad_specs(cfg, opt_cfg, mesh=mesh, fsdp=fsdp)
+        if operand_grads:
+            gspecs = grad_specs(cfg, opt_cfg, mesh=mesh, fsdp=fsdp,
+                                operand=True, mb_batch=mb_batch)
+            # params keep the dense (ZeRO) layout for the compute copy and
+            # carry operand-slot specs alongside
+            pspecs = jax.tree.map(
+                lambda d, o: XbarWeight(d, o) if _is_opg(o) else d,
+                gspecs_d, gspecs, is_leaf=lambda x: isinstance(x, P),
+            )
+        else:
+            gspecs = pspecs = gspecs_d
+        _named = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                        is_leaf=lambda x: isinstance(x, P))
+        gnamed = _named(gspecs)
+        pnamed = _named(pspecs)
         gshard = lambda g: jax.tree.map(jax.lax.with_sharding_constraint, g, gnamed)
+        pshard = lambda p: jax.tree.map(jax.lax.with_sharding_constraint, p, pnamed)
     else:
         shard_fn = None
-    pshard = gshard  # params share the grad sharding (ZeRO storage layout)
 
     # per-layer weight constraints applied inside the scan bodies
     wshard = None
     if mesh is not None and global_batch is not None:
         wshard = []
         for gi, (name, count) in enumerate(cfg.pattern):
-            gsub = gspecs["groups"][gi]
+            gsub = pspecs["groups"][gi]
 
             def mk(gsub=gsub, count=count):
                 def f(p_i):
@@ -167,16 +224,26 @@ def make_train_step(
 
     def train_step(state: TrainState, batch):
         params = panther.materialize_split(state.digital, state.sliced, opt_cfg)
-        if gshard is not None:
+        if operand_grads:
+            # flattened tokens per differentiated forward (one microbatch)
+            inp = batch["inputs"]
+            if cfg.input_mode == "tokens":
+                tokens = inp.shape[-2] * inp.shape[-1]
+            else:
+                tokens = inp.shape[-3] * inp.shape[-2]
+            params = panther.operandize(params, state.sliced, tokens, cfg.dtype)
+        if pshard is not None:
             # keep the compute copy ZeRO-sharded in storage; the per-layer
             # all-gather happens inside the layer scan, not up front
             params = pshard(params)
 
         if microbatches == 1:
             loss_val, grads = jax.value_and_grad(loss_of)(params, batch)
+            if operand_grads:
+                grads = panther.strip_operand_grads(grads)
             if gshard is not None:
                 grads = gshard(grads)
-        else:
+        elif not operand_grads:
             # grad_dtype=bf16 halves the reduce-scatter bytes and the
             # accumulator footprint (§Perf collective-term lever; the OPA
             # deposit's stochastic rounding keeps the update unbiased)
@@ -195,6 +262,54 @@ def make_train_step(
             (lsum, gsum), _ = jax.lax.scan(mb_body, (jnp.zeros((), jnp.float32), gz), batch)
             loss_val = lsum / microbatches
             grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        else:
+            # Operand-mode accumulation: dense leaves sum into an f32 carry
+            # as before; operand leaves stream out as the scan's stacked ys
+            # and concatenate along the token axis afterwards — the
+            # accumulator for a crossbar weight is its token tiles, never an
+            # [M, N] buffer.
+            leaves_p, pdef = jax.tree.flatten(params, is_leaf=_is_xw)
+            gname_leaves = pdef.flatten_up_to(gnamed) if gshard is not None else None
+
+            def z(i, p):
+                buf = jnp.zeros(p.shape, grad_dtype)
+                if gname_leaves is not None:
+                    buf = jax.lax.with_sharding_constraint(buf, gname_leaves[i])
+                return buf
+
+            acc0 = pdef.unflatten(
+                [None if _is_xw(p) else z(i, p) for i, p in enumerate(leaves_p)]
+            )
+
+            def mb_body(carry, mb):
+                acc_l, acc_g = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                g = panther.strip_operand_grads(g)
+                if gshard is not None:
+                    g = gshard(g)
+                dense_g = jax.tree.map(lambda x: None if _is_opg(x) else x, g, is_leaf=_is_opg)
+                op_g = jax.tree.map(lambda x: x if _is_opg(x) else None, g, is_leaf=_is_opg)
+                acc_g = jax.tree.map(lambda a, x: a + x.astype(grad_dtype), acc_g, dense_g)
+                return (acc_l + l, acc_g), op_g
+
+            (lsum, gsum), ops_y = jax.lax.scan(mb_body, (jnp.zeros((), jnp.float32), acc0), batch)
+            loss_val = lsum / microbatches
+
+            def cat(o):
+                # [G, *stack, T, d] -> [*stack, G*T, d]: microbatch tiles
+                # become extra token tiles of one fused deposit
+                def m(a):
+                    a = jnp.moveaxis(a, 0, -3)
+                    return a.reshape(*a.shape[:-3], a.shape[-3] * a.shape[-2], a.shape[-1])
+
+                return OuterProductGrad(m(o.x), m(o.dh)).scale_dh(1.0 / microbatches)
+
+            ops_merged = jax.tree.map(cat, ops_y, is_leaf=_is_opg)
+            leaves_acc = pdef.flatten_up_to(gsum)
+            leaves_ops = pdef.flatten_up_to(ops_merged)
+            grads = pdef.unflatten(
+                [o if a is None else a / microbatches for a, o in zip(leaves_acc, leaves_ops)]
+            )
 
         lr = lr_schedule(state.step)
         new_digital, new_sliced = panther.update_split(
@@ -203,9 +318,7 @@ def make_train_step(
         new_state = TrainState(
             step=state.step + 1, digital=new_digital, sliced=new_sliced, rng=state.rng
         )
-        gnorm = jnp.sqrt(
-            sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
-        )
+        gnorm = panther.global_grad_norm(grads)
         return new_state, {"loss": loss_val, "lr": lr, "grad_norm": gnorm}
 
     return train_step

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for the PANTHER numerics invariants."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -26,7 +26,7 @@ def test_mvm_kernel_matches_ref(spec, mnb, adc_bits):
     q = jnp.asarray(rng.integers(-(2**26), 2**26, size=(m, n)), jnp.int32)
     planes = slice_weights(q, spec)
     x = jnp.asarray(rng.integers(-(2**14), 2**14, size=(b, m)), jnp.int32)
-    yk = np.asarray(mvm_sliced(planes, x, spec, adc_bits=adc_bits, interpret=True), np.float64)
+    yk = np.asarray(mvm_sliced(planes, x, spec, adc_bits=adc_bits, use_kernel=True, interpret=True), np.float64)
     yr = np.asarray(mvm_sliced_ref(planes, x, spec, adc_bits=adc_bits), np.float64)
     np.testing.assert_allclose(yk, yr, rtol=1e-6, atol=1e-3 * (1 + np.abs(yr).max()))
 
@@ -41,7 +41,7 @@ def test_ideal_adc_equals_dequant_matmul(mnb):
     q = jnp.asarray(rng.integers(-(2**26), 2**26, size=(m, n)), jnp.int32)
     planes = slice_weights(q, spec)
     x = jnp.asarray(rng.integers(-(2**14), 2**14, size=(b, m)), jnp.int32)
-    yk = np.asarray(mvm_sliced(planes, x, spec, adc_bits=None, interpret=True), np.float64)
+    yk = np.asarray(mvm_sliced(planes, x, spec, adc_bits=None, use_kernel=True, interpret=True), np.float64)
     ref = np.asarray(x, np.float64) @ np.asarray(q, np.float64)
     np.testing.assert_allclose(yk, ref, rtol=1e-6, atol=1e-5 * (1 + np.abs(ref).max()))
 
@@ -57,6 +57,6 @@ def test_adc_error_shrinks_with_resolution():
     exact = np.asarray(x, np.float64) @ np.asarray(q, np.float64)
     errs = []
     for adc in (8, 10, 12):
-        y = np.asarray(mvm_sliced(planes, x, spec, adc_bits=adc, interpret=True), np.float64)
+        y = np.asarray(mvm_sliced(planes, x, spec, adc_bits=adc, use_kernel=True, interpret=True), np.float64)
         errs.append(np.abs(y - exact).mean())
     assert errs[0] >= errs[1] >= errs[2]

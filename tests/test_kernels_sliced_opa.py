@@ -22,7 +22,7 @@ def test_opa_deposit_matches_ref(spec, shape):
     q = jnp.asarray(rng.integers(-(2**28), 2**28, size=(m, n)), jnp.int32)
     planes = slice_weights(q, spec)
     p_upd = jnp.asarray(rng.integers(-(2**22), 2**22, size=(m, n)), jnp.int32)
-    out_k = opa_deposit(planes, p_upd, spec, interpret=True)
+    out_k = opa_deposit(planes, p_upd, spec, use_kernel=True, interpret=True)
     out_r = opa_deposit_ref(planes, p_upd, spec)
     assert out_k.dtype == jnp.int8
     assert (np.asarray(out_k) == np.asarray(out_r)).all()
@@ -39,7 +39,7 @@ def test_opa_fused_matches_ref(spec, shape, tokens, in_dtype):
     x = jnp.asarray(rng.normal(size=(tokens, m)), in_dtype)
     dh = jnp.asarray(rng.normal(size=(tokens, n)) * 1e-4, in_dtype)
     scale = jnp.float32(2.0**20)
-    out_k = opa_fused(planes, x, dh, scale, spec, interpret=True)
+    out_k = opa_fused(planes, x, dh, scale, spec, use_kernel=True, interpret=True)
     out_r = opa_fused_ref(planes, x.astype(jnp.float32), dh.astype(jnp.float32), scale, spec)
     # Tile-order float accumulation may shift a rounding boundary by 1 LSB.
     vk = np.asarray(unslice_weights(out_k, spec), np.int64)
@@ -53,7 +53,7 @@ def test_opa_deposit_saturation_semantics():
     m = n = 128
     planes = jnp.zeros((8, m, n), jnp.int8)
     huge = jnp.full((m, n), 2**29, jnp.int32)
-    out = opa_deposit(planes, huge, spec, interpret=True)
+    out = opa_deposit(planes, huge, spec, use_kernel=True, interpret=True)
     ref = opa_deposit_ref(planes, huge, spec)
     assert (np.asarray(out) == np.asarray(ref)).all()
     caps = np.asarray(spec.plane_max)
@@ -68,7 +68,7 @@ def test_opa_fused_is_incremental_over_token_tiles():
     planes = slice_weights(jnp.zeros((m, n), jnp.int32), spec)
     x = jnp.asarray(rng.normal(size=(t, m)), jnp.float32)
     dh = jnp.asarray(rng.normal(size=(t, n)) * 1e-5, jnp.float32)
-    out = opa_fused(planes, x, dh, jnp.float32(2.0**16), spec, interpret=True)
+    out = opa_fused(planes, x, dh, jnp.float32(2.0**16), spec, use_kernel=True, interpret=True)
     ref = opa_fused_ref(planes, x, dh, jnp.float32(2.0**16), spec)
     vk = np.asarray(unslice_weights(out, spec), np.int64)
     vr = np.asarray(unslice_weights(ref, spec), np.int64)
