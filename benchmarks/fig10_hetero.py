@@ -19,7 +19,7 @@ from repro.core import SliceSpec
 from repro.optim import PantherConfig, panther
 
 from .common import emit
-from .fig9_slice_crs import _fwd, _loss, _mlp
+from .fig9_slice_crs import _fwd, _loss, _mlp, fidelity_loss
 
 # MSB->LSB configs (paper Fig 10 uses sixteen; we sweep a representative set)
 CONFIGS = [
@@ -64,8 +64,15 @@ def main(steps: int = 400, lr: float = 0.03):
             p, state = step(p, state)
         loss = float(_loss(p, batch))
         e = _adc_energy_factor(spec)
+        # serving-fidelity companion to the energy column: the trained planes
+        # read through the sliced-MVM engine at the priced ADC resolutions
+        adc = {a: fidelity_loss(p, state, cfg, batch, a) for a in (6, 9)}
         results[name] = (loss, e, spec.total_bits)
-        emit(f"fig10/{name}", 0.0, f"loss={loss:.4f};mvm_energy_x={e:.2f};total_bits={spec.total_bits}")
+        emit(
+            f"fig10/{name}", 0.0,
+            f"loss={loss:.4f};mvm_energy_x={e:.2f};total_bits={spec.total_bits};"
+            f"loss_adc6={adc[6]:.4f};loss_adc9={adc[9]:.4f}",
+        )
 
     paper_pick = results["44466555"][0]
     best_3bit = min(results[k][0] for k in results if "3" in k)

@@ -1,47 +1,150 @@
-"""Kernel microbenchmarks: sliced OPA / MVM (interpret-mode wall time on CPU
-is NOT a TPU estimate — the derived column carries the structural numbers:
-bytes touched per call and the HBM-traffic saving of the fused form)."""
+"""Kernel microbenchmarks: sliced OPA / MVM through the public ``ops``
+entry points with ``use_kernel=True`` (interpret mode off-TPU — wall time on
+CPU is NOT a TPU estimate; the derived columns carry the structural numbers:
+dots per crossbar tile, bytes touched, HBM savings).
+
+Emits the usual CSV rows AND writes ``BENCH_kernels.json`` — a
+machine-readable before/after record for the packed bit-plane MVM schedule:
+
+* ``us_packed`` / ``us_packed_ref`` — the new one-contraction-per-tile form
+  (Pallas dispatch and the vectorized jnp reference, same schedule);
+* ``us_looped_before`` — the seed per-(slice, bit) serial schedule
+  (``mvm_sliced_looped``, retained as the oracle);
+* ``dots_per_tile`` — jaxpr-counted MXU ops per crossbar tile for the packed
+  kernel body vs the seed's ``S * (io_bits - 1)``.
+
+``BENCH_SMOKE=1`` shrinks shapes/iters for the CI smoke job.
+"""
 from __future__ import annotations
 
+import json
+import os
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import DEFAULT_SPEC, slice_weights
-from repro.kernels.sliced_opa.ref import opa_deposit_ref, opa_fused_ref
-from repro.kernels.sliced_mvm.ref import mvm_sliced_ref
-import jax
+from repro.kernels.sliced_mvm import mvm_sliced
+from repro.kernels.sliced_mvm.kernel import tile_dot_count
+from repro.kernels.sliced_mvm.ref import mvm_sliced_looped
+from repro.kernels.sliced_opa import opa_deposit, opa_fused_update
 
 from .common import emit, time_jit
+
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+OUT_JSON = os.environ.get("BENCH_KERNELS_JSON", "BENCH_kernels.json")
+
+
+def _mvm_cases():
+    # (M, N, B, io_bits, adc_bits, transpose)
+    if SMOKE:
+        return [
+            (256, 256, 8, 16, 9, False),
+            (256, 256, 8, 16, None, False),
+            (256, 256, 8, 16, 9, True),
+            (256, 256, 64, 16, 9, False),  # batched MVM
+        ]
+    return [
+        (512, 512, 8, 16, 9, False),
+        (512, 512, 8, 16, None, False),
+        (512, 512, 8, 16, 9, True),       # MᵀVM (layer-gradient read)
+        (512, 512, 128, 16, 9, False),    # batched MVM (full MXU rows even unpacked)
+        (1024, 1024, 32, 16, 9, False),
+        (1024, 1024, 32, 16, 9, True),
+    ]
 
 
 def main():
     rng = np.random.default_rng(0)
     spec = DEFAULT_SPEC
-    for m, n, t in ((512, 512, 2048), (1024, 1024, 4096)):
+    iters, warmup = (2, 1) if SMOKE else (3, 1)
+    on_tpu = jax.default_backend() == "tpu"
+    interpret = not on_tpu
+    results: dict[str, dict] = {
+        "_meta": {
+            "backend": jax.default_backend(),
+            "interpret_mode": interpret,
+            "spec": spec.name(),
+            "smoke": SMOKE,
+        }
+    }
+
+    # ------------------------------ OPA ------------------------------------
+    opa_shapes = ((256, 256, 512),) if SMOKE else ((512, 512, 2048), (1024, 1024, 4096))
+    for m, n, t in opa_shapes:
         q = jnp.asarray(rng.integers(-(2**28), 2**28, size=(m, n)), jnp.int32)
         planes = slice_weights(q, spec)
         p_upd = jnp.asarray(rng.integers(-(2**20), 2**20, size=(m, n)), jnp.int32)
-        dep = jax.jit(lambda pl, pq: opa_deposit_ref(pl, pq, spec))
-        us = time_jit(dep, planes, p_upd, iters=3, warmup=1)
-        # HBM traffic: deposit reads planes+update, writes planes
+        us = time_jit(
+            jax.jit(lambda pl, pq: opa_deposit(pl, pq, spec, use_kernel=True, interpret=interpret)),
+            planes, p_upd, iters=iters, warmup=warmup,
+        )
         bytes_dep = planes.size + 4 * p_upd.size + planes.size
         emit(f"kernels/opa_deposit_{m}x{n}", us, f"hbm_bytes={bytes_dep}")
+        results[f"opa_deposit_{m}x{n}"] = {"us": us, "hbm_bytes": bytes_dep}
 
         x = jnp.asarray(rng.normal(size=(t, m)), jnp.float32)
         dh = jnp.asarray(rng.normal(size=(t, n)) * 1e-4, jnp.float32)
-        fus = jax.jit(lambda pl, xx, dd: opa_fused_ref(pl, xx, dd, jnp.float32(2.0**20), spec))
-        us = time_jit(fus, planes, x, dh, iters=3, warmup=1)
-        # fused avoids materializing the f32 gradient (4*m*n) in HBM
-        saved = 2 * 4 * m * n
+        lr, fbits = jnp.float32(1e-3), jnp.int32(20)
+        us = time_jit(
+            jax.jit(lambda pl, xx, dd: opa_fused_update(
+                pl, xx, dd, lr, fbits, spec, use_kernel=True, interpret=interpret
+            )),
+            planes, x, dh, iters=iters, warmup=warmup,
+        )
+        saved = 2 * 4 * m * n  # fused form never writes/reads the f32 gradient
         emit(f"kernels/opa_fused_{m}x{n}_T{t}", us, f"hbm_bytes_saved_vs_unfused={saved}")
+        results[f"opa_fused_{m}x{n}_T{t}"] = {"us": us, "hbm_bytes_saved_vs_unfused": saved}
 
-    m, n, b = 512, 512, 8
-    q = jnp.asarray(rng.integers(-(2**26), 2**26, size=(m, n)), jnp.int32)
-    planes = slice_weights(q, spec)
-    xq = jnp.asarray(rng.integers(-(2**14), 2**14, size=(b, m)), jnp.int32)
-    mv = jax.jit(lambda pl, xx: mvm_sliced_ref(pl, xx, spec, adc_bits=9))
-    us = time_jit(mv, planes, xq, iters=3, warmup=1)
-    emit(f"kernels/mvm_sliced_adc9_{m}x{n}", us, "bit_exact_fidelity_path")
+    # ------------------------------ MVM ------------------------------------
+    for m, n, b, io_bits, adc, transpose in _mvm_cases():
+        q = jnp.asarray(rng.integers(-(2**26), 2**26, size=(m, n)), jnp.int32)
+        planes = slice_weights(q, spec)
+        contract = n if transpose else m
+        hi = 2 ** (io_bits - 1) - 1  # full sign-magnitude input range
+        x = jnp.asarray(rng.integers(-hi, hi + 1, size=(b, contract)), jnp.int32)
+        kw = dict(io_bits=io_bits, adc_bits=adc, transpose=transpose)
+
+        us_kernel = time_jit(
+            jax.jit(lambda pl, xx: mvm_sliced(
+                pl, xx, spec, use_kernel=True, interpret=interpret, **kw)),
+            planes, x, iters=iters, warmup=warmup,
+        )
+        us_ref = time_jit(
+            jax.jit(lambda pl, xx: mvm_sliced(pl, xx, spec, use_kernel=False, **kw)),
+            planes, x, iters=iters, warmup=warmup,
+        )
+        us_before = time_jit(
+            jax.jit(lambda pl, xx: mvm_sliced_looped(pl, xx, spec, **kw)),
+            planes, x, iters=iters, warmup=warmup,
+        )
+        dots_packed = tile_dot_count(spec, io_bits, adc, transpose=transpose)
+        # the seed schedule streamed all io_bits-1 planes regardless of ADC
+        dots_seed = spec.n_slices * (io_bits - 1)
+        name = (
+            f"mvm_sliced_{'mtvm' if transpose else 'fwd'}_"
+            f"{m}x{n}_B{b}_adc{adc if adc is not None else 'ideal'}"
+        )
+        emit(
+            f"kernels/{name}", us_kernel,
+            f"ref_us={us_ref:.2f};looped_before_us={us_before:.2f};"
+            f"dots_per_tile={dots_packed}(seed={dots_seed});bit_exact_fidelity_path",
+        )
+        results[name] = {
+            "us_packed": us_kernel,
+            "us_packed_ref": us_ref,
+            "us_looped_before": us_before,
+            "ref_speedup_vs_looped": us_before / max(us_ref, 1e-9),
+            "dots_per_tile": dots_packed,
+            "dots_per_tile_seed": dots_seed,
+            "dots_per_tile_budget_S": spec.n_slices,
+        }
+        assert dots_packed <= spec.n_slices, (name, dots_packed)
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    emit("kernels/json", 0.0, f"wrote={OUT_JSON}")
 
 
 if __name__ == "__main__":

@@ -7,7 +7,19 @@ With ``adc_bits=None`` (ideal ADC) the result provably equals
 ``dequantize(planes) @ x`` — that algebraic identity is what lets production
 training run the MVM on the MXU (``mvm_fast``) while remaining faithful.
 
-The MᵀVM (layer-gradient) op is the same crossbar driven from the columns.
+The compute schedule is *bit-plane packed*: the ``io_bits - 1``
+sign·magnitude bit planes of the input are extracted once (``bit_planes``)
+and contracted against all slices in one einsum, the ADC clip/quantize
+applies elementwise on the ``[T, ..., S, N]`` block, and the digital
+shift-and-add collapses into a single weighted contraction with the static
+``2^t · 16^s`` scale grid. This replaces the seed's ``S·(io_bits-1)``
+serial inner-loop matmuls with one full-width contraction — same numbers,
+MXU-shaped. At ``adc_bits=None`` the bit-stream dimension is skipped
+entirely (streaming is exact, so ``x_q @ plane_s`` per slice is identical).
+
+The MᵀVM (layer-gradient) op is the same crossbar driven from the columns:
+``transpose=True`` contracts over the column dimension with the column count
+as the ADC full-scale denominator.
 """
 from __future__ import annotations
 
@@ -17,13 +29,36 @@ import jax.numpy as jnp
 from .slicing import LOGICAL_BITS, DEFAULT_SPEC, SliceSpec, dequantize_planes
 
 
-def _adc(col_sum: jax.Array, full_scale: float, adc_bits: int | None) -> jax.Array:
-    """SAR-ADC model: uniform mid-tread quantizer over ±full_scale."""
+def _adc(col_sum: jax.Array, full_scale, adc_bits: int | None) -> jax.Array:
+    """SAR-ADC model: uniform mid-tread quantizer over ±full_scale.
+
+    ``full_scale`` may be a scalar or an array broadcastable against
+    ``col_sum`` (the packed schedule passes one full-scale per slice).
+    """
     if adc_bits is None:
         return col_sum.astype(jnp.float32)
+    full_scale = jnp.asarray(full_scale, jnp.float32)
     step = (2.0 * full_scale) / (2**adc_bits)
     q = jnp.round(col_sum.astype(jnp.float32) / step) * step
     return jnp.clip(q, -full_scale, full_scale)
+
+
+def bit_planes(x_q: jax.Array, io_bits: int = 16) -> jax.Array:
+    """Signed magnitude bit planes of ``x_q``: int32 ``[io_bits-1, *x.shape]``
+    with plane ``t`` equal to ``((|x| >> t) & 1) * sign(x)`` — the per-cycle
+    row pulses of the paper's bit-streamed MVM, extracted once."""
+    sx = jnp.sign(x_q).astype(jnp.int32)
+    mx = jnp.abs(x_q).astype(jnp.int32)
+    t = jnp.arange(io_bits - 1, dtype=jnp.int32).reshape((io_bits - 1,) + (1,) * x_q.ndim)
+    return ((mx[None] >> t) & 1) * sx[None]
+
+
+def shift_add_scales(spec: SliceSpec, io_bits: int = 16) -> jax.Array:
+    """Static digital shift-and-add weight grid ``[io_bits-1, S]``:
+    ``scale[t, s] = 2^t * 16^s``."""
+    t = jnp.exp2(jnp.arange(io_bits - 1, dtype=jnp.float32))
+    s = jnp.exp2(LOGICAL_BITS * jnp.arange(spec.n_slices, dtype=jnp.float32))
+    return t[:, None] * s[None, :]
 
 
 def mvm_sliced(
@@ -34,31 +69,29 @@ def mvm_sliced(
     adc_bits: int | None = None,
     transpose: bool = False,
 ) -> jax.Array:
-    """Bit-exact sliced MVM. planes int8 [S, M, N]; x_q int [M] (or [N] when
-    ``transpose``). Returns float32 accumulation on the product grid
-    (caller rescales by input/weight scales)."""
-    sx = jnp.sign(x_q).astype(jnp.int32)
-    mx = jnp.abs(x_q).astype(jnp.int32)
-    mag_bits = io_bits - 1
-    n_rows = planes.shape[1] if not transpose else planes.shape[2]
+    """Bit-exact sliced MVM. planes int8 [S, M, N]; x_q int [..., M] (or
+    [..., N] when ``transpose``). Returns float32 accumulation on the product
+    grid (caller rescales by input/weight scales). Leading dims of ``x_q``
+    are batch."""
+    w = planes.astype(jnp.float32)
+    if transpose:
+        w = jnp.swapaxes(w, 1, 2)
+    n_rows = w.shape[1]
+    full_scale = n_rows * jnp.asarray(spec.plane_max, jnp.float32)  # [S]
 
-    out = None
-    for s in range(spec.n_slices):
-        w = planes[s].astype(jnp.int32)
-        if transpose:
-            w = w.T
-        m_s = spec.plane_max[s]
-        full_scale = float(n_rows * m_s)
-        acc_s = None
-        for t in range(mag_bits):
-            bt = ((mx >> t) & 1) * sx  # [rows]
-            col = bt @ w  # analog column current (int32 exact here)
-            col = _adc(col, full_scale, adc_bits)
-            term = col * (2.0**t)
-            acc_s = term if acc_s is None else acc_s + term
-        term = acc_s * float(2 ** (LOGICAL_BITS * s))
-        out = term if out is None else out + term
-    return out
+    if adc_bits is None:
+        # Ideal ADC: bit-streaming is exact, so contract the full input per
+        # slice directly (skips the T bit-plane dimension entirely).
+        y = jnp.einsum(
+            "...m,smn->...sn", x_q.astype(jnp.float32), w, preferred_element_type=jnp.float32
+        )
+        s_scale = jnp.exp2(LOGICAL_BITS * jnp.arange(spec.n_slices, dtype=jnp.float32))
+        return jnp.einsum("...sn,s->...n", y, s_scale)
+
+    bp = bit_planes(x_q, io_bits).astype(jnp.float32)  # [T, ..., M]
+    cols = jnp.einsum("t...m,smn->t...sn", bp, w, preferred_element_type=jnp.float32)
+    cols = _adc(cols, full_scale[:, None], adc_bits)  # per-slice ADC, elementwise
+    return jnp.einsum("t...sn,ts->...n", cols, shift_add_scales(spec, io_bits))
 
 
 def mvm_fast(

@@ -30,7 +30,7 @@ _RULES: list[tuple[str, tuple]] = [
     (r"(experts_gate|experts_up|experts_down)$", (MODEL, None, None)),
     (r"router$", (None, None)),
     # column-parallel (output dim sharded)
-    (r"(wq|wk|wv|wi_gate|wi_up|w_up|w_gate|w_z|w_x|w_dt|ffn_up|mlp_up|w_uk|w_uv)$", (None, MODEL)),
+    (r"(wqkv|wq|wk|wv|wi_gate|wi_up|w_up|w_gate|w_z|w_x|w_dt|ffn_up|mlp_up|w_uk|w_uv)$", (None, MODEL)),
     # row-parallel (input dim sharded)
     (r"(wo|w_down|w_out|ffn_down|mlp_down)$", (MODEL, None)),
     # small / replicated

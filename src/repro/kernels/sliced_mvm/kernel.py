@@ -3,11 +3,36 @@
 The logical [M, N] weight is blocked into (xbar_rows=128)-row tiles — the
 physical crossbar height — so the ADC quantization boundary in the kernel is
 exactly the hardware's. Grid = (B/bb, N/bn, M/128) with the row-tile dim
-innermost ("arbitrary"): the f32 accumulator lives in VMEM scratch across row
-tiles and is written out once.
+innermost ("arbitrary"): the f32 accumulator lives in VMEM scratch across
+contraction tiles and is written out once.
 
-Per (slice s, bit t) the analog column current is ``sign_bit_plane @ W_s``;
-ADC clips/quantizes it; the digital shift-and-add applies ``2**(t + 4s)``.
+Packed schedule (per crossbar tile, see ``_tile_compute``):
+
+1. **Bit-plane packing** — the ``io_bits-1`` sign·magnitude planes of the
+   int input block are extracted once and stacked into a single
+   ``[(io_bits-1)·bb, 128]`` MXU operand (the seed kernel re-derived each
+   plane per slice and issued a ``[bb, 128]`` matmul per (slice, bit):
+   ``S·(io_bits-1)`` = 120 dots at ~6% MXU row utilization).
+2. **Slice-stacked weights** — the S digit planes concatenate along columns
+   into ``[128, S·bn]``, so ONE ``dot_general`` computes every (bit, slice)
+   analog column current of the tile.
+3. **ADC** — clip/quantize applies elementwise on the ``[(io_bits-1)·bb,
+   S·bn]`` block with the per-slice full scale laid out along the stacked
+   column blocks.
+4. **Digital shift-and-add** — the static ``2^t`` weights fold over the
+   row blocks and ``16^s`` over the column blocks (cheap VPU adds), then the
+   tile lands in the f32 accumulator.
+
+``adc_bits=None`` takes an in-kernel ideal-ADC branch: bit-streaming is
+exact under an ideal ADC, so the kernel contracts ``x_q`` against the
+slice-stacked planes directly (one dot, no bit dimension) — provably equal
+to the streamed form, asserted at the ops level and in tests.
+
+``transpose=True`` is the MᵀVM (layer-gradient) read: the same crossbar
+driven from the columns. The contraction runs over 128-column tiles of the
+logical matrix with the identical packed schedule (the ADC full scale stays
+``128·plane_max`` — square crossbars).
+
 This kernel is the fidelity path (and the Fig-9/10 engine); production
 training uses the lossless dequantize->MXU fast path, which equals this
 kernel at adc_bits=None (asserted in tests).
@@ -21,6 +46,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.mvm import _adc
 from repro.core.slicing import LOGICAL_BITS, SliceSpec
 from repro.kernels.common import pick_block, tpu_compiler_params
 
@@ -29,37 +55,98 @@ DEFAULT_BB = 8
 DEFAULT_BN = 256
 
 
-def _mvm_kernel(x_ref, planes_ref, out_ref, acc_ref, *, spec, io_bits, adc_bits, nk):
+def _tile_compute(xq, w, *, spec: SliceSpec, io_bits: int, adc_bits: int | None,
+                  transpose: bool = False):
+    """Product-grid contribution of one crossbar tile (pure array -> array;
+    shared by the Pallas kernel body and the jaxpr dot-count check).
+
+    xq int32 [bb, 128] input block; w int8 [S, 128, bn] digit-plane block
+    ([S, bn, 128] when ``transpose``). Returns f32 [bb, bn].
+    """
+    S = spec.n_slices
+    if transpose:
+        w_cat = jnp.concatenate([w[s].astype(jnp.float32) for s in range(S)], axis=0)
+        dims = (((1,), (1,)), ((), ()))  # [*, 128] x [S*bn, 128] -> [*, S*bn]
+        bn = w.shape[1]
+    else:
+        w_cat = jnp.concatenate([w[s].astype(jnp.float32) for s in range(S)], axis=1)
+        dims = (((1,), (0,)), ((), ()))  # [*, 128] x [128, S*bn] -> [*, S*bn]
+        bn = w.shape[2]
+
+    if adc_bits is None:
+        # ideal ADC: bit-streaming is exact -> contract the full input once
+        z = jax.lax.dot_general(
+            xq.astype(jnp.float32), w_cat, dims, preferred_element_type=jnp.float32
+        )  # [bb, S*bn]
+    else:
+        bb = xq.shape[0]
+        mag_bits = io_bits - 1
+        sx = jnp.sign(xq)
+        mx = jnp.abs(xq)
+        # bit-plane packed operand, extracted once per tile: [(io_bits-1)*bb, 128]
+        xp = jnp.concatenate(
+            [((mx >> t) & 1) * sx for t in range(mag_bits)], axis=0
+        ).astype(jnp.float32)
+        y = jax.lax.dot_general(
+            xp, w_cat, dims, preferred_element_type=jnp.float32
+        )  # [(io_bits-1)*bb, S*bn] — every (bit, slice) column current at once
+        # elementwise ADC (shared SAR model from core.mvm) with the per-slice
+        # full scale laid out along the stacked column blocks
+        fs = jnp.concatenate(
+            [jnp.full((1, bn), float(XBAR_ROWS * spec.plane_max[s]), jnp.float32)
+             for s in range(S)],
+            axis=1,
+        )
+        y = _adc(y, fs, adc_bits)
+        # shift-and-add, bit half: fold 2^t over the stacked row blocks
+        z = y[0:bb]
+        for t in range(1, mag_bits):
+            z = z + y[t * bb:(t + 1) * bb] * float(2**t)
+
+    # shift-and-add, slice half: fold 16^s over the stacked column blocks
+    acc = z[:, 0:bn]
+    for s in range(1, S):
+        acc = acc + z[:, s * bn:(s + 1) * bn] * float(2 ** (LOGICAL_BITS * s))
+    return acc
+
+
+def tile_dot_count(spec: SliceSpec, io_bits: int = 16, adc_bits: int | None = None,
+                   transpose: bool = False, bb: int = DEFAULT_BB, bn: int = DEFAULT_BN) -> int:
+    """Number of MXU ``dot_general`` ops the kernel issues per crossbar tile
+    (jaxpr-counted on the exact tile body the kernel runs). The packed
+    schedule is 1; the seed schedule was ``S * (io_bits - 1)``."""
+    wshape = (spec.n_slices, bn, XBAR_ROWS) if transpose else (spec.n_slices, XBAR_ROWS, bn)
+    fn = functools.partial(
+        _tile_compute, spec=spec, io_bits=io_bits, adc_bits=adc_bits, transpose=transpose
+    )
+    jaxpr = jax.make_jaxpr(fn)(
+        jnp.zeros((bb, XBAR_ROWS), jnp.int32), jnp.zeros(wshape, jnp.int8)
+    )
+    return sum(1 for eqn in jaxpr.jaxpr.eqns if eqn.primitive.name == "dot_general")
+
+
+def _mvm_kernel(x_ref, planes_ref, out_ref, acc_ref, *, spec, io_bits, adc_bits, nk,
+                transpose):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    xq = x_ref[...].astype(jnp.int32)  # [bb, 128]
-    sx = jnp.sign(xq)
-    mx = jnp.abs(xq)
-    acc = acc_ref[...]
-    for s in range(spec.n_slices):
-        w = planes_ref[s].astype(jnp.float32)  # [128, bn]
-        full_scale = float(XBAR_ROWS * spec.plane_max[s])
-        for t in range(io_bits - 1):
-            bt = (((mx >> t) & 1) * sx).astype(jnp.float32)
-            col = jax.lax.dot_general(
-                bt, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-            )
-            if adc_bits is not None:
-                step = (2.0 * full_scale) / (2**adc_bits)
-                col = jnp.clip(jnp.round(col / step) * step, -full_scale, full_scale)
-            acc = acc + col * float(2**t * 2 ** (LOGICAL_BITS * s))
-    acc_ref[...] = acc
+    acc_ref[...] += _tile_compute(
+        x_ref[...].astype(jnp.int32), planes_ref[...],
+        spec=spec, io_bits=io_bits, adc_bits=adc_bits, transpose=transpose,
+    )
 
     @pl.when(k == nk - 1)
     def _finalize():
         out_ref[...] = acc_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "io_bits", "adc_bits", "bb", "bn", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "io_bits", "adc_bits", "bb", "bn", "interpret", "transpose"),
+)
 def mvm_sliced(
     planes: jax.Array,
     x_q: jax.Array,
@@ -70,28 +157,40 @@ def mvm_sliced(
     bb: int = DEFAULT_BB,
     bn: int = DEFAULT_BN,
     interpret: bool = False,
+    transpose: bool = False,
 ) -> jax.Array:
-    """planes int8 [S,M,N]; x_q int32 [B,M] -> f32 [B,N] (product-grid)."""
+    """planes int8 [S,M,N]; x_q int32 [B,M] -> f32 [B,N] (product-grid).
+    With ``transpose``: x_q int32 [B,N] -> f32 [B,M] (the MᵀVM read)."""
     S, M, N = planes.shape
     B = x_q.shape[0]
-    assert x_q.shape == (B, M)
-    assert M % XBAR_ROWS == 0, f"M={M} must be a multiple of crossbar rows ({XBAR_ROWS})"
-    bb, bn = pick_block(B, bb, granule=8), pick_block(N, bn)
-    nk = M // XBAR_ROWS
-    grid = (B // bb, N // bn, nk)
+    contract, out_dim = (N, M) if transpose else (M, N)
+    assert x_q.shape == (B, contract)
+    assert contract % XBAR_ROWS == 0, (
+        f"contraction dim {contract} must be a multiple of crossbar rows ({XBAR_ROWS})"
+    )
+    bb, bn = pick_block(B, bb, granule=8), pick_block(out_dim, bn)
+    nk = contract // XBAR_ROWS
+    grid = (B // bb, out_dim // bn, nk)
+    if transpose:
+        plane_spec = pl.BlockSpec((S, bn, XBAR_ROWS), lambda i, j, k: (0, j, k))
+    else:
+        plane_spec = pl.BlockSpec((S, XBAR_ROWS, bn), lambda i, j, k: (0, k, j))
     return pl.pallas_call(
-        functools.partial(_mvm_kernel, spec=spec, io_bits=io_bits, adc_bits=adc_bits, nk=nk),
+        functools.partial(
+            _mvm_kernel, spec=spec, io_bits=io_bits, adc_bits=adc_bits, nk=nk,
+            transpose=transpose,
+        ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bb, XBAR_ROWS), lambda i, j, k: (i, k)),
-            pl.BlockSpec((S, XBAR_ROWS, bn), lambda i, j, k: (0, k, j)),
+            plane_spec,
         ],
         out_specs=pl.BlockSpec((bb, bn), lambda i, j, k: (i, j)),
         scratch_shapes=[pltpu.VMEM((bb, bn), jnp.float32)],
-        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, out_dim), jnp.float32),
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-        name="panther_mvm_sliced",
+        name="panther_mvm_sliced_t" if transpose else "panther_mvm_sliced",
     )(x_q, planes)

@@ -1,4 +1,12 @@
-"""Public entry point for bit-exact sliced MVM (fidelity path)."""
+"""Public entry point for bit-exact sliced MVM / MᵀVM (fidelity path).
+
+Dispatch policy (``use_kernel=None`` → auto): the Mosaic kernel engages on
+TPU; on CPU the vectorized jnp reference runs — same packed bit-plane
+schedule, value-equivalent (tested). ``transpose=True`` is the MᵀVM
+(layer-gradient) read; it has a first-class kernel path (the seed fell back
+to a Python-loop reference). Shapes whose contraction dim is not a multiple
+of the 128-row crossbar fall back to the (ragged-capable) reference.
+"""
 from __future__ import annotations
 
 import jax
@@ -15,6 +23,7 @@ def mvm_sliced(
     *,
     io_bits: int = 16,
     adc_bits: int | None = None,
+    transpose: bool = False,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
 ):
@@ -23,8 +32,12 @@ def mvm_sliced(
         use_kernel = on_tpu
     if interpret is None:
         interpret = not on_tpu
-    if not use_kernel:
-        return _ref.mvm_sliced_ref(planes, x_q, spec, io_bits, adc_bits)
+    contract = planes.shape[2] if transpose else planes.shape[1]
+    if not use_kernel or contract % _k.XBAR_ROWS != 0:
+        return _ref.mvm_sliced_ref(
+            planes, x_q, spec, io_bits, adc_bits, transpose=transpose
+        )
     return _k.mvm_sliced(
-        planes, x_q, spec=spec, io_bits=io_bits, adc_bits=adc_bits, interpret=interpret
+        planes, x_q, spec=spec, io_bits=io_bits, adc_bits=adc_bits,
+        interpret=interpret, transpose=transpose,
     )

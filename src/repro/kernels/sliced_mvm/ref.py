@@ -4,12 +4,30 @@ Models the physical 128x128 crossbar tiling: the logical [M, N] matrix is cut
 into 128-row tiles; each tile's analog column sum passes through its own ADC
 (per slice, per input-bit cycle) before the digital shift-and-add combines
 bits, slices, and row-tiles.
+
+Two implementations:
+
+``mvm_sliced_ref``    — the bit-plane packed schedule (mirrors the Pallas
+                        kernel): the ``io_bits-1`` sign·magnitude planes of
+                        ``x_q`` are extracted once, one einsum per row tile
+                        contracts all (bit, slice) pairs at once, the ADC
+                        applies elementwise on the ``[T, B, S, bn]`` block,
+                        and the shift-and-add is a single contraction with
+                        the static ``2^t·16^s`` grid.
+
+``mvm_sliced_looped`` — the seed's serial per-(slice, bit) schedule, kept as
+                        the bit-exactness oracle for property tests (one tiny
+                        matmul per (tile, s, t), exactly the paper's cycle
+                        ordering).
+
+``transpose=True`` selects the MᵀVM (layer-gradient) read: the same crossbar
+driven from the columns, contracting over 128-column tiles.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.mvm import _adc
+from repro.core.mvm import _adc, bit_planes, shift_add_scales
 from repro.core.slicing import LOGICAL_BITS, SliceSpec
 
 XBAR_ROWS = 128
@@ -22,9 +40,59 @@ def mvm_sliced_ref(
     io_bits: int = 16,
     adc_bits: int | None = None,
     xbar_rows: int = XBAR_ROWS,
+    transpose: bool = False,
 ):
-    """planes int8 [S,M,N]; x_q int [B,M] -> f32 [B,N] (product-grid units)."""
-    S, M, N = planes.shape
+    """planes int8 [S,M,N]; x_q int [B,M] ([B,N] when ``transpose``) -> f32
+    [B,N] ([B,M]) on the product grid."""
+    w = planes.astype(jnp.float32)
+    if transpose:
+        w = jnp.swapaxes(w, 1, 2)
+    S, M, N = w.shape
+    B = x_q.shape[0]
+    assert x_q.shape == (B, M)
+    n_tiles = -(-M // xbar_rows)
+    full_scale = xbar_rows * jnp.asarray(spec.plane_max, jnp.float32)  # [S]
+    out = jnp.zeros((B, N), jnp.float32)
+
+    if adc_bits is None:
+        # Ideal ADC: bit-streaming is exact — contract the full input per
+        # slice and fold 16^s (row tiling is then irrelevant to the value,
+        # but kept so the accumulation order matches the finite-ADC path).
+        xf = x_q.astype(jnp.float32)
+        s_scale = jnp.exp2(LOGICAL_BITS * jnp.arange(S, dtype=jnp.float32))
+        for tile in range(n_tiles):
+            lo, hi = tile * xbar_rows, min((tile + 1) * xbar_rows, M)
+            y = jnp.einsum("bm,smn->bsn", xf[:, lo:hi], w[:, lo:hi],
+                           preferred_element_type=jnp.float32)
+            out = out + jnp.einsum("bsn,s->bn", y, s_scale)
+        return out
+
+    bp = bit_planes(x_q, io_bits).astype(jnp.float32)  # [T, B, M], extracted once
+    scales = shift_add_scales(spec, io_bits)  # [T, S]
+    for tile in range(n_tiles):
+        lo, hi = tile * xbar_rows, min((tile + 1) * xbar_rows, M)
+        y = jnp.einsum("tbm,smn->tbsn", bp[:, :, lo:hi], w[:, lo:hi],
+                       preferred_element_type=jnp.float32)
+        y = _adc(y, full_scale[:, None], adc_bits)
+        out = out + jnp.einsum("tbsn,ts->bn", y, scales)
+    return out
+
+
+def mvm_sliced_looped(
+    planes,
+    x_q,
+    spec: SliceSpec,
+    io_bits: int = 16,
+    adc_bits: int | None = None,
+    xbar_rows: int = XBAR_ROWS,
+    transpose: bool = False,
+):
+    """Seed schedule: one serial matmul per (tile, slice, bit) — the
+    bit-exactness oracle the packed forms are property-tested against."""
+    w_all = planes.astype(jnp.int32)
+    if transpose:
+        w_all = jnp.swapaxes(w_all, 1, 2)
+    S, M, N = w_all.shape
     B = x_q.shape[0]
     assert x_q.shape == (B, M)
     n_tiles = -(-M // xbar_rows)
@@ -34,7 +102,7 @@ def mvm_sliced_ref(
     for tile in range(n_tiles):
         lo, hi = tile * xbar_rows, min((tile + 1) * xbar_rows, M)
         for s in range(S):
-            w = planes[s, lo:hi].astype(jnp.int32)
+            w = w_all[s, lo:hi]
             full_scale = float(xbar_rows * spec.plane_max[s])
             for t in range(io_bits - 1):
                 bt = ((mx[:, lo:hi] >> t) & 1) * sx[:, lo:hi]

@@ -34,10 +34,12 @@ def causal_mask(s_q: int, s_k: int, window: int | None, q_offset: jax.Array | in
 def attn_init(cfg: LMConfig, key) -> dict:
     d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     ks = jax.random.split(key, 6)
+    # q/k/v projections live as ONE fused [d, (h + 2*kv) * hd] weight: they
+    # share the same layer input, so fusing makes the backward emit a single
+    # OuterProductGrad whose x-operand is stashed once (the split-weight form
+    # stashed the identical activation three times — ~3x the operand memory).
     p = {
-        "wq": dense_init(ks[0], d, h * hd),
-        "wk": dense_init(ks[1], d, kv * hd),
-        "wv": dense_init(ks[2], d, kv * hd),
+        "wqkv": dense_init(ks[0], d, (h + 2 * kv) * hd),
         "wo": dense_init(ks[3], h * hd, d),
         "ln": rms_norm_init(d),
     }
@@ -52,9 +54,11 @@ def attn_init(cfg: LMConfig, key) -> dict:
 def _qkv(cfg: LMConfig, p, h_in, positions):
     B, S, _ = h_in.shape
     hN, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = xbar_linear(h_in, p["wq"], h_in.dtype).reshape(B, S, hN, hd)
-    k = xbar_linear(h_in, p["wk"], h_in.dtype).reshape(B, S, kv, hd)
-    v = xbar_linear(h_in, p["wv"], h_in.dtype).reshape(B, S, kv, hd)
+    qkv = xbar_linear(h_in, p["wqkv"], h_in.dtype)
+    q, k, v = jnp.split(qkv, [hN * hd, (hN + kv) * hd], axis=-1)
+    q = q.reshape(B, S, hN, hd)
+    k = k.reshape(B, S, kv, hd)
+    v = v.reshape(B, S, kv, hd)
     if cfg.qk_norm:
         q = rms_norm(p["qn"], q, cfg.norm_eps)
         k = rms_norm(p["kn"], k, cfg.norm_eps)

@@ -177,8 +177,11 @@ def path_str(path) -> str:
 # per layer application — operand cotangents do not sum, so multi-invocation
 # weights such as the zamba shared block or the tied LM head must stay on the
 # dense-grad path). ``embed`` is excluded: its cotangent is a scatter.
+# ``wqkv`` is the fused attention q/k/v projection (one shared-input operand
+# group: its x-operand is stashed once for all three logical projections);
+# ``wq``/``w_dkv`` etc. remain for MLA, whose projections stay separate.
 OPERAND_LINEAR_KEYS = frozenset(
-    {"wq", "wk", "wv", "wo", "wi_gate", "wi_up", "w_dkv", "w_uk", "w_uv"}
+    {"wqkv", "wq", "wk", "wv", "wo", "wi_gate", "wi_up", "w_dkv", "w_uk", "w_uv"}
 )
 
 

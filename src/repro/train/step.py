@@ -7,8 +7,9 @@ truth, 8 B/param at the default 8-slice spec — the paper's §6.3 configuration
 the planes ARE the master (32-bit fixed point, as in the accelerator).
 
 Gradient-operand pipeline (default, ``operand_grads=True``): single-use
-matmul weights (attention wq/wk/wv/wo, MLA projections, gated-MLP
-wi_gate/wi_up/wo) are wrapped in ``models.common.XbarWeight`` so the
+matmul weights (attention wqkv/wo — q/k/v fused so their shared layer input
+is stashed once, MLA projections, gated-MLP wi_gate/wi_up/wo) are wrapped in
+``models.common.XbarWeight`` so the
 backward returns ``OuterProductGrad(x, dh)`` — the paper's in-crossbar
 outer-product operands — instead of a dense ``[M, N]`` matrix. The
 optimizer feeds the operands to ``kernels.sliced_opa.opa_fused_update``

@@ -1,6 +1,8 @@
 """Per-architecture smoke tests: reduced configs, one forward + one PANTHER
 train step + prefill/decode consistency on CPU. Asserts shapes and no NaNs.
 """
+import dataclasses
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -59,10 +61,24 @@ def test_train_step_panther(arch):
     assert any(bool((a != b).any()) for a, b in zip(p0, p2) if a.dtype == jnp.int8)
 
 
+@pytest.mark.parametrize(
+    "dtype,rtol_atol",
+    [(jnp.float32, 1e-3), (jnp.bfloat16, 5e-2)],
+    ids=["fp32", "bf16"],
+)
 @pytest.mark.parametrize("arch", ARCH_IDS)
-def test_prefill_decode_matches_forward(arch):
-    """decode(prefill(x[:-1]), x[-1]) logits == forward(x) last logits."""
-    cfg = get_smoke(arch)
+def test_prefill_decode_matches_forward(arch, dtype, rtol_atol):
+    """decode(prefill(x[:-1]), x[-1]) logits == forward(x) last logits.
+
+    The fp32 run is the *path-equivalence* check (cached decode vs
+    full-sequence forward): the only legitimate differences are
+    reduction-order rounding, so the tolerance is tight. The bf16 run keeps
+    the production-dtype cache/cast path covered (attention._cache_store
+    etc.) at a loose smoke bound — archs with many accumulation reorderings
+    between the paths (e.g. MLA's up-projection over the cache) show rare
+    isolated elements past any tight bf16 tolerance, which is expected
+    rounding, not a path bug."""
+    cfg = dataclasses.replace(get_smoke(arch), dtype=dtype)
     key = jax.random.PRNGKey(0)
     params = lm.init_params(cfg, key)
     inp = _inputs(cfg, jax.random.PRNGKey(1))
@@ -83,7 +99,7 @@ def test_prefill_decode_matches_forward(arch):
     )
     ref = full_logits[:, -1].astype(jnp.float32)
     got = logits_dec.astype(jnp.float32)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=rtol_atol, atol=rtol_atol)
 
 
 def _grow(x, target):
