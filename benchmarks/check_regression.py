@@ -1,0 +1,109 @@
+"""CI perf-regression gate over ``BENCH_kernels.json``.
+
+Compares a freshly-measured benchmark JSON against the committed baseline and
+fails (exit 1) when any *packed-path* timing (``us_packed`` — the Pallas
+dispatch — or ``us_packed_ref`` — the vectorized jnp reference of the same
+schedule) slows down by more than ``--threshold`` (default 1.3x), or when a
+kernel's jaxpr-counted ``dots_per_tile`` grows (a schedule regression back
+toward the seed's per-(slice, bit) serial matmuls).
+
+CI runners are not this laptop: raw wall-clock ratios between machines are
+meaningless. The gate therefore normalizes every per-case ratio by the
+*median* ratio across ALL timings of the run — a uniformly slower runner
+cancels out, and only a timing that regressed relative to its own fleet
+trips the gate. The structural columns (``dots_per_tile``) compare raw.
+
+Refreshing the baseline after an intended schedule change::
+
+    JAX_PLATFORMS=cpu BENCH_SMOKE=1 python -m benchmarks.kernels
+    git add BENCH_kernels.json   # commit alongside the kernel change
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+PACKED_TIMING_KEYS = ("us_packed", "us_packed_ref")
+MIN_SHARED_CASES = 3  # fewer ⇒ the baseline is stale and the gate vacuous
+
+REFRESH_HINT = (
+    "If this slowdown is intended (e.g. a schedule change), refresh the "
+    "baseline:\n    JAX_PLATFORMS=cpu BENCH_SMOKE=1 python -m benchmarks.kernels"
+    "\n    git add BENCH_kernels.json\nand commit it with the kernel change."
+)
+
+
+def compare(base: dict, fresh: dict, threshold: float) -> list[str]:
+    shared = [k for k in base if k != "_meta" and k in fresh]
+    failures: list[str] = []
+    if len(shared) < MIN_SHARED_CASES:
+        return [
+            f"only {len(shared)} benchmark case(s) shared between baseline and "
+            f"fresh run — the baseline is stale and the gate would be vacuous. "
+            + REFRESH_HINT
+        ]
+
+    # Machine factor from NON-gated reference timings only (the seed looped
+    # schedule, the vmapped form, plain OPA timings): if the packed timings
+    # themselves voted, a uniform packed-path regression would normalize
+    # itself away and the gate would pass on exactly what it must catch.
+    ratios = []
+    for k in shared:
+        for field, bv in base[k].items():
+            fv = fresh[k].get(field)
+            if (field.startswith("us") and field not in PACKED_TIMING_KEYS
+                    and isinstance(fv, (int, float)) and bv):
+                ratios.append(fv / bv)
+    ratios.sort()
+    machine = ratios[len(ratios) // 2] if ratios else 1.0
+
+    for k in shared:
+        for field in PACKED_TIMING_KEYS:
+            bv, fv = base[k].get(field), fresh[k].get(field)
+            if not (isinstance(bv, (int, float)) and isinstance(fv, (int, float)) and bv > 0):
+                continue
+            rel = (fv / bv) / machine
+            if rel > threshold:
+                failures.append(
+                    f"{k}.{field}: {bv:.1f}us -> {fv:.1f}us "
+                    f"({rel:.2f}x machine-normalized, threshold {threshold}x)"
+                )
+        bd, fd = base[k].get("dots_per_tile"), fresh[k].get("dots_per_tile")
+        if isinstance(bd, int) and isinstance(fd, int) and fd > bd:
+            failures.append(
+                f"{k}.dots_per_tile: {bd} -> {fd} (packed schedule regressed "
+                f"toward serial per-(slice, bit) dots)"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_kernels.json",
+                    help="committed baseline JSON (default: BENCH_kernels.json)")
+    ap.add_argument("--fresh", required=True, help="freshly measured JSON")
+    ap.add_argument("--threshold", type=float, default=1.3,
+                    help="max machine-normalized slowdown (default 1.3)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    failures = compare(base, fresh, args.threshold)
+    if failures:
+        print("PERF REGRESSION GATE FAILED:")
+        for line in failures:
+            print(f"  - {line}")
+        print(REFRESH_HINT)
+        return 1
+    n = len([k for k in base if k != '_meta' and k in fresh])
+    print(f"perf gate OK: {n} shared cases within {args.threshold}x "
+          f"(machine-normalized), no dots_per_tile growth")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

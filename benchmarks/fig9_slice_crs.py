@@ -7,20 +7,36 @@ bits, CRS period): low/high-order plane saturation and final loss ratio vs
 float SGD. Expected qualitative result (paper §7.1): 3-bit slices saturate
 and fail; 4-bit needs frequent CRS; 5/6-bit are robust even at period 1024+;
 high-order slices saturate less than low-order ones.
+
+``fidelity_sweep`` (``--fidelity`` / called at the end of ``main``) is the
+gradient-read analogue: an LM trains N steps with the crossbar-in-the-loop
+engine at (fwd, bwd) ADC settings — forward MVM and the backward MᵀVM ``dx``
+read the live int8 planes at finite resolution while the fused OPA operand
+update writes them — and the loss trajectories land in
+``BENCH_fidelity.json`` (the CI fidelity-smoke artifact). The (None, 6) /
+(6, None) off-diagonal settings isolate which read path degrades training
+first (OCC-lineage observation: gradient fidelity collapses before forward
+fidelity).
 """
 from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import SliceSpec
-from repro.core.fixed_point import choose_frac_bits, quantize
-from repro.kernels.sliced_mvm import mvm_sliced
 from repro.optim import PantherConfig, panther
 from repro.optim.baselines import sgd_init, sgd_update
 
 from .common import emit, time_jit
+
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+FIDELITY_JSON = os.environ.get("BENCH_FIDELITY_JSON", "BENCH_fidelity.json")
 
 
 def _mlp(key, sizes=(64, 256, 128, 10)):
@@ -47,23 +63,22 @@ def _loss(p, batch):
 
 
 def _fwd_fidelity(p, state, cfg: PantherConfig, x, adc_bits, io_bits=16, n=3):
-    """Forward pass through the bit-exact sliced-MVM engine: activations are
-    quantized to 16-bit fixed point and each crossbar-mapped matmul runs the
-    bit-streamed read with a finite ``adc_bits`` ADC at the 128-row
-    crossbar-tile boundary (``kernels.sliced_mvm`` — the same engine the
-    kernel benchmarks measure; ``adc_bits=None`` recovers the float forward
-    up to IO rounding). Rides the packed bit-plane schedule — cheap enough
-    to evaluate per benchmark config."""
+    """Forward pass through the bit-exact sliced-MVM engine
+    (``core.mvm.fidelity_read`` — the same DAC/ADC boundary the training
+    mode's custom-vjp linear runs): each crossbar-mapped matmul becomes a
+    finite-``adc_bits`` read at the 128-row crossbar-tile boundary;
+    ``adc_bits=None`` recovers the float forward up to IO rounding."""
+    from repro.core.mvm import fidelity_read
+    from repro.models.common import FidelityConfig
+
+    fid = FidelityConfig(io_bits=io_bits, adc_bits_fwd=adc_bits, spec=cfg.spec)
     h = x
     for i in range(n):
         s = state.sliced[f"w{i}"]
         if s is None:
             h = h @ p[f"w{i}"]
         else:
-            xf = choose_frac_bits(h, word_bits=io_bits, margin_bits=1)
-            xq = quantize(h, xf, word_bits=io_bits)
-            acc = mvm_sliced(s.planes, xq, cfg.spec, io_bits=io_bits, adc_bits=adc_bits)
-            h = acc * jnp.exp2(-(xf + s.frac_bits).astype(jnp.float32))
+            h = fidelity_read(s.planes, s.frac_bits, h, fid)
         h = h + p[f"b{i}"]
         if i < n - 1:
             h = jax.nn.relu(h)
@@ -120,6 +135,64 @@ def run(steps: int = 400, lr: float = 0.03):
     return rows
 
 
+def fidelity_sweep(steps: int | None = None, out_json: str | None = None):
+    """Crossbar-in-the-loop LM training at (fwd, bwd) ADC settings.
+
+    Trains the gemma-2b smoke LM (f32 compute so ADC effects are not masked
+    by bf16 noise) through ``make_train_step(fidelity=...)``: forward MVM and
+    backward MᵀVM read the live planes at the configured resolutions; the
+    fused OPA operand update writes them. Emits one row per setting and
+    writes the loss trajectories to ``BENCH_fidelity.json``. Smoke mode
+    (``BENCH_SMOKE=1``): 3 steps — the CI fidelity-smoke contract.
+    """
+    from repro.configs import get_smoke
+    from repro.data import SyntheticLMDataset
+    from repro.models.common import FidelityConfig
+    from repro.optim.schedules import constant
+    from repro.train.step import make_train_step, train_state_init
+
+    steps = steps if steps is not None else (3 if SMOKE else 40)
+    out_json = out_json or FIDELITY_JSON
+    cfg = dataclasses.replace(get_smoke("gemma_2b"), dtype=jnp.float32)
+    opt = PantherConfig(stochastic_round=False, crs_every=1 << 20)
+    ds = SyntheticLMDataset(cfg.vocab, seq_len=32, global_batch=8, seed=3)
+    lr = 0.3
+
+    def trajectory(fid):
+        state = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, opt, constant(lr), fidelity=fid))
+        losses = []
+        for i in range(steps):
+            state, m = step(state, ds.batch(i))
+            losses.append(float(m["loss"]))
+        return losses
+
+    results = {
+        "_meta": {
+            "arch": cfg.arch_id, "steps": steps, "lr": lr, "smoke": SMOKE,
+            "spec": opt.spec.name(), "backend": jax.default_backend(),
+        },
+        "float": {"adc_bits_fwd": None, "adc_bits_bwd": None, "engine": False,
+                  "losses": trajectory(None)},
+    }
+    # diagonal = matched fwd/bwd ADC; off-diagonal isolates one read path
+    settings = [(None, None), (9, 9), (6, 6), (None, 6), (6, None)]
+    for fwd_b, bwd_b in settings:
+        fid = FidelityConfig(adc_bits_fwd=fwd_b, adc_bits_bwd=bwd_b, spec=opt.spec)
+        losses = trajectory(fid)
+        key = f"fwd{fwd_b if fwd_b is not None else 'ideal'}_bwd{bwd_b if bwd_b is not None else 'ideal'}"
+        results[key] = {
+            "adc_bits_fwd": fwd_b, "adc_bits_bwd": bwd_b, "engine": True,
+            "losses": losses,
+        }
+        emit(f"fig9/fidelity_{key}", 0.0,
+             f"loss0={losses[0]:.4f};lossN={losses[-1]:.4f};steps={steps}")
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    emit("fig9/fidelity_json", 0.0, f"wrote={out_json}")
+    return results
+
+
 def main():
     rows = run()
     # qualitative paper checks (relative orderings — the toy task/steps make
@@ -134,7 +207,12 @@ def main():
     oksat = all(by[(3, c)][0] >= by[(6, c)][0] for c in (64, 1024, 4096))
     emit("fig9/paper_claims", 0.0,
          f"3bit_worst={ok3};56bit_robust={ok56};hi_le_lo_saturation={okhl};sat_monotone={oksat}")
+    fidelity_sweep()
 
 
 if __name__ == "__main__":
-    main()
+    # --fidelity: only the gradient-fidelity sweep (the CI fidelity-smoke job)
+    if "--fidelity" in sys.argv:
+        fidelity_sweep()
+    else:
+        main()

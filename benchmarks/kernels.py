@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import DEFAULT_SPEC, slice_weights
-from repro.kernels.sliced_mvm import mvm_sliced
+from repro.kernels.sliced_mvm import mvm_sliced, mvm_sliced_batched
 from repro.kernels.sliced_mvm.kernel import tile_dot_count
 from repro.kernels.sliced_mvm.ref import mvm_sliced_looped
 from repro.kernels.sliced_opa import opa_deposit, opa_fused_update
@@ -58,7 +58,10 @@ def _mvm_cases():
 def main():
     rng = np.random.default_rng(0)
     spec = DEFAULT_SPEC
-    iters, warmup = (2, 1) if SMOKE else (3, 1)
+    # these timings feed the CI regression gate: min-of-iters (scheduler
+    # jitter only ever slows a run down) with enough smoke iters to hit the
+    # true floor — shapes are tiny, so this stays cheap
+    iters, warmup = (5, 2) if SMOKE else (3, 1)
     on_tpu = jax.default_backend() == "tpu"
     interpret = not on_tpu
     results: dict[str, dict] = {
@@ -78,7 +81,7 @@ def main():
         p_upd = jnp.asarray(rng.integers(-(2**20), 2**20, size=(m, n)), jnp.int32)
         us = time_jit(
             jax.jit(lambda pl, pq: opa_deposit(pl, pq, spec, use_kernel=True, interpret=interpret)),
-            planes, p_upd, iters=iters, warmup=warmup,
+            planes, p_upd, iters=iters, warmup=warmup, stat="min",
         )
         bytes_dep = planes.size + 4 * p_upd.size + planes.size
         emit(f"kernels/opa_deposit_{m}x{n}", us, f"hbm_bytes={bytes_dep}")
@@ -91,7 +94,7 @@ def main():
             jax.jit(lambda pl, xx, dd: opa_fused_update(
                 pl, xx, dd, lr, fbits, spec, use_kernel=True, interpret=interpret
             )),
-            planes, x, dh, iters=iters, warmup=warmup,
+            planes, x, dh, iters=iters, warmup=warmup, stat="min",
         )
         saved = 2 * 4 * m * n  # fused form never writes/reads the f32 gradient
         emit(f"kernels/opa_fused_{m}x{n}_T{t}", us, f"hbm_bytes_saved_vs_unfused={saved}")
@@ -109,15 +112,15 @@ def main():
         us_kernel = time_jit(
             jax.jit(lambda pl, xx: mvm_sliced(
                 pl, xx, spec, use_kernel=True, interpret=interpret, **kw)),
-            planes, x, iters=iters, warmup=warmup,
+            planes, x, iters=iters, warmup=warmup, stat="min",
         )
         us_ref = time_jit(
             jax.jit(lambda pl, xx: mvm_sliced(pl, xx, spec, use_kernel=False, **kw)),
-            planes, x, iters=iters, warmup=warmup,
+            planes, x, iters=iters, warmup=warmup, stat="min",
         )
         us_before = time_jit(
             jax.jit(lambda pl, xx: mvm_sliced_looped(pl, xx, spec, **kw)),
-            planes, x, iters=iters, warmup=warmup,
+            planes, x, iters=iters, warmup=warmup, stat="min",
         )
         dots_packed = tile_dot_count(spec, io_bits, adc, transpose=transpose)
         # the seed schedule streamed all io_bits-1 planes regardless of ADC
@@ -141,6 +144,36 @@ def main():
             "dots_per_tile_budget_S": spec.n_slices,
         }
         assert dots_packed <= spec.n_slices, (name, dots_packed)
+
+    # --------------------- token-batched entry (training shape) -------------
+    # The fidelity training mode flattens [B, S, M] activations through
+    # mvm_sliced_batched; time it against a vmap of the vector entry (what
+    # the batching rework replaced: per-token tiny matmuls).
+    bt_cases = ((256, 256, 4, 16, 9),) if SMOKE else ((512, 512, 8, 32, 9),)
+    for m, n, b, s, adc in bt_cases:
+        q = jnp.asarray(rng.integers(-(2**26), 2**26, size=(m, n)), jnp.int32)
+        planes = slice_weights(q, spec)
+        x3 = jnp.asarray(rng.integers(-(2**15 - 1), 2**15, size=(b, s, m)), jnp.int32)
+        us_batched = time_jit(
+            jax.jit(lambda pl, xx: mvm_sliced_batched(
+                pl, xx, spec, io_bits=16, adc_bits=adc, use_kernel=False)),
+            planes, x3, iters=iters, warmup=warmup, stat="min",
+        )
+        us_vmapped = time_jit(
+            jax.jit(lambda pl, xx: jax.vmap(lambda row: mvm_sliced(
+                pl, row[None], spec, io_bits=16, adc_bits=adc, use_kernel=False
+            )[0])(xx.reshape(-1, m))),
+            planes, x3, iters=iters, warmup=warmup, stat="min",
+        )
+        name = f"mvm_batched_{m}x{n}_B{b}xS{s}_adc{adc}"
+        emit(f"kernels/{name}", us_batched,
+             f"vmapped_per_token_us={us_vmapped:.2f};"
+             f"speedup={us_vmapped / max(us_batched, 1e-9):.2f}x")
+        results[name] = {
+            "us_packed_ref": us_batched,
+            "us_vmapped_before": us_vmapped,
+            "speedup_vs_vmapped": us_vmapped / max(us_batched, 1e-9),
+        }
 
     with open(OUT_JSON, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

@@ -44,9 +44,18 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=0.5)
     ap.add_argument("--ckpt-dir", default="/tmp/panther_100m_ckpt")
+    ap.add_argument("--fidelity", default=None,
+                    help="crossbar-in-the-loop preset (ideal|adc9|adc6|adc6_bwd|"
+                         "adc6_fwd): forward MVM + backward MᵀVM read the live "
+                         "planes at finite ADC resolution")
     args = ap.parse_args()
 
     cfg = config_100m()
+    if args.fidelity:
+        from repro.configs import with_fidelity
+
+        cfg = with_fidelity(dataclasses.replace(cfg, dtype=jnp.float32), args.fidelity)
+        print(f"fidelity mode: {cfg.fidelity}")
     n_params = (
         cfg.vocab * cfg.d_model
         + cfg.n_layers

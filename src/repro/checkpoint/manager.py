@@ -19,6 +19,19 @@ Fault-tolerance contract:
 On multi-host fleets the host-gather becomes a per-host shard dump keyed by
 process_index; this container is single-process so the logical-array path is
 exercised (and the elastic-restore test remaps device counts).
+
+Manifests record each leaf's canonical '/'-joined tree path. Restore matches
+leaves BY PATH when the manifest has them (position-independent: reordering
+dict keys or adding params no longer corrupts a restore) and falls back to
+the legacy positional walk for old manifests. Path matching is also the hook
+for *key migrations* — currently the MLA ``wq``+``w_dkv`` → fused ``wq_dkv``
+rename, where the two stored projections concatenate along the output dim
+(SlicedTensor halves move to a shared grid in exact integer arithmetic —
+see ``_fuse_wq_dkv``). Migrations require a path-keyed manifest: a legacy
+(pre-path) checkpoint can only restore positionally into a structurally
+identical template, so cross-rename restores need one save/restore cycle on
+the old code to stamp paths first (the positional branch says so when the
+structures disagree).
 """
 from __future__ import annotations
 
@@ -29,6 +42,7 @@ import shutil
 import jax
 import numpy as np
 
+from repro.models.common import path_str
 from repro.optim.panther import SlicedTensor
 
 _SLICED_TAG = "__sliced_tensor__"
@@ -42,6 +56,14 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None or isinstance(x, SlicedTensor)
+    )
+    paths = [path_str(p) for p, _ in flat]
+    return paths, [leaf for _, leaf in flat], treedef
+
+
 def save_checkpoint(directory: str, step: int, tree, keep_last: int = 3) -> str:
     os.makedirs(directory, exist_ok=True)
     name = f"step_{step:09d}"
@@ -51,21 +73,21 @@ def save_checkpoint(directory: str, step: int, tree, keep_last: int = 3) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp)
 
-    leaves, treedef = _flatten(tree)
+    paths, leaves, treedef = _flatten_with_paths(tree)
     manifest = {"step": step, "leaves": [], "treedef": str(treedef)}
     idx = 0
-    for leaf in leaves:
+    for ps, leaf in zip(paths, leaves):
         if leaf is None:
-            manifest["leaves"].append({"kind": _NONE_TAG})
+            manifest["leaves"].append({"kind": _NONE_TAG, "path": ps})
         elif isinstance(leaf, SlicedTensor):
             np.save(os.path.join(tmp, f"arr_{idx:06d}.npy"), np.asarray(jax.device_get(leaf.planes)))
             np.save(os.path.join(tmp, f"arr_{idx + 1:06d}.npy"), np.asarray(jax.device_get(leaf.frac_bits)))
-            manifest["leaves"].append({"kind": _SLICED_TAG, "files": [idx, idx + 1]})
+            manifest["leaves"].append({"kind": _SLICED_TAG, "files": [idx, idx + 1], "path": ps})
             idx += 2
         else:
             arr = np.asarray(jax.device_get(leaf))
             np.save(os.path.join(tmp, f"arr_{idx:06d}.npy"), arr)
-            manifest["leaves"].append({"kind": "array", "files": [idx]})
+            manifest["leaves"].append({"kind": "array", "files": [idx], "path": ps})
             idx += 1
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -95,11 +117,61 @@ def list_checkpoints(directory: str):
     return out
 
 
+def _unslice_i64(planes: np.ndarray) -> np.ndarray:
+    """Reassemble digit planes [S, ...] into int64 logical values — exact for
+    dirty (carry-laden) planes too (dirty max ~2.3e9 overflows int32 but not
+    int64)."""
+    return sum(planes[s].astype(np.int64) * 16**s for s in range(planes.shape[0]))
+
+
+def _fuse_wq_dkv(a, b):
+    """Key migration: separate MLA ``wq`` / ``w_dkv`` leaves -> the fused
+    ``wq_dkv`` [..., d, q_dim + rank + rope] layout ([q | dkv], matching
+    ``models.attention.mla_init``).
+
+    Float leaves concatenate exactly. SlicedTensor leaves carry per-tensor
+    grids, so the halves move onto a shared grid in INTEGER arithmetic
+    (int64 reassembly, power-of-two rescale in f64 — exact below 2^53, far
+    above the 32-bit weight range; a float32 dequantize round-trip would
+    corrupt values past the 24-bit mantissa). The shared frac_bits starts at
+    ``max(F_a, F_b)`` and backs off only while a rescaled value would leave
+    the canonical digit range; values that still don't fit at
+    ``min(F_a, F_b)`` rail at ±canonical_limit, exactly like a CRS overflow.
+    When the back-off doesn't engage (the common case: same-scale
+    projections) every stored value is preserved bit-exactly.
+    """
+    from repro.core import SliceSpec, slice_weights
+
+    if isinstance(a, SlicedTensor):
+        S = a.planes.shape[0]
+        spec = SliceSpec.uniform(4, n_slices=S)  # canonical digits only
+        va = _unslice_i64(np.asarray(jax.device_get(a.planes))).astype(np.float64)
+        vb = _unslice_i64(np.asarray(jax.device_get(b.planes))).astype(np.float64)
+        fa, fb = int(a.frac_bits), int(b.frac_bits)
+        lim = spec.canonical_limit
+        f = max(fa, fb)
+        while f > min(fa, fb) and max(
+            np.abs(va).max() * 2.0 ** (f - fa), np.abs(vb).max() * 2.0 ** (f - fb)
+        ) > lim:
+            f -= 1
+        cat = np.concatenate(
+            [np.rint(va * 2.0 ** (f - fa)), np.rint(vb * 2.0 ** (f - fb))], axis=-1
+        )
+        cat = np.clip(cat, -lim, lim).astype(np.int32)
+        return SlicedTensor(
+            planes=slice_weights(jax.numpy.asarray(cat), spec),
+            frac_bits=jax.numpy.asarray(f, jax.numpy.int32),
+        )
+    return np.concatenate([a, b], axis=-1)
+
+
 def restore_latest(directory: str, template, shardings=None):
     """Restore the newest committed checkpoint into ``template``'s structure.
 
     ``shardings``: optional pytree of NamedSharding (matching template) to
-    place leaves onto a (possibly different — elastic) mesh.
+    place leaves onto a (possibly different — elastic) mesh. Manifests with
+    leaf paths restore by path (with key migrations, e.g. wq+w_dkv→wq_dkv);
+    legacy manifests restore positionally.
     """
     steps = list_checkpoints(directory)
     if not steps:
@@ -109,28 +181,61 @@ def restore_latest(directory: str, template, shardings=None):
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
 
-    t_leaves, treedef = _flatten(template)
+    t_paths, t_leaves, treedef = _flatten_with_paths(template)
     s_leaves = _flatten(shardings)[0] if shardings is not None else [None] * len(t_leaves)
-    assert len(manifest["leaves"]) == len(t_leaves), "checkpoint/template structure mismatch"
 
     def _load(i):
         return np.load(os.path.join(path, f"arr_{i:06d}.npy"))
 
-    out = []
-    for meta, tmpl, shard in zip(manifest["leaves"], t_leaves, s_leaves):
+    def _materialize(meta, shard):
         if meta["kind"] == _NONE_TAG:
-            out.append(None)
-        elif meta["kind"] == _SLICED_TAG:
+            return None
+        if meta["kind"] == _SLICED_TAG:
             planes = _load(meta["files"][0])
             fb = _load(meta["files"][1])
             if shard is not None:
                 planes = jax.device_put(planes, shard.planes if hasattr(shard, "planes") else shard)
-            out.append(SlicedTensor(planes=jax.numpy.asarray(planes), frac_bits=jax.numpy.asarray(fb)))
-        else:
-            arr = _load(meta["files"][0])
-            if shard is not None:
-                arr = jax.device_put(arr, shard)
-            out.append(jax.numpy.asarray(arr) if shard is None else arr)
+            return SlicedTensor(planes=jax.numpy.asarray(planes), frac_bits=jax.numpy.asarray(fb))
+        arr = _load(meta["files"][0])
+        if shard is not None:
+            arr = jax.device_put(arr, shard)
+        return jax.numpy.asarray(arr) if shard is None else arr
+
+    by_path = {m["path"]: m for m in manifest["leaves"] if "path" in m}
+    if len(by_path) == len(manifest["leaves"]):
+        out = []
+        for ps, tmpl, shard in zip(t_paths, t_leaves, s_leaves):
+            meta = by_path.get(ps)
+            if meta is not None:
+                out.append(_materialize(meta, shard))
+                continue
+            if ps.endswith("wq_dkv"):
+                mq = by_path.get(ps[: -len("wq_dkv")] + "wq")
+                md = by_path.get(ps[: -len("wq_dkv")] + "w_dkv")
+                if mq is not None and md is not None:
+                    # migration keeps the logical value; place the fused leaf
+                    # with the template's sharding afterwards if requested
+                    fused = _fuse_wq_dkv(_materialize(mq, None), _materialize(md, None))
+                    if shard is not None and not isinstance(fused, SlicedTensor):
+                        fused = jax.device_put(np.asarray(fused), shard)
+                    out.append(fused)
+                    continue
+            raise KeyError(
+                f"checkpoint at step {step} has no leaf for template path "
+                f"'{ps}' and no known migration applies"
+            )
+        return jax.tree_util.tree_unflatten(treedef, out), step
+
+    # legacy manifest (no paths): positional restore
+    if len(manifest["leaves"]) != len(t_leaves):
+        raise ValueError(
+            f"legacy (pre-path) checkpoint at step {step} has "
+            f"{len(manifest['leaves'])} leaves but the template has "
+            f"{len(t_leaves)} — positional restore cannot migrate renamed "
+            f"keys; re-save this checkpoint once with the code version that "
+            f"wrote it to stamp leaf paths, then restore here"
+        )
+    out = [_materialize(meta, shard) for meta, shard in zip(manifest["leaves"], s_leaves)]
     return jax.tree_util.tree_unflatten(treedef, out), step
 
 

@@ -64,3 +64,36 @@ def shape_cells(arch_id: str):
     if cfg.supports_long_context:
         cells.append("long_500k")
     return cells
+
+
+# ------------------ finite-ADC (crossbar-in-the-loop) presets ----------------
+# Named FidelityConfig instances for the gradient-fidelity study (paper Fig
+# 9/10 analogue for training): attach with ``with_fidelity(cfg, "adc6")`` and
+# the train step reads/backprops through the packed sliced-MVM/MᵀVM engine.
+
+
+def fidelity_presets():
+    """Name -> FidelityConfig map (function, not module constant, so importing
+    configs stays cheap for the launch CLIs that only need arch ids)."""
+    from repro.models.common import FidelityConfig
+
+    return {
+        # ideal ADC on both paths: provably equal to the float step in the
+        # f32-exact regime (the engine's correctness anchor)
+        "ideal": FidelityConfig(adc_bits_fwd=None, adc_bits_bwd=None),
+        "adc9": FidelityConfig(adc_bits_fwd=9, adc_bits_bwd=9),
+        "adc6": FidelityConfig(adc_bits_fwd=6, adc_bits_bwd=6),
+        # isolate the gradient read: forward stays ideal, dx through a 6-bit
+        # ADC (the PipeLayer/ISAAC question — gradient fidelity collapses
+        # before forward fidelity)
+        "adc6_bwd": FidelityConfig(adc_bits_fwd=None, adc_bits_bwd=6),
+        "adc6_fwd": FidelityConfig(adc_bits_fwd=6, adc_bits_bwd=None),
+    }
+
+
+def with_fidelity(cfg, preset):
+    """Return ``cfg`` with a fidelity preset (name or FidelityConfig) attached."""
+    import dataclasses
+
+    fid = fidelity_presets()[preset] if isinstance(preset, str) else preset
+    return dataclasses.replace(cfg, fidelity=fid)

@@ -1,5 +1,5 @@
 """PANTHER core: bit-sliced fixed-point weight representation, OPA, MVM, CRS."""
-from .fixed_point import IO_BITS, WEIGHT_BITS, choose_frac_bits, dequantize, quantize
+from .fixed_point import IO_BITS, WEIGHT_BITS, choose_frac_bits, dequantize, exp2i, quantize
 from .slicing import (
     DEFAULT_SPEC,
     LOGICAL_BITS,
@@ -21,6 +21,7 @@ __all__ = [
     "WEIGHT_BITS",
     "choose_frac_bits",
     "dequantize",
+    "exp2i",
     "quantize",
     "DEFAULT_SPEC",
     "LOGICAL_BITS",

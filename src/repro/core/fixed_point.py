@@ -14,19 +14,48 @@ WEIGHT_BITS = 32
 IO_BITS = 16
 
 
-def choose_frac_bits(x: jax.Array, word_bits: int = WEIGHT_BITS, margin_bits: int = 2) -> jax.Array:
+def exp2i(e) -> jax.Array:
+    """Exact ``2.0**e`` (f32) for integer exponents in the normal range
+    [-126, 127], built directly from the IEEE exponent field.
+
+    ``jnp.exp2`` on a *traced* argument lowers to ``exp(e·ln2)``, which is
+    off by an ulp for many integer exponents (XLA constant-folds literal
+    arguments through a correctly-rounded host libm, which is why the static
+    scale grids are fine). Every fixed-point scale in the numerics stack is
+    a power of two whose exactness the bit-identity contracts rely on — all
+    runtime-exponent scales must go through this helper.
+    """
+    e = jnp.asarray(e, jnp.int32)
+    return jax.lax.bitcast_convert_type(((e + 127) << 23).astype(jnp.int32), jnp.float32)
+
+
+def choose_frac_bits(
+    x: jax.Array,
+    word_bits: int = WEIGHT_BITS,
+    margin_bits: int = 2,
+    clip_to_word: bool = True,
+) -> jax.Array:
     """Pick F (fraction bits) so that ``max|x| * 2**F`` fits in ``word_bits``-bit
     signed with ``margin_bits`` of headroom for growth during training.
 
     Returns an int32 scalar. Degenerate (all-zero) tensors get a default F
     placing unit range at full scale.
+
+    ``clip_to_word=True`` (weights): F ∈ [0, word_bits) — the grid is
+    anchored to the fixed crossbar conductance range. ``clip_to_word=False``
+    (the IO DAC/ADC boundary): the scale is a free power of two that tracks
+    the tensor — small cotangents on the backward MᵀVM read would otherwise
+    collapse onto a handful of levels once F pinned at ``word_bits - 1``.
+    Bounded to ±64 so every downstream ``exp2i`` exponent stays normal.
     """
     max_abs = jnp.max(jnp.abs(x))
     # int bits needed for the integer part of max_abs
     int_bits = jnp.ceil(jnp.log2(jnp.maximum(max_abs, 1e-30)))
     f = (word_bits - 1) - margin_bits - int_bits
     f = jnp.where(max_abs == 0.0, jnp.asarray(word_bits - 1 - margin_bits, f.dtype), f)
-    return jnp.clip(f, 0, word_bits - 1).astype(jnp.int32)
+    if clip_to_word:
+        return jnp.clip(f, 0, word_bits - 1).astype(jnp.int32)
+    return jnp.clip(f, -64, 64).astype(jnp.int32)
 
 
 def quantize(
@@ -43,7 +72,7 @@ def quantize(
     important for the tiny learning-rate-scaled gradient updates that would
     otherwise deterministically round to zero.
     """
-    scale = jnp.exp2(jnp.asarray(frac_bits, jnp.float32))
+    scale = exp2i(frac_bits)
     y = x.astype(jnp.float32) * scale
     if stochastic:
         if key is None:
@@ -58,5 +87,5 @@ def quantize(
 
 
 def dequantize(q: jax.Array, frac_bits: jax.Array | int, dtype=jnp.float32) -> jax.Array:
-    scale = jnp.exp2(-jnp.asarray(frac_bits, jnp.float32))
+    scale = exp2i(-jnp.asarray(frac_bits, jnp.int32))
     return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -20,12 +20,21 @@ entirely (streaming is exact, so ``x_q @ plane_s`` per slice is identical).
 The MᵀVM (layer-gradient) op is the same crossbar driven from the columns:
 ``transpose=True`` contracts over the column dimension with the column count
 as the ADC full-scale denominator.
+
+``fidelity_read`` is the float-world door into the engine: it quantizes a
+float activation (or output cotangent) to ``io_bits`` fixed point, runs the
+token-batched packed read at a per-path ADC resolution through the
+crossbar-tiled kernel dispatch (``kernels.sliced_mvm``), and rescales the
+product-grid accumulation back to float. This is the op the fidelity
+training mode's custom-vjp linear calls on both the forward (MVM) and the
+``dx`` backward (MᵀVM) — the crossbar-in-the-loop analogue of ``x @ w``.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from .fixed_point import choose_frac_bits, exp2i, quantize
 from .slicing import LOGICAL_BITS, DEFAULT_SPEC, SliceSpec, dequantize_planes
 
 
@@ -92,6 +101,46 @@ def mvm_sliced(
     cols = jnp.einsum("t...m,smn->t...sn", bp, w, preferred_element_type=jnp.float32)
     cols = _adc(cols, full_scale[:, None], adc_bits)  # per-slice ADC, elementwise
     return jnp.einsum("t...sn,ts->...n", cols, shift_add_scales(spec, io_bits))
+
+
+def fidelity_read(
+    planes: jax.Array,
+    frac_bits: jax.Array | int,
+    x: jax.Array,
+    fid,
+    transpose: bool = False,
+) -> jax.Array:
+    """Finite-ADC crossbar read of a float tensor (PANTHER's training-time
+    MVM / MᵀVM as seen by the model).
+
+    ``planes`` int8 ``[S, M, N]`` digit planes on the ``2^-frac_bits`` weight
+    grid; ``x`` float ``[..., M]`` (``[..., N]`` when ``transpose`` — the
+    layer-gradient read). ``fid`` is a ``models.common.FidelityConfig`` (or
+    anything with its fields); ``transpose`` selects ``adc_bits_bwd`` over
+    ``adc_bits_fwd``.
+
+    The IO conversion is the paper's DAC/ADC boundary: ``x`` is quantized to
+    ``fid.io_bits`` fixed point with a per-call power-of-two scale (the DAC
+    range tracks the activation), the packed bit-plane engine computes the
+    integer product grid per 128-row crossbar tile, and the result is scaled
+    by ``2^-(x_frac + frac_bits)``. With ``adc_bits=None`` and both operands
+    exactly on their grids every step is exact in f32, so the read is
+    bit-identical to ``x @ dequantize(planes)`` (property-tested).
+    """
+    from repro.kernels.sliced_mvm import mvm_sliced_batched  # lazy: kernels import core
+
+    adc_bits = fid.adc_bits_bwd if transpose else fid.adc_bits_fwd
+    # clip_to_word=False: the DAC scale is a free power of two (the digital
+    # shift-and-add tracks it), so small backward cotangents keep the full
+    # io_bits of resolution instead of pinning at F = io_bits - 1
+    xf = choose_frac_bits(x, word_bits=fid.io_bits, margin_bits=fid.margin_bits,
+                          clip_to_word=False)
+    xq = quantize(x, xf, word_bits=fid.io_bits)
+    acc = mvm_sliced_batched(
+        planes, xq, fid.spec, io_bits=fid.io_bits, adc_bits=adc_bits,
+        transpose=transpose, use_kernel=fid.use_kernel, interpret=fid.interpret,
+    )
+    return acc * exp2i(-(xf + jnp.asarray(frac_bits, jnp.int32)))
 
 
 def mvm_fast(

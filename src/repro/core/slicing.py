@@ -130,13 +130,17 @@ def dequantize_planes(
     44466555 spec's dirty max is ~2.29e9 > 2^31-1): the per-plane sums run in
     float32. Compute precision is the fp32 mantissa (24 bits) — the
     mixed-precision contract of the fast path; full 32-bit state stays in the
-    planes and `mvm_sliced` provides bit-exact semantics.
+    planes and `mvm_sliced` provides bit-exact semantics. The 2^-F grid
+    scale goes through ``exp2i`` (exponent-field construction): runtime
+    ``jnp.exp2`` is an ulp off for many exponents, which would break the
+    fidelity engine's bit-identity to this dequantized copy.
     """
-    f = jnp.asarray(frac_bits, jnp.float32)
+    from .fixed_point import exp2i  # local: fixed_point has no slicing deps
+
     acc = planes[-1].astype(jnp.float32)
     for s in range(planes.shape[0] - 2, -1, -1):
         acc = acc * float(RADIX) + planes[s].astype(jnp.float32)
-    return (acc * jnp.exp2(-f)).astype(dtype)
+    return (acc * exp2i(-jnp.asarray(frac_bits, jnp.int32))).astype(dtype)
 
 
 def saturating_add(planes: jax.Array, delta: jax.Array, spec: SliceSpec = DEFAULT_SPEC) -> jax.Array:

@@ -29,12 +29,13 @@ _RULES: list[tuple[str, tuple]] = [
     # MoE expert stacks [E, d, f] / [E, f, d]: expert-parallel on 'model'
     (r"(experts_gate|experts_up|experts_down)$", (MODEL, None, None)),
     (r"router$", (None, None)),
-    # column-parallel (output dim sharded)
-    (r"(wqkv|wq|wk|wv|wi_gate|wi_up|w_up|w_gate|w_z|w_x|w_dt|ffn_up|mlp_up|w_uk|w_uv)$", (None, MODEL)),
+    # column-parallel (output dim sharded); wq_dkv is the fused MLA q +
+    # compressed-KV down-projection (shards like its dominant q half)
+    (r"(wqkv|wq_dkv|wq|wk|wv|wi_gate|wi_up|w_up|w_gate|w_z|w_x|w_dt|ffn_up|mlp_up|w_uk|w_uv)$", (None, MODEL)),
     # row-parallel (input dim sharded)
     (r"(wo|w_down|w_out|ffn_down|mlp_down)$", (MODEL, None)),
     # small / replicated
-    (r"(w_B|w_C|w_dkv|r|conv_w|conv_b|A_log|dt_bias|D|bias|scale|if_bias)$", ()),
+    (r"(w_B|w_C|r|conv_w|conv_b|A_log|dt_bias|D|bias|scale|if_bias)$", ()),
 ]
 
 

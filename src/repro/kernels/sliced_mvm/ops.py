@@ -6,14 +6,27 @@ schedule, value-equivalent (tested). ``transpose=True`` is the MᵀVM
 (layer-gradient) read; it has a first-class kernel path (the seed fell back
 to a Python-loop reference). Shapes whose contraction dim is not a multiple
 of the 128-row crossbar fall back to the (ragged-capable) reference.
+
+``mvm_sliced`` is the vector entry (one trailing contraction dim, one batch
+dim). ``mvm_sliced_batched`` is the token-batched entry used by the training
+forward/backward: arbitrary leading dims flatten into ONE token axis that
+rides the kernel's batch grid, so every crossbar tile still issues one
+``dot_general`` per bit-block — vmapping the vector entry over tokens would
+shatter that operand back into per-token matmuls (the seed's 6%-MXU shape).
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.slicing import SliceSpec
 from . import kernel as _k
 from . import ref as _ref
+
+# token-axis granule of the kernel batch grid: padding the flattened token
+# count up to this keeps the bb=8 sublane block (pick_block would otherwise
+# degrade to tiny odd blocks for prime token counts)
+BATCH_GRANULE = 8
 
 
 def mvm_sliced(
@@ -41,3 +54,43 @@ def mvm_sliced(
         planes, x_q, spec=spec, io_bits=io_bits, adc_bits=adc_bits,
         interpret=interpret, transpose=transpose,
     )
+
+
+def mvm_sliced_batched(
+    planes,
+    x_q,
+    spec: SliceSpec,
+    *,
+    io_bits: int = 16,
+    adc_bits: int | None = None,
+    transpose: bool = False,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+):
+    """Token-batched sliced MVM / MᵀVM: ``x_q`` int [..., M] (or [..., N]
+    when ``transpose``) with arbitrary leading dims -> f32 [..., N] ([..., M]).
+
+    All leading dims flatten into one token axis of the 2-D engine — the
+    kernel grid tiles it in ``bb=8`` sublane blocks, so the per-crossbar-tile
+    MXU operand stays ``[(io_bits-1)·bb, 128]`` regardless of token count
+    (one dot per tile per bit-block; jaxpr-asserted in tests). Each output
+    row depends only on its own input row and the ADC applies elementwise,
+    so the flattened form is bit-identical to per-token vector reads
+    (property-tested); zero padding rows (sign 0 ⇒ all-zero bit planes) are
+    sliced back off without touching real rows.
+    """
+    contract = planes.shape[2] if transpose else planes.shape[1]
+    lead = x_q.shape[:-1]
+    assert x_q.shape[-1] == contract, (x_q.shape, planes.shape, transpose)
+    x2 = x_q.reshape(-1, contract)
+    t = x2.shape[0]
+    pad = (-t) % BATCH_GRANULE
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, contract), x2.dtype)], axis=0)
+    out = mvm_sliced(
+        planes, x2, spec, io_bits=io_bits, adc_bits=adc_bits, transpose=transpose,
+        use_kernel=use_kernel, interpret=interpret,
+    )
+    if pad:
+        out = out[:t]
+    return out.reshape(*lead, out.shape[-1])

@@ -90,7 +90,11 @@ def opa_fused_update(
             planes, x, dh, lr, frac_bits, spec, stochastic=stochastic, key=key
         )
 
-    scale = -jnp.asarray(lr, jnp.float32) * jnp.exp2(jnp.asarray(frac_bits, jnp.float32))
+    # exp2i: the 2^F grid scale must be the exact power of two the dense
+    # pipeline's quantize() uses, or the fused/dense bit-compat breaks
+    from repro.core.fixed_point import exp2i
+
+    scale = -jnp.asarray(lr, jnp.float32) * exp2i(frac_bits)
     noise = None
     if stochastic:
         noise = jax.random.uniform(key, planes.shape[1:], jnp.float32)

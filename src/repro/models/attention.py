@@ -262,9 +262,13 @@ def mla_init(cfg: LMConfig, key) -> dict:
     d, H = cfg.d_model, cfg.n_heads
     ks = jax.random.split(key, 7)
     qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    # q and the compressed-KV down-projection read the same layer input, so
+    # they live as ONE fused [d, H*qk_dim + rank + rope] weight (the wqkv
+    # trick): the operand backward emits a single OuterProductGrad whose
+    # x-operand is stashed once instead of twice. Layout: [q | dkv] along the
+    # output dim (checkpoint migration concatenates in that order).
     return {
-        "wq": dense_init(ks[0], d, H * qk_dim),
-        "w_dkv": dense_init(ks[1], d, m.kv_lora_rank + m.qk_rope_dim),
+        "wq_dkv": dense_init(ks[0], d, H * qk_dim + m.kv_lora_rank + m.qk_rope_dim),
         "w_uk": dense_init(ks[2], m.kv_lora_rank, H * m.qk_nope_dim),
         "w_uv": dense_init(ks[3], m.kv_lora_rank, H * m.v_head_dim),
         "wo": dense_init(ks[4], H * m.v_head_dim, d),
@@ -277,11 +281,13 @@ def _mla_qkv(cfg: LMConfig, p, x, positions):
     m = cfg.mla
     B, S, _ = x.shape
     H = cfg.n_heads
-    q = xbar_linear(x, p["wq"], x.dtype).reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    q_dkv = xbar_linear(x, p["wq_dkv"], x.dtype)  # [B,S,H*qk+rank+rope]
+    q, dkv = jnp.split(q_dkv, [H * qk_dim], axis=-1)
+    q = q.reshape(B, S, H, qk_dim)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
 
-    dkv = xbar_linear(x, p["w_dkv"], x.dtype)  # [B,S,rank+rope]
     c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
     c_kv = rms_norm(p["kv_ln"], c_kv, cfg.norm_eps)
     k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,rope]
@@ -292,8 +298,10 @@ def _mla_attend(cfg: LMConfig, p, q_nope, q_rope, c_kv, k_rope, mask, dtype):
     m = cfg.mla
     B, Sk = c_kv.shape[:2]
     H = cfg.n_heads
-    k_nope = (c_kv @ p["w_uk"].astype(dtype)).reshape(B, Sk, H, m.qk_nope_dim)
-    v = (c_kv @ p["w_uv"].astype(dtype)).reshape(B, Sk, H, m.v_head_dim)
+    # xbar_linear (not raw matmul): the decode path must also serve wrapped
+    # weights, e.g. finite-ADC fidelity serving reads the planes here
+    k_nope = xbar_linear(c_kv, p["w_uk"], dtype).reshape(B, Sk, H, m.qk_nope_dim)
+    v = xbar_linear(c_kv, p["w_uv"], dtype).reshape(B, Sk, H, m.v_head_dim)
     scale = 1.0 / jnp.sqrt(jnp.asarray(m.qk_nope_dim + m.qk_rope_dim, jnp.float32))
     logits = (
         jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope, preferred_element_type=jnp.float32)

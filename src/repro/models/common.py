@@ -9,8 +9,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+import numpy as np
 import jax
 import jax.numpy as jnp
+
+from repro.core.slicing import DEFAULT_SPEC, SliceSpec
 
 
 # --------------------- outer-product gradient operands ----------------------
@@ -115,6 +118,44 @@ def is_outer_product_grad(x) -> bool:
     return isinstance(x, OuterProductGrad)
 
 
+# ------------------------ fidelity (finite-ADC) mode -------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FidelityConfig:
+    """Crossbar-in-the-loop training/serving configuration.
+
+    When attached to an ``XbarWeight`` (via ``optim.panther.operandize`` /
+    ``fidelitize``), ``xbar_linear`` stops computing ``x @ w`` on the
+    dequantized copy and instead drives the *planes* through the packed
+    bit-plane sliced-MVM engine with a finite ADC — the paper's all-analog
+    training loop: forward MVM read, layer-gradient MᵀVM read (``dx``), and
+    the OPA outer-product deposit all touch the same crossbar cells. Hashable
+    and compared by value: it rides pytrees as ``XbarWeight`` aux_data, so
+    every field is jit-static (ADC resolution changes recompile, as they
+    would re-tape a new hardware config).
+
+    ``adc_bits_fwd`` / ``adc_bits_bwd`` set the ADC resolution of the forward
+    and layer-gradient reads independently (``None`` = ideal ADC, provably
+    equal to the float matmul in the f32-exact regime). ``fwd`` / ``bwd``
+    gate each path: a disabled path falls back to the float matmul, so e.g.
+    ``fwd=False, bwd=True`` isolates gradient-read fidelity (the PipeLayer
+    question: where does accuracy collapse first?). ``spec`` must match the
+    optimizer's plane layout. ``use_kernel``/``interpret`` follow the
+    ``kernels.sliced_mvm`` dispatch convention (None = auto: Pallas on TPU).
+    """
+
+    io_bits: int = 16
+    adc_bits_fwd: int | None = None
+    adc_bits_bwd: int | None = None
+    fwd: bool = True
+    bwd: bool = True
+    spec: SliceSpec = DEFAULT_SPEC
+    margin_bits: int = 1  # DAC headroom when choosing the per-read IO scale
+    use_kernel: bool | None = None
+    interpret: bool | None = None
+
+
 @jax.tree_util.register_pytree_node_class
 class XbarWeight:
     """A crossbar-mapped weight as seen by the differentiated train step.
@@ -128,23 +169,34 @@ class XbarWeight:
     zero (dead code after ``optim.panther`` strips it) and the planes update
     reads only the operands.
 
+    Fidelity mode additionally carries the weight's *digit planes* (int8,
+    slice dim moved behind any layer-stack dims so lax.scan slices layers),
+    the per-tensor ``frac_bits`` scale, and a static ``FidelityConfig`` as
+    pytree aux_data — ``xbar_linear`` then reads the planes through the
+    finite-ADC engine instead of multiplying by ``w``. The integer leaves
+    take ``float0`` cotangents (the differentiated step runs with
+    ``allow_int``); ``g`` may be ``None`` for forward-only (serving) wraps.
+
     Deliberately NO dense duck-typing (``.astype`` etc.): a model site that
     consumes a wrapped weight without going through ``xbar_linear`` must fail
     loudly at trace time rather than silently dropping its gradient.
     """
 
-    __slots__ = ("w", "g")
+    __slots__ = ("w", "g", "planes", "frac_bits", "fid")
 
-    def __init__(self, w, g):
+    def __init__(self, w, g, planes=None, frac_bits=None, fid=None):
         self.w = w
         self.g = g
+        self.planes = planes
+        self.frac_bits = frac_bits
+        self.fid = fid
 
     def tree_flatten(self):
-        return (self.w, self.g), None
+        return (self.w, self.g, self.planes, self.frac_bits), self.fid
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children)
+    def tree_unflatten(cls, fid, children):
+        return cls(*children, fid=fid)
 
     @property
     def shape(self):
@@ -177,26 +229,25 @@ def path_str(path) -> str:
 # per layer application — operand cotangents do not sum, so multi-invocation
 # weights such as the zamba shared block or the tied LM head must stay on the
 # dense-grad path). ``embed`` is excluded: its cotangent is a scatter.
-# ``wqkv`` is the fused attention q/k/v projection (one shared-input operand
-# group: its x-operand is stashed once for all three logical projections);
-# ``wq``/``w_dkv`` etc. remain for MLA, whose projections stay separate.
+# ``wqkv`` is the fused attention q/k/v projection and ``wq_dkv`` the fused
+# MLA q + compressed-KV down-projection (one shared-input operand group each:
+# the x-operand is stashed once for every logical projection in the group).
 OPERAND_LINEAR_KEYS = frozenset(
-    {"wqkv", "wq", "wk", "wv", "wo", "wi_gate", "wi_up", "w_dkv", "w_uk", "w_uv"}
+    {"wqkv", "wq_dkv", "wo", "wi_gate", "wi_up", "w_uk", "w_uv"}
 )
 
 
 def is_operand_path(path_str: str) -> bool:
     """Whether the parameter at this '/'-joined path flows operand grads.
 
-    The leaf key alone is not enough: xlstm's mlstm block also names its
-    projections ``wq``/``wk``/``wv`` (at ``groups/<i>/wq``, no block
-    segment) but consumes them through plain matmuls — so eligibility also
-    requires the immediately enclosing ``attn``/``mlp`` subtree, which is
-    exactly where every ``xbar_linear`` call site lives. Excludes any path
-    under a ``shared`` subtree (zamba shared transformer, MoE shared
-    experts): those weights are applied more than once per step, and
-    outer-product operands from distinct call sites cannot be summed
-    leaf-wise."""
+    The leaf key alone is not enough: eligibility also requires the
+    immediately enclosing ``attn``/``mlp`` subtree, which is exactly where
+    every ``xbar_linear`` call site lives (xlstm's mlstm block names its
+    projections ``wq``/``wk``/``wv`` at ``groups/<i>/wq`` — no block segment
+    — and consumes them through plain matmuls). Excludes any path under a
+    ``shared`` subtree (zamba shared transformer, MoE shared experts): those
+    weights are applied more than once per step, and outer-product operands
+    from distinct call sites cannot be summed leaf-wise."""
     parts = path_str.split("/")
     return (
         parts[-1] in OPERAND_LINEAR_KEYS
@@ -229,18 +280,79 @@ def _xbar_linear_bwd(res, dy):
 _xbar_linear.defvjp(_xbar_linear_fwd, _xbar_linear_bwd)
 
 
+def _float0_zeros(a):
+    """The cotangent of an integer leaf: zeros of the float0 tangent dtype
+    (what AD with ``allow_int`` expects back from a custom-vjp bwd)."""
+    if a is None:
+        return None
+    return np.zeros(np.shape(a), dtype=jax.dtypes.float0)
+
+
+@jax.custom_vjp
+def _xbar_linear_fid(x, ww):
+    y, _ = _xbar_linear_fid_fwd(x, ww)
+    return y
+
+
+def _xbar_linear_fid_fwd(x, ww):
+    from repro.core.mvm import fidelity_read  # lazy: core stays model-free
+
+    if ww.fid.fwd:
+        y = fidelity_read(ww.planes, ww.frac_bits, x, ww.fid).astype(x.dtype)
+    else:
+        y = x @ ww.w.astype(x.dtype)
+    return y, (x, ww)
+
+
+def _xbar_linear_fid_bwd(res, dy):
+    from repro.core.mvm import fidelity_read
+
+    x, ww = res
+    if ww.fid.bwd:
+        # layer-gradient read: the SAME planes driven from the columns (MᵀVM)
+        # through an adc_bits_bwd ADC — the finite-precision dx of the paper
+        dx = fidelity_read(ww.planes, ww.frac_bits, dy, ww.fid, transpose=True)
+        dx = dx.astype(dy.dtype)
+    else:
+        dx = dy @ ww.w.astype(dy.dtype).T
+    # Weight cotangent stays in operand form regardless of ADC setting: the
+    # OPA consumes (x, dh) directly (quantize+deposit fused downstream), so
+    # the all-analog loop closes without a dense [M, N] gradient. The planes
+    # / frac_bits leaves are integers — their cotangent is float0.
+    x2 = x.reshape(-1, x.shape[-1])
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    ct = XbarWeight(
+        jnp.zeros_like(ww.w),
+        OuterProductGrad(x2, dy2),
+        planes=_float0_zeros(ww.planes),
+        frac_bits=_float0_zeros(ww.frac_bits),
+        fid=ww.fid,
+    )
+    return dx, ct
+
+
+_xbar_linear_fid.defvjp(_xbar_linear_fid_fwd, _xbar_linear_fid_bwd)
+
+
 def xbar_linear(x, w, dtype=None):
     """``x @ w`` where ``w`` may be a plain array or an ``XbarWeight``.
 
     Plain arrays (inference, serving, the dense-grad fallback path) take the
     ordinary matmul with dense AD. ``XbarWeight`` params take the custom-vjp
     path whose weight cotangent is an ``OuterProductGrad`` — the crossbar
-    OPA's operand flow. ``dtype`` is the compute dtype on both branches (the
-    operand branch casts ``x``, so the two stay numerically interchangeable;
-    all model sites pass the activation dtype)."""
+    OPA's operand flow. An ``XbarWeight`` carrying planes + a
+    ``FidelityConfig`` takes the finite-ADC path instead: forward through the
+    packed sliced-MVM engine, backward ``dx`` through the MᵀVM transpose
+    read, weight cotangent still in operand form — together with the fused
+    OPA update this is the complete crossbar-in-the-loop training step.
+    ``dtype`` is the compute dtype on all branches (the operand branches cast
+    ``x``, so they stay numerically interchangeable; all model sites pass the
+    activation dtype)."""
     if isinstance(w, XbarWeight):
         if dtype is not None:
             x = x.astype(dtype)
+        if w.fid is not None and w.planes is not None:
+            return _xbar_linear_fid(x, w)
         return _xbar_linear(x, w)
     return x @ w.astype(dtype if dtype is not None else x.dtype)
 
@@ -315,6 +427,10 @@ class LMConfig:
     ssm: SSMCfg | None = None
     xlstm: XLSTMCfg | None = None
     zamba: ZambaCfg | None = None
+    # finite-ADC crossbar-in-the-loop mode: when set, make_train_step runs
+    # operand-eligible linears through the packed sliced-MVM/MᵀVM engine
+    # (see FidelityConfig; configs.with_fidelity attaches presets)
+    fidelity: FidelityConfig | None = None
     dense_ff_prefix: int | None = None  # deepseek layer-0 dense FFN width
     dtype: Any = jnp.bfloat16
     # which shape cells this arch supports (informational; launch reads it)

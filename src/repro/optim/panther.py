@@ -100,7 +100,17 @@ def _grad_leaf(x) -> bool:
     return is_outer_product_grad(x)
 
 
-def operandize(params, sliced, tokens: int, act_dtype):
+def _fid_leaves(s: SlicedTensor, stack: tuple):
+    """Planes/frac_bits of one leaf, re-laid-out for the layer scan: the S
+    slice dim moves behind the ``stack`` dims (lax.scan slices the leading
+    layer axis of every XbarWeight child) and the scalar frac_bits broadcasts
+    over the stack so each scanned layer carries its own copy."""
+    planes = jnp.moveaxis(s.planes, 0, len(stack))
+    frac = jnp.broadcast_to(s.frac_bits, stack)
+    return planes, frac
+
+
+def operandize(params, sliced, tokens: int, act_dtype, fid=None):
     """Wrap operand-eligible crossbar leaves of a materialized param tree in
     ``XbarWeight`` so the model's backward returns ``OuterProductGrad``
     weight cotangents instead of dense ``[M, N]`` matrices.
@@ -111,6 +121,12 @@ def operandize(params, sliced, tokens: int, act_dtype):
     Eligibility: the leaf has optimizer planes (``sliced`` non-None) and its
     path passes ``models.common.is_operand_path`` (single-use matmul
     weights only).
+
+    With ``fid`` (a ``FidelityConfig``), each wrap additionally carries the
+    leaf's digit planes + frac_bits so ``xbar_linear`` reads them through
+    the finite-ADC engine — forward MVM, backward MᵀVM ``dx`` — while the
+    weight cotangent stays in operand form for the fused OPA deposit: the
+    model trains against the same crossbar state the optimizer writes.
     """
 
     def wrap(path, p, s):
@@ -119,7 +135,27 @@ def operandize(params, sliced, tokens: int, act_dtype):
         stack = p.shape[:-2]
         xz = jnp.zeros((*stack, tokens, p.shape[-2]), act_dtype)
         dhz = jnp.zeros((*stack, tokens, p.shape[-1]), act_dtype)
-        return XbarWeight(p, OuterProductGrad(xz, dhz))
+        g = OuterProductGrad(xz, dhz)
+        if fid is None:
+            return XbarWeight(p, g)
+        planes, frac = _fid_leaves(s, stack)
+        return XbarWeight(p, g, planes=planes, frac_bits=frac, fid=fid)
+
+    return jax.tree_util.tree_map_with_path(wrap, params, sliced)
+
+
+def fidelitize(params, sliced, fid):
+    """Forward-only fidelity wrap for serving: operand-eligible leaves of a
+    materialized param tree become ``XbarWeight(w, None, planes, frac_bits,
+    fid)`` so prefill/decode read the crossbar through the finite-ADC engine
+    (no gradient slots — do not differentiate through the result; use
+    ``operandize(..., fid=...)`` inside the train step for that)."""
+
+    def wrap(path, p, s):
+        if s is None or not is_operand_path(_leaf_path_str(path)):
+            return p
+        planes, frac = _fid_leaves(s, p.shape[:-2])
+        return XbarWeight(p, None, planes=planes, frac_bits=frac, fid=fid)
 
     return jax.tree_util.tree_map_with_path(wrap, params, sliced)
 

@@ -3,6 +3,12 @@
 Weights are served from the sliced crossbar state (dequantized once outside
 the step — inference reads the same cells training wrote). ``decode_step``
 is the unit the decode_32k / long_500k dry-run cells lower.
+
+Finite-ADC serving: pass a tree produced by :func:`fidelity_params` instead
+of the plain dequantized params and every operand-eligible linear reads the
+int8 planes through the packed sliced-MVM engine at the configured ADC
+resolution — the Fig-9/10 serving-fidelity readout as a first-class serving
+mode (off-mesh; the sharded production path serves the lossless fast path).
 """
 from __future__ import annotations
 
@@ -13,6 +19,18 @@ from jax.sharding import NamedSharding
 from repro.distributed import sharding as shd
 from repro.models import lm
 from repro.models.common import LMConfig
+from repro.optim import panther
+
+
+def fidelity_params(params, sliced, fid):
+    """Wrap a served (materialized) param tree for finite-ADC reads.
+
+    ``sliced`` is the trainer's plane tree (``TrainState.sliced``); ``fid``
+    a ``models.common.FidelityConfig``. Returns params whose operand-eligible
+    leaves are forward-only ``XbarWeight`` wraps — feed them to the prefill /
+    decode fns built below. Forward-only: do not differentiate through them.
+    """
+    return panther.fidelitize(params, sliced, fid)
 
 
 def make_prefill(cfg: LMConfig, mesh=None, global_batch: int | None = None, max_seq: int | None = None):

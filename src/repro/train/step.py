@@ -154,6 +154,7 @@ def make_train_step(
     fsdp: bool = False,
     grad_dtype=jnp.float32,
     operand_grads: bool = True,
+    fidelity=None,
 ):
     """Returns ``train_step(state, batch) -> (state', metrics)``.
 
@@ -166,7 +167,33 @@ def make_train_step(
 
     ``operand_grads`` selects the fused outer-product pipeline (module
     docstring); ``False`` is the seed dense-grad path, kept for
-    equivalence testing and as a fallback."""
+    equivalence testing and as a fallback.
+
+    ``fidelity`` (a ``models.common.FidelityConfig``, defaulting to
+    ``cfg.fidelity``) turns on crossbar-in-the-loop training: operand-
+    eligible linears run their forward through the packed finite-ADC
+    sliced-MVM engine and their ``dx`` backward through the MᵀVM transpose
+    read, on the SAME int8 planes the OPA deposit writes — the Fig-9/10
+    study for gradients. The differentiated param tree then carries integer
+    plane leaves, so AD runs with ``allow_int`` (their cotangents are
+    float0, stripped with the operand zeros). Fidelity mode is a simulator
+    configuration: it requires ``operand_grads`` and runs off-mesh (the
+    sharded production step keeps the lossless dequantize→MXU fast path)."""
+    fidelity = fidelity if fidelity is not None else cfg.fidelity
+    if fidelity is not None:
+        if not operand_grads:
+            raise ValueError("fidelity mode rides the operand pipeline (operand_grads=True)")
+        if mesh is not None:
+            raise NotImplementedError(
+                "fidelity training is a (single-host) simulator mode; the mesh "
+                "path keeps the lossless fast-path numerics"
+            )
+        if fidelity.spec != opt_cfg.spec:
+            raise ValueError(
+                f"FidelityConfig.spec {fidelity.spec} must match the optimizer "
+                f"plane layout {opt_cfg.spec}"
+            )
+    allow_int = fidelity is not None
     mb_batch = global_batch // microbatches if global_batch else None
     gshard = pshard = None
     gnamed = None
@@ -232,14 +259,14 @@ def make_train_step(
                 tokens = inp.shape[-2] * inp.shape[-1]
             else:
                 tokens = inp.shape[-3] * inp.shape[-2]
-            params = panther.operandize(params, state.sliced, tokens, cfg.dtype)
+            params = panther.operandize(params, state.sliced, tokens, cfg.dtype, fid=fidelity)
         if pshard is not None:
             # keep the compute copy ZeRO-sharded in storage; the per-layer
             # all-gather happens inside the layer scan, not up front
             params = pshard(params)
 
         if microbatches == 1:
-            loss_val, grads = jax.value_and_grad(loss_of)(params, batch)
+            loss_val, grads = jax.value_and_grad(loss_of, allow_int=allow_int)(params, batch)
             if operand_grads:
                 grads = panther.strip_operand_grads(grads)
             if gshard is not None:
@@ -284,7 +311,7 @@ def make_train_step(
 
             def mb_body(carry, mb):
                 acc_l, acc_g = carry
-                l, g = jax.value_and_grad(loss_of)(params, mb)
+                l, g = jax.value_and_grad(loss_of, allow_int=allow_int)(params, mb)
                 g = panther.strip_operand_grads(g)
                 if gshard is not None:
                     g = gshard(g)

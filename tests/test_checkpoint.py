@@ -64,3 +64,87 @@ def test_restore_into_training_continues(tmp_path, state):
     planes0 = jax.tree.leaves(state.sliced)
     planes1 = jax.tree.leaves(restored.sliced)
     assert all((np.asarray(a) == np.asarray(b)).all() for a, b in zip(planes0, planes1))
+
+
+def test_restore_by_path_survives_key_reordering(tmp_path):
+    """Path-keyed manifests are position-independent: a template whose dict
+    keys sort differently (renamed sibling) still restores by path."""
+    tree = {"alpha": jnp.arange(4.0), "beta": jnp.ones((2, 2))}
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 1, tree)
+    template = {"beta": jnp.zeros((2, 2)), "alpha": jnp.zeros(4)}
+    restored, step = restore_latest(d, template)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["alpha"]), np.arange(4.0))
+    np.testing.assert_array_equal(np.asarray(restored["beta"]), np.ones((2, 2)))
+
+
+def test_restore_migrates_mla_wq_dkv_fusion(tmp_path):
+    """A checkpoint written with separate MLA ``wq``/``w_dkv`` projections
+    restores into the fused ``wq_dkv`` template: float leaves concatenate
+    exactly; SlicedTensor leaves re-slice onto the shared grid."""
+    rng = np.random.default_rng(0)
+    d_model, q_dim, dkv_dim = 16, 24, 12
+    wq = jnp.asarray(rng.normal(size=(2, d_model, q_dim)), jnp.float32)
+    w_dkv = jnp.asarray(rng.normal(size=(2, d_model, dkv_dim)), jnp.float32)
+    old = {"groups": [{"attn": {"wq": wq, "w_dkv": w_dkv, "wo": jnp.ones((4, 4))}}]}
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 2, old)
+
+    template = {
+        "groups": [{"attn": {
+            "wq_dkv": jnp.zeros((2, d_model, q_dim + dkv_dim)),
+            "wo": jnp.zeros((4, 4)),
+        }}]
+    }
+    restored, step = restore_latest(d, template)
+    assert step == 2
+    fused = np.asarray(restored["groups"][0]["attn"]["wq_dkv"])
+    np.testing.assert_array_equal(fused, np.concatenate([wq, w_dkv], axis=-1))
+    np.testing.assert_array_equal(np.asarray(restored["groups"][0]["attn"]["wo"]), 1.0)
+
+
+def test_restore_migrates_sliced_wq_dkv(tmp_path):
+    """SlicedTensor migration is INTEGER-exact on the shared grid — including
+    values past the f32 mantissa (|q| > 2^24: a float32 dequantize round-trip
+    would corrupt the low bits)."""
+    from repro.core import slice_weights, unslice_weights
+    from repro.optim.panther import SlicedTensor
+
+    rng = np.random.default_rng(1)
+    spec = PantherConfig().spec
+    # full 30-bit integer range: exercises the >2^24 regime explicitly
+    qa = jnp.asarray(rng.integers(-(2**30), 2**30, size=(8, 12)), jnp.int32)
+    qb = jnp.asarray(rng.integers(-(2**30), 2**30, size=(8, 6)), jnp.int32)
+    fq, fd = jnp.int32(28), jnp.int32(30)
+    old = {"attn": {
+        "wq": SlicedTensor(planes=slice_weights(qa, spec), frac_bits=fq),
+        "w_dkv": SlicedTensor(planes=slice_weights(qb, spec), frac_bits=fd),
+    }}
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 4, old)
+
+    template = {"attn": {"wq_dkv": SlicedTensor(
+        planes=jnp.zeros((spec.n_slices, 8, 18), jnp.int8), frac_bits=jnp.int32(0)
+    )}}
+    restored, _ = restore_latest(d, template)
+    st = restored["attn"]["wq_dkv"]
+    # logical value v·2^-F must be preserved exactly: compare on the shared
+    # grid in integer space (int64 — values can reach 2^32 after rescale)
+    f = int(st.frac_bits)
+    got = np.asarray(unslice_weights(st.planes, spec), np.int64)
+    lim = spec.canonical_limit
+    qa64 = np.clip(np.asarray(qa, np.int64), -lim, lim)  # slice_weights clips
+    qb64 = np.clip(np.asarray(qb, np.int64), -lim, lim)
+    want = np.concatenate(
+        [qa64 * 2 ** (f - int(fq)), np.rint(qb64 * 2.0 ** (f - int(fd))).astype(np.int64)],
+        axis=-1,
+    )
+    np.testing.assert_array_equal(got, np.clip(want, -lim, lim))
+
+
+def test_restore_missing_path_errors(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 1, {"a": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        restore_latest(d, {"b": jnp.zeros(3)})

@@ -1,0 +1,420 @@
+"""Crossbar-in-the-loop fidelity training (ISSUE 3 acceptance).
+
+Contracts:
+
+* the token-batched engine entry is bit-identical to per-token vector reads
+  (MVM and MᵀVM) across io_bits/adc_bits/slice specs — deterministic
+  parametrized coverage always runs; a hypothesis sweep widens it when
+  hypothesis is installed;
+* at ``adc_bits=None`` the fidelity forward/backward is BIT-IDENTICAL to the
+  float ``x @ dequantize(planes)`` / ``dy @ W^T`` path in the f32-exact
+  regime (inputs on the io grid, every intermediate sum within the f32
+  mantissa);
+* the batched entry issues one ``dot_general`` per crossbar tile per
+  bit-block — token-count-independent (jaxpr-counted), i.e. the batching
+  rework did not quietly vmap back into per-token matmuls;
+* the full train step runs at finite ADC, still emits operand grads for the
+  fused OPA update, and with the engine disabled per-path is bit-identical
+  to the plain operand pipeline.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import fidelity_presets, get_smoke, with_fidelity
+from repro.core import DEFAULT_SPEC, SliceSpec, dequantize_planes, slice_weights
+from repro.core.fixed_point import choose_frac_bits, exp2i, quantize
+from repro.core.mvm import fidelity_read
+from repro.kernels.sliced_mvm import mvm_sliced, mvm_sliced_batched
+from repro.models.common import FidelityConfig, OuterProductGrad, XbarWeight, xbar_linear
+from repro.optim import PantherConfig, panther
+from repro.optim.schedules import constant
+from repro.serve.step import fidelity_params
+from repro.train.step import make_train_step, train_state_init
+
+SPECS = [SliceSpec((4, 4, 4, 6, 6, 5, 5, 5)), SliceSpec.uniform(6), SliceSpec.uniform(5)]
+
+
+def _f32_cfg(arch="gemma_2b", **kw):
+    return dataclasses.replace(get_smoke(arch), dtype=jnp.float32, **kw)
+
+
+def _batch(cfg, B=4, S=16, seed=1):
+    return {
+        "inputs": jax.random.randint(jax.random.PRNGKey(seed), (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(seed + 1), (B, S), 0, cfg.vocab),
+    }
+
+
+def _planes_case(rng, m, n, spec, q_hi=2**8):
+    q = jnp.asarray(rng.integers(-q_hi, q_hi + 1, size=(m, n)), jnp.int32)
+    return slice_weights(q, spec)
+
+
+# ------------------- batched entry == per-token vector reads -----------------
+
+
+def _check_batched_matches_per_token(spec, io_bits, adc_bits, transpose, seed,
+                                     use_kernel=False):
+    rng = np.random.default_rng(seed)
+    m = n = 128
+    planes = _planes_case(rng, m, n, spec)
+    contract = n if transpose else m
+    hi = 2 ** (io_bits - 1) - 1
+    x = jnp.asarray(rng.integers(-hi, hi + 1, size=(3, 5, contract)), jnp.int32)
+    kw = dict(io_bits=io_bits, adc_bits=adc_bits, transpose=transpose)
+    if use_kernel:
+        kw.update(use_kernel=True, interpret=True)
+    got = np.asarray(mvm_sliced_batched(planes, x, spec, **kw))
+    # per-token: each flattened token through the 2-D vector entry alone
+    flat = x.reshape(-1, contract)
+    want = np.stack([
+        np.asarray(mvm_sliced(planes, flat[t:t + 1], spec, **kw))[0]
+        for t in range(flat.shape[0])
+    ]).reshape(got.shape)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("transpose", [False, True], ids=["mvm", "mtvm"])
+@pytest.mark.parametrize("adc_bits", [None, 6, 9])
+@pytest.mark.parametrize("use_kernel", [False, True], ids=["ref", "kernel"])
+def test_batched_matches_per_token(transpose, adc_bits, use_kernel):
+    _check_batched_matches_per_token(
+        DEFAULT_SPEC, 16, adc_bits, transpose, seed=7, use_kernel=use_kernel
+    )
+
+
+def test_batched_pads_ragged_token_counts():
+    """Token counts off the 8-granule pad with zero rows (sign 0 ⇒ zero bit
+    planes) and slice back — identical to the unpadded per-token reads."""
+    rng = np.random.default_rng(3)
+    planes = _planes_case(rng, 128, 128, DEFAULT_SPEC)
+    for t in (1, 7, 13):
+        x = jnp.asarray(rng.integers(-100, 101, size=(t, 128)), jnp.int32)
+        got = np.asarray(mvm_sliced_batched(
+            planes, x, DEFAULT_SPEC, io_bits=16, adc_bits=9,
+            use_kernel=True, interpret=True,
+        ))
+        want = np.asarray(mvm_sliced(planes, x, DEFAULT_SPEC, io_bits=16, adc_bits=9,
+                                     use_kernel=False))
+        np.testing.assert_array_equal(got, want)
+
+
+# hypothesis widening of the same property (satellite: batched MᵀVM backward
+# read bit-identical to per-token mvm_sliced(transpose=True) across
+# io_bits/adc_bits/slice specs)
+try:
+    from hypothesis import given, settings, strategies as st
+
+    mtvm_cfgs = st.tuples(
+        st.sampled_from(SPECS),
+        st.sampled_from([8, 16]),          # io_bits
+        st.sampled_from([None, 6, 9]),     # adc_bits
+        st.integers(min_value=0, max_value=2**31 - 1),
+    )
+
+    @settings(max_examples=10, deadline=None)
+    @given(mtvm_cfgs)
+    def test_batched_mtvm_bit_identical_per_token_hypothesis(cfg):
+        spec, io_bits, adc_bits, seed = cfg
+        _check_batched_matches_per_token(spec, io_bits, adc_bits, True, seed)
+        _check_batched_matches_per_token(spec, io_bits, adc_bits, True, seed,
+                                         use_kernel=True)
+
+except ImportError:  # pragma: no cover - hypothesis widens CI coverage only
+    pass
+
+
+# ---------------- adc=None bit-identity to the float fwd/bwd ----------------
+
+
+def _exact_case(seed, m=256, n=128, lead=(3, 5)):
+    """Inputs on the 2^-15 io grid at magnitudes keeping every intermediate
+    integer sum within the f32 mantissa (so any summation order is exact).
+
+    A ±0.5 sentinel pins max|x| so the free-range DAC picks exactly f=15
+    (margin 1) and xq is the raw grid integers. Sum bound per output:
+    sentinel 2^14·2^8 + 255 others ≤ 2^6·2^8 each → < 2^24. ✓
+    """
+    rng = np.random.default_rng(seed)
+    planes = _planes_case(rng, m, n, DEFAULT_SPEC)
+    F = jnp.int32(10 + int(rng.integers(0, 12)))
+    x = rng.integers(-64, 65, size=(*lead, m)).astype(np.float64)
+    dy = rng.integers(-64, 65, size=(*lead, n)).astype(np.float64)
+    x[..., 0] = 2.0**14 * np.where(x[..., 0] >= 0, 1, -1)
+    dy[..., 0] = 2.0**14 * np.where(dy[..., 0] >= 0, 1, -1)
+    return (planes, F,
+            jnp.asarray(x * 2.0**-15, jnp.float32),
+            jnp.asarray(dy * 2.0**-15, jnp.float32))
+
+
+def _check_ideal_adc_bit_identical(seed, use_kernel):
+    planes, F, x, dy = _exact_case(seed)
+    w = dequantize_planes(planes, F, DEFAULT_SPEC)
+    fid = FidelityConfig(use_kernel=use_kernel, interpret=use_kernel or None)
+    y = np.asarray(fidelity_read(planes, F, x, fid))
+    np.testing.assert_array_equal(y, np.asarray(x @ w))
+    dx = np.asarray(fidelity_read(planes, F, dy, fid, transpose=True))
+    np.testing.assert_array_equal(dx, np.asarray(dy @ w.T))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True], ids=["ref", "kernel"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fidelity_read_ideal_adc_bit_identical_to_float(seed, use_kernel):
+    _check_ideal_adc_bit_identical(seed, use_kernel)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_fidelity_read_ideal_adc_bit_identical_hypothesis(seed):
+        _check_ideal_adc_bit_identical(seed, use_kernel=False)
+
+except ImportError:  # pragma: no cover
+    pass
+
+
+def test_xbar_linear_fid_vjp_ideal_bit_identical_to_dense():
+    """Through the custom vjp: forward, dx, and the operand weight cotangent
+    all match the dense path (fwd/dx bitwise in the exact regime)."""
+    planes, F, x, dy = _exact_case(11)
+    w = dequantize_planes(planes, F, DEFAULT_SPEC)
+    T = x.shape[0] * x.shape[1]
+    ww = XbarWeight(
+        w, OuterProductGrad(jnp.zeros((T, x.shape[-1])), jnp.zeros((T, dy.shape[-1]))),
+        planes=planes, frac_bits=F, fid=FidelityConfig(),
+    )
+
+    y_fid = xbar_linear(x, ww)
+    np.testing.assert_array_equal(np.asarray(y_fid), np.asarray(x @ w))
+
+    def f_fid(x, ww):
+        return jnp.sum(xbar_linear(x, ww) * dy)
+
+    def f_dense(x, w):
+        return jnp.sum((x @ w) * dy)
+
+    gx_f, gw_f = jax.jit(jax.grad(f_fid, argnums=(0, 1), allow_int=True))(x, ww)
+    gx_d, gw_d = jax.grad(f_dense, argnums=(0, 1))(x, w)
+    np.testing.assert_array_equal(np.asarray(gx_f), np.asarray(gx_d))
+    assert isinstance(gw_f, XbarWeight) and isinstance(gw_f.g, OuterProductGrad)
+    np.testing.assert_allclose(
+        np.asarray(gw_f.g.materialize()), np.asarray(gw_d), rtol=1e-6, atol=1e-7
+    )
+    # integer plane leaves take float0 cotangents (stripped by the trainer)
+    assert gw_f.planes.dtype == jax.dtypes.float0
+
+
+def test_fidelity_read_small_cotangents_keep_io_resolution():
+    """The DAC scale is free-range: a tiny backward cotangent (max|dy| ~1e-4,
+    typical CE loss scale) still gets the full io_bits of resolution instead
+    of collapsing onto a handful of levels at a word-clipped F=15."""
+    rng = np.random.default_rng(17)
+    planes = _planes_case(rng, 128, 128, DEFAULT_SPEC)
+    F = jnp.int32(20)
+    w = dequantize_planes(planes, F, DEFAULT_SPEC)
+    dy = jnp.asarray(rng.normal(size=(4, 128)) * 1e-4, jnp.float32)
+    dx = np.asarray(fidelity_read(planes, F, dy, FidelityConfig(), transpose=True))
+    ref = np.asarray(dy @ w.T)
+    np.testing.assert_allclose(dx, ref, rtol=3e-3, atol=3e-3 * np.abs(ref).max())
+
+
+def test_exp2i_exact_everywhere():
+    """Runtime jnp.exp2 is an ulp off for many integer exponents (it lowers
+    to exp(e·ln2)); every fixed-point scale goes through exp2i instead."""
+    import math
+
+    e = jnp.arange(-126, 128, dtype=jnp.int32)
+    got = np.asarray(jax.jit(exp2i)(e), np.float64)
+    want = np.asarray([math.ldexp(1.0, int(i)) for i in np.asarray(e)])
+    np.testing.assert_array_equal(got, want)
+
+
+# ----------------- batching keeps the packed MXU shape (jaxpr) ---------------
+
+
+def _dot_count(fn, *args):
+    jaxpr = jax.make_jaxpr(fn)(*args)
+
+    def walk(jx, out):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "dot_general":
+                out += 1
+            for p in eqn.params.values():
+                vals = p if isinstance(p, (list, tuple)) else [p]
+                for v in vals:
+                    if hasattr(v, "jaxpr"):
+                        out = walk(v.jaxpr, out)
+                    elif hasattr(v, "eqns"):
+                        out = walk(v, out)
+        return out
+
+    return walk(jaxpr.jaxpr, 0)
+
+
+def test_batched_entry_dot_count_token_independent():
+    """One contraction per 128-row crossbar tile regardless of token count —
+    the batched rework must NOT vmap the vector engine into per-token dots."""
+    rng = np.random.default_rng(5)
+    planes = _planes_case(rng, 256, 128, DEFAULT_SPEC)  # 2 row tiles
+
+    def f(tokens):
+        x = jnp.zeros((*tokens, 256), jnp.int32)
+        return _dot_count(
+            lambda xx: mvm_sliced_batched(planes, xx, DEFAULT_SPEC, io_bits=16,
+                                          adc_bits=9, use_kernel=False),
+            x,
+        )
+
+    base = f((1,))
+    # per row tile: ONE packed (bit, slice) contraction + ONE shift-and-add
+    # fold (the static-scale contraction) — nothing else
+    assert base == 2 * 2, base
+    assert f((7,)) == base
+    assert f((3, 5)) == base
+    assert f((4, 29)) == base
+
+
+# ------------------------- end-to-end train step -----------------------------
+
+
+def test_fidelity_step_disabled_paths_bit_identical_to_plain():
+    """fwd=False, bwd=False exercises the whole fidelity plumbing (planes in
+    the differentiated tree, allow_int, float0 stripping) with float-matmul
+    numerics — must be bit-identical to the plain operand pipeline."""
+    cfg = _f32_cfg()
+    opt = PantherConfig(stochastic_round=False, crs_every=64)
+    batch = _batch(cfg, B=8, S=32)
+    fid = FidelityConfig(fwd=False, bwd=False)
+
+    s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    sa, ma = jax.jit(make_train_step(cfg, opt, constant(0.5)))(s0, batch)
+    s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    sb, mb = jax.jit(make_train_step(cfg, opt, constant(0.5), fidelity=fid))(s0, batch)
+
+    assert float(ma["loss"]) == float(mb["loss"])
+    for a, b in zip(jax.tree.leaves(sa.sliced), jax.tree.leaves(sb.sliced)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_fidelity_step_ideal_adc_tracks_float_step():
+    """adc=None full-model training: only the io-grid DAC quantization
+    separates it from the float step — losses must track tightly."""
+    cfg = _f32_cfg()
+    opt = PantherConfig(stochastic_round=False, crs_every=1000)
+    from repro.data import SyntheticLMDataset
+
+    ds = SyntheticLMDataset(cfg.vocab, seq_len=16, global_batch=4, seed=3)
+    sf = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    stepf = jax.jit(make_train_step(cfg, opt, constant(0.3)))
+    si = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    stepi = jax.jit(make_train_step(cfg, opt, constant(0.3),
+                                    fidelity=fidelity_presets()["ideal"]))
+    for i in range(3):
+        sf, mf = stepf(sf, ds.batch(i))
+        si, mi = stepi(si, ds.batch(i))
+        # step 0 compares identical weights (DAC rounding only); later steps
+        # compound the per-step quantization through the weight updates
+        assert abs(float(mf["loss"]) - float(mi["loss"])) < 2e-3 * (1 + 10 * i), i
+
+
+@pytest.mark.parametrize("preset", ["adc9", "adc6", "adc6_bwd", "adc6_fwd"])
+def test_fidelity_step_finite_adc_trains(preset):
+    """Finite-ADC settings (incl. per-path isolation) produce finite losses
+    and still update the planes through the fused OPA operand path."""
+    cfg = with_fidelity(_f32_cfg(), preset)  # threaded from the config
+    opt = PantherConfig(stochastic_round=False, crs_every=1000)
+    s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, opt, constant(0.3)))
+    s1, m = step(s0, _batch(cfg))
+    assert np.isfinite(float(m["loss"])) and np.isfinite(float(m["grad_norm"]))
+    changed = any(
+        (np.asarray(a.planes) != np.asarray(b.planes)).any()
+        for a, b in zip(
+            jax.tree.leaves(s0.sliced, is_leaf=lambda x: hasattr(x, "planes")),
+            jax.tree.leaves(s1.sliced, is_leaf=lambda x: hasattr(x, "planes")),
+        )
+        if hasattr(a, "planes")
+    )
+    assert changed
+
+
+def test_fidelity_bwd_only_keeps_forward_loss():
+    """fwd ideal + finite bwd: the forward loss equals the all-ideal run's
+    (same forward graph), while gradients differ — the gradient-read
+    isolation the sweep relies on."""
+    cfg = _f32_cfg()
+    opt = PantherConfig(stochastic_round=False, crs_every=1000)
+    batch = _batch(cfg)
+    presets = fidelity_presets()
+    s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    _, m_ideal = jax.jit(make_train_step(cfg, opt, constant(0.3),
+                                         fidelity=presets["ideal"]))(s0, batch)
+    s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    _, m_bwd = jax.jit(make_train_step(cfg, opt, constant(0.3),
+                                       fidelity=presets["adc6_bwd"]))(s0, batch)
+    assert float(m_ideal["loss"]) == float(m_bwd["loss"])
+    assert float(m_ideal["grad_norm"]) != float(m_bwd["grad_norm"])
+
+
+def test_fidelity_step_microbatched_runs():
+    cfg = _f32_cfg()
+    opt = PantherConfig(stochastic_round=False, crs_every=1000)
+    batch = _batch(cfg, B=8, S=16)
+    mb = jax.tree.map(lambda x: x.reshape(4, 2, *x.shape[1:]), batch)
+    step = jax.jit(make_train_step(cfg, opt, constant(0.3), microbatches=4,
+                                   fidelity=fidelity_presets()["adc9"]))
+    s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    _, m = step(s0, mb)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_fidelity_step_mla_arch_runs():
+    """Fidelity mode through the fused MLA projections (wq_dkv/w_uk/w_uv/wo
+    all read planes at finite ADC)."""
+    cfg = _f32_cfg("deepseek_v2_lite_16b")
+    opt = PantherConfig(stochastic_round=False, crs_every=1000)
+    step = jax.jit(make_train_step(cfg, opt, constant(0.1),
+                                   fidelity=fidelity_presets()["adc9"]))
+    s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    _, m = step(s0, _batch(cfg))
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_fidelity_requires_operand_pipeline():
+    cfg = _f32_cfg()
+    opt = PantherConfig()
+    with pytest.raises(ValueError):
+        make_train_step(cfg, opt, constant(0.1), operand_grads=False,
+                        fidelity=FidelityConfig())
+
+
+# ------------------------------- serving -------------------------------------
+
+
+def test_fidelity_serving_prefill_tracks_dense():
+    """Forward-only fidelitized params: prefill at adc=None stays within io
+    quantization distance of the dense serve; finite ADC runs and deviates."""
+    from repro.models import lm
+
+    cfg = _f32_cfg()
+    opt = PantherConfig(stochastic_round=False)
+    state = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    params = panther.materialize_split(state.digital, state.sliced, opt)
+    inputs = _batch(cfg)["inputs"]
+
+    logits_d, _ = jax.jit(lambda p, x: lm.prefill(cfg, p, x))(params, inputs)
+    p_fid = fidelity_params(params, state.sliced, FidelityConfig())
+    logits_i, _ = jax.jit(lambda p, x: lm.prefill(cfg, p, x))(p_fid, inputs)
+    np.testing.assert_allclose(
+        np.asarray(logits_i), np.asarray(logits_d), rtol=2e-3, atol=2e-3
+    )
+    p6 = fidelity_params(params, state.sliced, FidelityConfig(adc_bits_fwd=6))
+    logits_6, _ = jax.jit(lambda p, x: lm.prefill(cfg, p, x))(p6, inputs)
+    assert np.isfinite(np.asarray(logits_6)).all()
+    assert (np.asarray(logits_6) != np.asarray(logits_d)).any()

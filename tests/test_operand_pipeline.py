@@ -88,7 +88,8 @@ def test_grad_norm_chunked_matches_direct(t, monkeypatch):
 
 
 def test_operand_path_selector():
-    assert is_operand_path("groups/0/attn/wq")
+    assert is_operand_path("groups/0/attn/wqkv")
+    assert is_operand_path("groups/0/attn/wq_dkv")  # fused MLA q + dkv
     assert is_operand_path("groups/1/mlp/wi_gate")
     assert is_operand_path("groups/2/attn/w_uk")
     assert is_operand_path("groups/0/local/attn/wo")  # gemma2 pair
@@ -97,9 +98,11 @@ def test_operand_path_selector():
     assert not is_operand_path("shared/wq")  # multi-invocation zamba block
     assert not is_operand_path("groups/1/moe/shared/wo")  # dense-run experts
     assert not is_operand_path("groups/0/moe/experts_gate")
-    # xlstm mlstm blocks name their projections wq/wk/wv too, but consume
-    # them via plain matmuls — no attn/mlp segment, must stay dense
+    # xlstm mlstm blocks name their projections wq/wk/wv, but consume them
+    # via plain matmuls — no attn/mlp segment, and the keys left the operand
+    # set with the MLA fusion; they must stay dense either way
     assert not is_operand_path("groups/0/wq")
+    assert not is_operand_path("groups/0/attn/wq")  # pre-fusion key, retired
     assert not is_operand_path("groups/2/wk")
 
 
