@@ -1,15 +1,30 @@
 """Fig 10 reproduction: heterogeneous weight slicing — accuracy/energy
-trade-off over slicing configurations.
+trade-off over slicing configurations — plus the flagship *per-layer*
+heterogeneity demo built on the declarative mapping plan (``repro.plan``).
 
-Energy: MVM/MTVM ADC precision grows with the widest slice (§3.3/§6.3 —
-PANTHER's 44466555 costs +17.5% vs 2-bit-slice baselines); we price each
-config's MVM energy by an ADC-resolution model and report (energy, final
-loss) pairs. Expected: heterogeneous configs (extra bits on LOW-order
-slices) Pareto-dominate uniform ones; any config with a 3-bit slice
-degrades (paper: "Any configuration using 3 bit slices leads to significant
-accuracy degradation").
+Part 1 (``spec_sweep``): the paper's study at tensor granularity. Energy:
+MVM/MTVM ADC precision grows with the widest slice (§3.3/§6.3 — PANTHER's
+44466555 costs +17.5% vs 2-bit-slice baselines); we price each config's MVM
+energy by an ADC-resolution model and report (energy, final loss) pairs.
+Expected: heterogeneous configs (extra bits on LOW-order slices)
+Pareto-dominate uniform ones; any config with a 3-bit slice degrades (paper:
+"Any configuration using 3 bit slices leads to significant accuracy
+degradation").
+
+Part 2 (``hetero_plan_demo``): what the paper's *programmability* headline
+actually buys — ONE model whose layer groups run different crossbar
+configurations simultaneously. A three-line ``PlanRule`` list gives the
+first group uniform-6 slices read through a 9-bit ADC and the second group
+the paper's 44466555 spec at 6 bits; the model then trains end to end
+(finite-ADC forward MVM, backward MᵀVM, fused OPA deposit per leaf at its
+own spec) and serves through the same heterogeneous plan. Results land in
+``BENCH_fig10.json`` (the CI plan-smoke artifact).
 """
 from __future__ import annotations
+
+import dataclasses
+import json
+import os
 
 import numpy as np
 import jax
@@ -20,6 +35,9 @@ from repro.optim import PantherConfig, panther
 
 from .common import emit
 from .fig9_slice_crs import _fwd, _loss, _mlp, fidelity_loss
+
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+FIG10_JSON = os.environ.get("BENCH_FIG10_JSON", "BENCH_fig10.json")
 
 # MSB->LSB configs (paper Fig 10 uses sixteen; we sweep a representative set)
 CONFIGS = [
@@ -44,7 +62,7 @@ def _adc_energy_factor(spec: SliceSpec) -> float:
     return 2.0 ** ((bits - base_bits) * 0.5)
 
 
-def main(steps: int = 400, lr: float = 0.03):
+def spec_sweep(steps: int = 400, lr: float = 0.03):
     key = jax.random.PRNGKey(0)
     params0 = _mlp(jax.random.fold_in(key, 1))
     teacher = _mlp(jax.random.fold_in(key, 2))
@@ -67,21 +85,128 @@ def main(steps: int = 400, lr: float = 0.03):
         # serving-fidelity companion to the energy column: the trained planes
         # read through the sliced-MVM engine at the priced ADC resolutions
         adc = {a: fidelity_loss(p, state, cfg, batch, a) for a in (6, 9)}
-        results[name] = (loss, e, spec.total_bits)
+        results[name] = {
+            "loss": loss, "mvm_energy_x": e, "total_bits": spec.total_bits,
+            "loss_adc6": adc[6], "loss_adc9": adc[9],
+        }
         emit(
             f"fig10/{name}", 0.0,
             f"loss={loss:.4f};mvm_energy_x={e:.2f};total_bits={spec.total_bits};"
             f"loss_adc6={adc[6]:.4f};loss_adc9={adc[9]:.4f}",
         )
 
-    paper_pick = results["44466555"][0]
-    best_3bit = min(results[k][0] for k in results if "3" in k)
-    worst_non3 = max(results[k][0] for k in results if "3" not in k)
+    paper_pick = results["44466555"]["loss"]
+    best_3bit = min(results[k]["loss"] for k in results if "3" in k)
+    worst_non3 = max(results[k]["loss"] for k in results if "3" not in k)
     # relative ordering (toy scale): every 3-bit config is worse than every
     # non-3-bit config, and the paper pick beats uniform-4 at equal-ish bits
     emit("fig10/paper_claims", 0.0,
          f"paper_pick_loss={paper_pick:.4f};3bit_always_worst={best_3bit > worst_non3};"
-         f"hetero_beats_uniform4={paper_pick < results['44444444'][0]}")
+         f"hetero_beats_uniform4={paper_pick < results['44444444']['loss']}")
+    return results
+
+
+# ------------------- flagship: per-layer heterogeneity ----------------------
+
+# the whole per-layer configuration, as the plan API expresses it: group 0
+# gets high-resolution uniform-6 crossbars behind a 9-bit ADC, group 1 the
+# paper's 44466555 spec behind a 6-bit ADC (both read paths finite)
+HETERO_SPECS = {"groups/0": "66666666", "groups/1": "44466555"}
+HETERO_ADC = {"groups/0": 9, "groups/1": 6}
+
+
+def _hetero_rules(opt_cfg):
+    from repro.models.common import FidelityConfig
+    from repro.plan import PlanRule, default_rules
+
+    return default_rules(opt_cfg) + tuple(
+        PlanRule(f"{g}/*",
+                 spec=SliceSpec(tuple(int(c) for c in HETERO_SPECS[g])),
+                 fidelity=FidelityConfig(adc_bits_fwd=HETERO_ADC[g],
+                                         adc_bits_bwd=HETERO_ADC[g]))
+        for g in sorted(HETERO_SPECS)
+    )
+
+
+def hetero_plan_demo(steps: int | None = None, lr: float = 0.3):
+    """ONE model, two layer groups, two slice specs, two ADC resolutions —
+    trained and served end to end through the resolved plan."""
+    from repro.configs import get_smoke
+    from repro.data import SyntheticLMDataset
+    from repro.models import lm
+    from repro.optim.schedules import constant
+    from repro.plan import plan_by_path, plan_summary, resolve_plan
+    from repro.serve.step import fidelity_params
+    from repro.train.step import make_train_step, train_state_init
+
+    steps = steps if steps is not None else (3 if SMOKE else 40)
+    cfg = dataclasses.replace(
+        get_smoke("gemma_2b"), dtype=jnp.float32,
+        pattern=(("dense", 2), ("dense", 2)), n_layers=4,
+    )
+    opt = PantherConfig(stochastic_round=False, crs_every=1 << 20)
+    rules = _hetero_rules(opt)
+    shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    plan = resolve_plan(shapes, rules)
+    print("hetero plan:\n" + plan_summary(plan))
+
+    # sanity: the acceptance contract — >=2 distinct specs AND >=2 distinct
+    # ADC settings live in one model
+    mapped = [pl for pl in plan_by_path(plan).values() if pl.mapped]
+    specs = {pl.spec.name() for pl in mapped}
+    adcs = {(pl.fidelity.adc_bits_fwd, pl.fidelity.adc_bits_bwd)
+            for pl in mapped if pl.fidelity is not None}
+    assert len(specs) >= 2, specs
+    assert len(adcs) >= 2, adcs
+
+    ds = SyntheticLMDataset(cfg.vocab, seq_len=32, global_batch=8, seed=3)
+    state = train_state_init(cfg, opt, jax.random.PRNGKey(0), plan=plan)
+    step = jax.jit(make_train_step(cfg, opt, constant(lr), plan=plan))
+    losses = []
+    for i in range(steps):
+        state, m = step(state, ds.batch(i))
+        losses.append(float(m["loss"]))
+
+    # serve THROUGH the heterogeneous plan (per-group ADC on the forward
+    # read) and, as a reference, the lossless dequantized fast path; the
+    # eval metric is the forward LM loss on a held-out batch, and prefill
+    # exercises the cache path end to end
+    params = panther.materialize_split(state.digital, state.sliced, opt)
+    batch = ds.batch(steps)
+
+    def serve_loss(p):
+        logits, _ = jax.jit(lambda p, x: lm.prefill(cfg, p, x))(p, batch["inputs"])
+        assert np.isfinite(np.asarray(logits)).all()
+        return float(jax.jit(
+            lambda p, b: lm.loss_fn(cfg, p, b, remat=False)
+        )(p, batch))
+
+    serve_hetero = serve_loss(fidelity_params(params, state.sliced, plan=plan))
+    serve_lossless = serve_loss(params)
+
+    record = {
+        "arch": cfg.arch_id, "steps": steps, "lr": lr, "smoke": SMOKE,
+        "specs": HETERO_SPECS, "adc": HETERO_ADC,
+        "n_distinct_specs": len(specs), "n_distinct_adc": len(adcs),
+        "train_losses": losses,
+        "serve_loss_hetero": serve_hetero, "serve_loss_lossless": serve_lossless,
+    }
+    emit("fig10/hetero_plan", 0.0,
+         f"specs={len(specs)};adcs={len(adcs)};loss0={losses[0]:.4f};"
+         f"lossN={losses[-1]:.4f};serve_hetero={serve_hetero:.4f};"
+         f"serve_lossless={serve_lossless:.4f}")
+    assert all(np.isfinite(losses)) and np.isfinite(serve_hetero)
+    return record
+
+
+def main():
+    results = {"hetero_plan": hetero_plan_demo()}
+    # smoke keeps CI fast: the tensor-granularity sweep trains 9 configs x
+    # 400 steps — full runs only outside BENCH_SMOKE
+    results["spec_sweep"] = spec_sweep(steps=3 if SMOKE else 400)
+    with open(FIG10_JSON, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    emit("fig10/json", 0.0, f"wrote={FIG10_JSON}")
 
 
 if __name__ == "__main__":

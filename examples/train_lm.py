@@ -48,6 +48,11 @@ def main():
                     help="crossbar-in-the-loop preset (ideal|adc9|adc6|adc6_bwd|"
                          "adc6_fwd): forward MVM + backward MᵀVM read the live "
                          "planes at finite ADC resolution")
+    ap.add_argument("--plan", default=None, choices=["default", "hetero"],
+                    help="declarative per-leaf mapping plan (repro.plan): "
+                         "'default' resolves + prints the behavior-preserving "
+                         "plan; 'hetero' demos per-layer-group heterogeneity "
+                         "(two slice specs + two ADC resolutions in one model)")
     args = ap.parse_args()
 
     cfg = config_100m()
@@ -56,6 +61,36 @@ def main():
 
         cfg = with_fidelity(dataclasses.replace(cfg, dtype=jnp.float32), args.fidelity)
         print(f"fidelity mode: {cfg.fidelity}")
+
+    opt_cfg = PantherConfig(stochastic_round=True, crs_every=1024)
+
+    plan = None
+    if args.plan:
+        from repro.core import SliceSpec
+        from repro.models import lm
+        from repro.models.common import FidelityConfig
+        from repro.plan import PlanRule, default_rules, plan_summary, resolve_plan
+
+        if args.fidelity and args.plan == "hetero":
+            raise SystemExit("--plan hetero attaches per-leaf fidelity itself; "
+                             "drop --fidelity")
+        if args.plan == "hetero":
+            # split the 12 layers into two scanned groups so rules can give
+            # each its own crossbar configuration
+            cfg = dataclasses.replace(cfg, dtype=jnp.float32,
+                                      pattern=(("dense", 6), ("dense", 6)))
+            rules = default_rules(opt_cfg) + (
+                PlanRule("groups/0/*", spec=SliceSpec.uniform(6),
+                         fidelity=FidelityConfig(adc_bits_fwd=9, adc_bits_bwd=9)),
+                PlanRule("groups/1/*",
+                         fidelity=FidelityConfig(adc_bits_fwd=6, adc_bits_bwd=6)),
+            )
+        else:
+            rules = default_rules(opt_cfg, fidelity=cfg.fidelity)
+            cfg = dataclasses.replace(cfg, fidelity=None)  # rides the plan now
+        shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+        plan = resolve_plan(shapes, rules)
+        print(f"--plan {args.plan} resolved:\n{plan_summary(plan)}")
     n_params = (
         cfg.vocab * cfg.d_model
         + cfg.n_layers
@@ -63,16 +98,18 @@ def main():
            + 2 * cfg.d_model * cfg.n_kv_heads * cfg.head_dim
            + 3 * cfg.d_model * cfg.d_ff)
     )
-    print(f"params ~{n_params / 1e6:.0f}M; PANTHER spec 44466555, CRS every 1024")
+    print(f"params ~{n_params / 1e6:.0f}M; PANTHER spec {opt_cfg.spec.name()}, "
+          f"CRS every {opt_cfg.crs_every}")
 
-    opt_cfg = PantherConfig(stochastic_round=True, crs_every=1024)
     sched = wsd(args.lr, warmup=20, stable=int(args.steps * 0.6), decay=max(args.steps // 5, 1))
     ds = SyntheticLMDataset(cfg.vocab, args.seq, args.batch, seed=3)
 
-    step_fn = jax.jit(make_train_step(cfg, opt_cfg, sched), donate_argnums=0)
-    state = train_state_init(cfg, opt_cfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, sched, plan=plan), donate_argnums=0)
+    state = train_state_init(cfg, opt_cfg, jax.random.PRNGKey(0), plan=plan)
 
-    ckpt = CheckpointManager(args.ckpt_dir, every=100)
+    # the plan persists in every manifest: a restore under a different
+    # slicing layout fails loudly instead of misreading the planes
+    ckpt = CheckpointManager(args.ckpt_dir, every=100, plan=plan)
     restored, rstep = ckpt.restore(state)
     start = 0
     if restored is not None:
@@ -86,7 +123,7 @@ def main():
             print(f"step {step:4d} loss {float(m['loss']):.4f} lr {float(m['lr']):.3f} "
                   f"({time.time() - t0:.0f}s)", flush=True)
         ckpt.maybe_save(step, state)
-    save_checkpoint(args.ckpt_dir, args.steps - 1, state)
+    save_checkpoint(args.ckpt_dir, args.steps - 1, state, plan=plan)
     print("final loss:", float(m["loss"]))
 
 

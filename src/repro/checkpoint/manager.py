@@ -64,7 +64,10 @@ def _flatten_with_paths(tree):
     return paths, [leaf for _, leaf in flat], treedef
 
 
-def save_checkpoint(directory: str, step: int, tree, keep_last: int = 3) -> str:
+def save_checkpoint(directory: str, step: int, tree, keep_last: int = 3, plan=None) -> str:
+    """``plan``: optional resolved ``repro.plan`` tree persisted alongside
+    the leaves so a restore can validate layout compatibility (mapped leaves
+    + slice specs) before reinterpreting stored digit planes."""
     os.makedirs(directory, exist_ok=True)
     name = f"step_{step:09d}"
     tmp = os.path.join(directory, name + ".tmp")
@@ -75,6 +78,10 @@ def save_checkpoint(directory: str, step: int, tree, keep_last: int = 3) -> str:
 
     paths, leaves, treedef = _flatten_with_paths(tree)
     manifest = {"step": step, "leaves": [], "treedef": str(treedef)}
+    if plan is not None:
+        from repro.plan import plan_manifest  # lazy: checkpoint stays light
+
+        manifest["plan"] = plan_manifest(plan)
     idx = 0
     for ps, leaf in zip(paths, leaves):
         if leaf is None:
@@ -165,13 +172,19 @@ def _fuse_wq_dkv(a, b):
     return np.concatenate([a, b], axis=-1)
 
 
-def restore_latest(directory: str, template, shardings=None):
+def restore_latest(directory: str, template, shardings=None, plan=None):
     """Restore the newest committed checkpoint into ``template``'s structure.
 
     ``shardings``: optional pytree of NamedSharding (matching template) to
     place leaves onto a (possibly different — elastic) mesh. Manifests with
     leaf paths restore by path (with key migrations, e.g. wq+w_dkv→wq_dkv);
     legacy manifests restore positionally.
+
+    ``plan``: the restoring job's resolved ``repro.plan`` tree. When both it
+    and the manifest's persisted plan exist, storage layout (mapped leaves,
+    per-leaf slice specs) is validated path-by-path BEFORE any leaf loads —
+    a spec mismatch raises ``ValueError`` instead of silently misreading
+    digit planes sliced under a different configuration.
     """
     steps = list_checkpoints(directory)
     if not steps:
@@ -180,6 +193,11 @@ def restore_latest(directory: str, template, shardings=None):
     path = os.path.join(directory, f"step_{step:09d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
+
+    if plan is not None and manifest.get("plan"):
+        from repro.plan import check_plan_compat
+
+        check_plan_compat(manifest["plan"], plan, context=f"checkpoint step {step}")
 
     t_paths, t_leaves, treedef = _flatten_with_paths(template)
     s_leaves = _flatten(shardings)[0] if shardings is not None else [None] * len(t_leaves)
@@ -242,15 +260,18 @@ def restore_latest(directory: str, template, shardings=None):
 class CheckpointManager:
     """Save-every-N wrapper with async-friendly interface and crash recovery."""
 
-    def __init__(self, directory: str, every: int = 100, keep_last: int = 3):
+    def __init__(self, directory: str, every: int = 100, keep_last: int = 3, plan=None):
         self.directory = directory
         self.every = every
         self.keep_last = keep_last
+        # resolved repro.plan tree: persisted with every save, validated
+        # against the stored layout on every restore
+        self.plan = plan
 
     def maybe_save(self, step: int, tree) -> str | None:
         if step % self.every == 0 and step > 0:
-            return save_checkpoint(self.directory, step, tree, self.keep_last)
+            return save_checkpoint(self.directory, step, tree, self.keep_last, plan=self.plan)
         return None
 
     def restore(self, template, shardings=None):
-        return restore_latest(self.directory, template, shardings)
+        return restore_latest(self.directory, template, shardings, plan=self.plan)

@@ -44,15 +44,20 @@ _RULES: list[tuple[str, tuple]] = [
 from repro.models.common import path_str as _path_str  # noqa: E402
 
 
-def trailing_spec(path_str: str) -> tuple:
+def trailing_spec(path_str: str, hint: tuple | None = None) -> tuple:
+    """Trailing-dims mesh-axis assignment for a leaf: an explicit ``hint``
+    (a ``LeafPlan.shard`` from the resolved mapping plan) wins; otherwise
+    the name rules above apply."""
+    if hint is not None:
+        return tuple(hint)
     for pat, spec in _RULES:
         if re.search(pat, path_str):
             return spec
     return ()
 
 
-def leaf_spec(path_str: str, ndim: int) -> P:
-    t = trailing_spec(path_str)
+def leaf_spec(path_str: str, ndim: int, hint: tuple | None = None) -> P:
+    t = trailing_spec(path_str, hint=hint)
     if len(t) > ndim:
         t = t[-ndim:]
     return P(*((None,) * (ndim - len(t)) + tuple(t)))
@@ -81,11 +86,19 @@ def sanitize_spec(spec: P, shape: tuple, mesh) -> P:
     return P(*out)
 
 
-def param_specs(params, mesh=None) -> Any:
-    """PartitionSpec pytree for a parameter (or gradient) tree."""
+def param_specs(params, mesh=None, plan=None) -> Any:
+    """PartitionSpec pytree for a parameter (or gradient) tree. ``plan`` (a
+    resolved ``repro.plan`` tree mirroring ``params``) supplies per-leaf
+    shard hints overriding the name rules."""
+    hints = {}
+    if plan is not None:
+        from repro.plan import plan_by_path  # local: avoid module cycle
+
+        hints = {p: pl.shard for p, pl in plan_by_path(plan).items()}
 
     def spec(path, leaf):
-        s = leaf_spec(_path_str(path), leaf.ndim)
+        ps = _path_str(path)
+        s = leaf_spec(ps, leaf.ndim, hint=hints.get(ps))
         if mesh is not None:
             s = sanitize_spec(s, leaf.shape, mesh)
         return s
@@ -93,7 +106,8 @@ def param_specs(params, mesh=None) -> Any:
     return jax.tree_util.tree_map_with_path(spec, params)
 
 
-def operand_grad_spec(path_str: str, wshape: tuple, mesh, mb_batch: int | None):
+def operand_grad_spec(path_str: str, wshape: tuple, mesh, mb_batch: int | None,
+                      hint: tuple | None = None):
     """Sharding for an outer-product gradient leaf ``OuterProductGrad(x, dh)``
     of the weight at ``path_str`` with dense shape ``wshape`` [*stack, M, N].
 
@@ -106,7 +120,7 @@ def operand_grad_spec(path_str: str, wshape: tuple, mesh, mb_batch: int | None):
     """
     from repro.models.common import OuterProductGrad  # local: avoid cycles
 
-    base = leaf_spec(path_str, len(wshape))
+    base = leaf_spec(path_str, len(wshape), hint=hint)
     if mesh is not None:
         base = sanitize_spec(base, wshape, mesh)
     base = tuple(base) + (None,) * (len(wshape) - len(tuple(base)))

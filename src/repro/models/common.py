@@ -238,23 +238,13 @@ OPERAND_LINEAR_KEYS = frozenset(
 
 
 def is_operand_path(path_str: str) -> bool:
-    """Whether the parameter at this '/'-joined path flows operand grads.
+    """Compatibility shim: the canonical operand-eligibility predicate now
+    lives in ``repro.plan.operand_eligible_path`` (the default-rule set of
+    the declarative mapping plan), fed by :data:`OPERAND_LINEAR_KEYS` above.
+    Kept so existing callers and tests keep one import site."""
+    from repro.plan import operand_eligible_path  # lazy: plan imports this module
 
-    The leaf key alone is not enough: eligibility also requires the
-    immediately enclosing ``attn``/``mlp`` subtree, which is exactly where
-    every ``xbar_linear`` call site lives (xlstm's mlstm block names its
-    projections ``wq``/``wk``/``wv`` at ``groups/<i>/wq`` — no block segment
-    — and consumes them through plain matmuls). Excludes any path under a
-    ``shared`` subtree (zamba shared transformer, MoE shared experts): those
-    weights are applied more than once per step, and outer-product operands
-    from distinct call sites cannot be summed leaf-wise."""
-    parts = path_str.split("/")
-    return (
-        parts[-1] in OPERAND_LINEAR_KEYS
-        and len(parts) >= 2
-        and parts[-2] in ("attn", "mlp")
-        and "shared" not in parts
-    )
+    return operand_eligible_path(path_str)
 
 
 @jax.custom_vjp

@@ -12,6 +12,12 @@ SGD.
 MCU variants (paper §4): V1/V2/V3 have identical *step-level* numerics (the
 ISA simulator models their scheduling/energy differences); the trainer
 records the variant for the benchmark layer.
+
+Which leaves live as planes — and at which per-leaf slice spec, gradient
+path, and ADC configuration — is decided by a resolved ``repro.plan`` tree
+(pass ``plan=`` to ``init``/``update``/``operandize``/...); with no plan the
+behavior-preserving ``repro.plan.default_rules(cfg)`` applies (matrix dims
+[-2:] >= ``min_dim``, float dtype, single-use matmul weights flow operands).
 """
 from __future__ import annotations
 
@@ -36,10 +42,10 @@ from repro.kernels.sliced_opa import opa_deposit, opa_fused_update
 from repro.models.common import (
     OuterProductGrad,
     XbarWeight,
-    is_operand_path,
     is_outer_product_grad,
     path_str as _leaf_path_str,
 )
+from repro.plan import default_rules, operand_eligible_path, resolve_plan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,17 +86,17 @@ def _crs_dispatch(planes, spec):
     return crs_fn(planes, spec)
 
 
-def _is_crossbar_mapped(p, cfg: PantherConfig) -> bool:
-    # Crossbar eligibility is a property of the *matrix* dims [-2:]: leading
-    # dims are lax.scan layer stacks / MoE expert stacks (each slice is its
-    # own crossbar tile). Checking min over the whole shape would kick every
-    # few-layer stacked group off the planes ([2, M, N] has min 2), silently
-    # putting most of the model on the float path.
-    return (
-        p.ndim >= cfg.min_ndim
-        and min(p.shape[-2:]) >= cfg.min_dim
-        and p.dtype in (jnp.float32, jnp.bfloat16, jnp.float16)
-    )
+def _default_plan(params, cfg: PantherConfig):
+    """The behavior-preserving plan (repro.plan.default_rules): matrix-shaped
+    float leaves map to planes at ``cfg.spec``; everything else is digital."""
+    return resolve_plan(params, default_rules(cfg))
+
+
+def _plan_leaves(plan, treedef, n: int):
+    """Per-leaf ``LeafPlan | None`` aligned with a flattened grads tree."""
+    if plan is None:
+        return [None] * n
+    return treedef.flatten_up_to(plan)
 
 
 def _grad_leaf(x) -> bool:
@@ -110,7 +116,7 @@ def _fid_leaves(s: SlicedTensor, stack: tuple):
     return planes, frac
 
 
-def operandize(params, sliced, tokens: int, act_dtype, fid=None):
+def operandize(params, sliced, tokens: int, act_dtype, fid=None, plan=None):
     """Wrap operand-eligible crossbar leaves of a materialized param tree in
     ``XbarWeight`` so the model's backward returns ``OuterProductGrad``
     weight cotangents instead of dense ``[M, N]`` matrices.
@@ -118,46 +124,77 @@ def operandize(params, sliced, tokens: int, act_dtype, fid=None):
     ``tokens`` is the flattened token count per differentiated forward (one
     microbatch: ``B * S``); the zero slots give the custom-vjp backward a
     matching cotangent structure to thread the real operands through.
-    Eligibility: the leaf has optimizer planes (``sliced`` non-None) and its
-    path passes ``models.common.is_operand_path`` (single-use matmul
-    weights only).
+    Eligibility: the leaf has optimizer planes (``sliced`` non-None) and
+    either its resolved ``plan`` leaf says ``grad="operand"`` or — with no
+    plan — its path passes the default operand rule
+    (``repro.plan.operand_eligible_path``: single-use matmul weights only).
 
-    With ``fid`` (a ``FidelityConfig``), each wrap additionally carries the
-    leaf's digit planes + frac_bits so ``xbar_linear`` reads them through
-    the finite-ADC engine — forward MVM, backward MᵀVM ``dx`` — while the
-    weight cotangent stays in operand form for the fused OPA deposit: the
-    model trains against the same crossbar state the optimizer writes.
+    With ``fid`` (a ``FidelityConfig``, or per-leaf ``plan.fidelity``), each
+    wrap additionally carries the leaf's digit planes + frac_bits so
+    ``xbar_linear`` reads them through the finite-ADC engine — forward MVM,
+    backward MᵀVM ``dx`` — while the weight cotangent stays in operand form
+    for the fused OPA deposit: the model trains against the same crossbar
+    state the optimizer writes.
     """
+    if plan is not None and fid is not None:
+        raise ValueError("pass fidelity per-leaf through the plan, not both")
 
-    def wrap(path, p, s):
-        if s is None or not is_operand_path(_leaf_path_str(path)):
+    def wrap(path, p, s, pl):
+        if s is None:
             return p
+        if pl is not None:
+            if pl.grad != "operand":
+                return p
+            leaf_fid = pl.fidelity
+        else:
+            if not operand_eligible_path(_leaf_path_str(path)):
+                return p
+            leaf_fid = fid
         stack = p.shape[:-2]
         xz = jnp.zeros((*stack, tokens, p.shape[-2]), act_dtype)
         dhz = jnp.zeros((*stack, tokens, p.shape[-1]), act_dtype)
         g = OuterProductGrad(xz, dhz)
-        if fid is None:
+        if leaf_fid is None:
             return XbarWeight(p, g)
         planes, frac = _fid_leaves(s, stack)
-        return XbarWeight(p, g, planes=planes, frac_bits=frac, fid=fid)
+        return XbarWeight(p, g, planes=planes, frac_bits=frac, fid=leaf_fid)
 
-    return jax.tree_util.tree_map_with_path(wrap, params, sliced)
+    if plan is None:
+        return jax.tree_util.tree_map_with_path(
+            lambda path, p, s: wrap(path, p, s, None), params, sliced
+        )
+    return jax.tree_util.tree_map_with_path(wrap, params, sliced, plan)
 
 
-def fidelitize(params, sliced, fid):
+def fidelitize(params, sliced, fid=None, plan=None):
     """Forward-only fidelity wrap for serving: operand-eligible leaves of a
     materialized param tree become ``XbarWeight(w, None, planes, frac_bits,
     fid)`` so prefill/decode read the crossbar through the finite-ADC engine
     (no gradient slots — do not differentiate through the result; use
-    ``operandize(..., fid=...)`` inside the train step for that)."""
+    ``operandize`` with fidelity inside the train step for that). With a
+    resolved ``plan``, each leaf uses its own ``plan.fidelity`` (leaves
+    without one serve the lossless dequantized fast path) — heterogeneous
+    per-layer ADC as a serving mode."""
+    if plan is not None and fid is not None:
+        raise ValueError("pass fidelity per-leaf through the plan, not both")
 
-    def wrap(path, p, s):
-        if s is None or not is_operand_path(_leaf_path_str(path)):
+    def wrap(path, p, s, pl):
+        if s is None:
+            return p
+        if pl is not None:
+            leaf_fid = pl.fidelity if pl.grad == "operand" else None
+        else:
+            leaf_fid = fid if operand_eligible_path(_leaf_path_str(path)) else None
+        if leaf_fid is None:
             return p
         planes, frac = _fid_leaves(s, p.shape[:-2])
-        return XbarWeight(p, None, planes=planes, frac_bits=frac, fid=fid)
+        return XbarWeight(p, None, planes=planes, frac_bits=frac, fid=leaf_fid)
 
-    return jax.tree_util.tree_map_with_path(wrap, params, sliced)
+    if plan is None:
+        return jax.tree_util.tree_map_with_path(
+            lambda path, p, s: wrap(path, p, s, None), params, sliced
+        )
+    return jax.tree_util.tree_map_with_path(wrap, params, sliced, plan)
 
 
 def strip_operand_grads(grads):
@@ -184,15 +221,29 @@ def global_grad_norm(grads) -> jax.Array:
     return jnp.sqrt(total)
 
 
-def init(params, cfg: PantherConfig = PantherConfig()) -> PantherState:
-    def init_leaf(p):
-        if not _is_crossbar_mapped(p, cfg):
+def init(params, cfg: PantherConfig = PantherConfig(), plan=None) -> PantherState:
+    """``plan`` (a resolved ``repro.plan`` tree) decides which leaves get
+    planes and at which per-leaf :class:`SliceSpec`; ``None`` resolves the
+    behavior-preserving default plan from ``cfg``.
+
+    A state initialized under a heterogeneous plan must be driven with the
+    SAME plan everywhere (``update``/``update_split``/``saturation_report``):
+    plan-less calls fall back to ``cfg.spec`` rails for deposits and CRS,
+    which silently mis-clip planes sliced under a different spec (the two
+    layouts share S, so no shape error fires). Checkpoints persist the plan
+    (``save_checkpoint(plan=...)``) so restores validate this; in-process,
+    threading the plan is the caller's contract."""
+    if plan is None:
+        plan = _default_plan(params, cfg)
+
+    def init_leaf(p, pl):
+        if not pl.mapped:
             return None
         f = choose_frac_bits(p, margin_bits=cfg.margin_bits)
         q = quantize(p, f)
-        return SlicedTensor(planes=slice_weights(q, cfg.spec), frac_bits=f)
+        return SlicedTensor(planes=slice_weights(q, pl.spec), frac_bits=f)
 
-    sliced = jax.tree.map(init_leaf, params)
+    sliced = jax.tree.map(init_leaf, params, plan)
     mom = jax.tree.map(lambda p: jnp.zeros_like(p) if cfg.momentum > 0 else None, params)
     return PantherState(step=jnp.zeros((), jnp.int32), sliced=sliced, momentum=mom)
 
@@ -219,12 +270,14 @@ def update(
     lr: jax.Array,
     cfg: PantherConfig = PantherConfig(),
     rng: jax.Array | None = None,
+    plan=None,
 ):
     """One PANTHER step. Returns (new_params, new_state).
 
     grads/params are float trees; the sliced leaves' float values are
     regenerated from the planes after the OPA deposit (single source of
-    truth = the crossbar state).
+    truth = the crossbar state). ``plan`` supplies per-leaf slice specs
+    (heterogeneous crossbars); ``None`` uses ``cfg.spec`` everywhere.
     """
     step = state.step
     do_crs = (step % cfg.crs_every) == (cfg.crs_every - 1)
@@ -235,9 +288,13 @@ def update(
     leaves_p = treedef.flatten_up_to(params)
     leaves_s = treedef.flatten_up_to(state.sliced)
     leaves_m = treedef.flatten_up_to(state.momentum)
+    leaves_pl = _plan_leaves(plan, treedef, len(leaves_g))
 
     new_p, new_s, new_m = [], [], []
-    for i, (g, p, s, m) in enumerate(zip(leaves_g, leaves_p, leaves_s, leaves_m)):
+    for i, (g, p, s, m, pl) in enumerate(
+        zip(leaves_g, leaves_p, leaves_s, leaves_m, leaves_pl)
+    ):
+        spec = pl.spec if pl is not None else cfg.spec
         if is_outer_product_grad(g) and (s is None or (cfg.momentum > 0 and m is not None)):
             g = g.materialize()  # momentum/VFU buffers are dense by nature
         if cfg.momentum > 0 and m is not None:
@@ -254,7 +311,7 @@ def update(
         if is_outer_product_grad(g_eff):
             # operand path: X^T@dH -> quantize -> deposit in one fused pass
             planes = opa_fused_update(
-                s.planes, g_eff.x, g_eff.dh, lr, s.frac_bits, cfg.spec,
+                s.planes, g_eff.x, g_eff.dh, lr, s.frac_bits, spec,
                 stochastic=cfg.stochastic_round, key=key,
                 use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
             )
@@ -267,10 +324,12 @@ def update(
                 key=key,
             )
             planes = opa_deposit(
-                s.planes, upd, cfg.spec,
+                s.planes, upd, spec,
                 use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
             )
-        planes = jax.lax.cond(do_crs, lambda x: _crs_dispatch(x, cfg.spec), lambda x: x, planes)
+        planes = jax.lax.cond(
+            do_crs, lambda x, _s=spec: _crs_dispatch(x, _s), lambda x: x, planes
+        )
         new_sliced = SlicedTensor(planes=planes, frac_bits=s.frac_bits)
         new_s.append(new_sliced)
         new_m.append(m)
@@ -296,16 +355,21 @@ def _is_none_or_leaf(x):
     return x is None or isinstance(x, (SlicedTensor, jax.Array)) or hasattr(x, "shape")
 
 
-def init_split(params, cfg: PantherConfig = PantherConfig()):
-    """-> (digital, sliced): complementary trees (None at the other's leaves)."""
+def init_split(params, cfg: PantherConfig = PantherConfig(), plan=None):
+    """-> (digital, sliced): complementary trees (None at the other's leaves).
 
-    def split(p):
-        if _is_crossbar_mapped(p, cfg):
+    ``plan`` (resolved ``repro.plan`` tree) decides the partition and the
+    per-leaf slice spec; ``None`` resolves the default plan from ``cfg``."""
+    if plan is None:
+        plan = _default_plan(params, cfg)
+
+    def split(p, pl):
+        if pl.mapped:
             f = choose_frac_bits(p, margin_bits=cfg.margin_bits)
-            return (None, SlicedTensor(planes=slice_weights(quantize(p, f), cfg.spec), frac_bits=f))
+            return (None, SlicedTensor(planes=slice_weights(quantize(p, f), pl.spec), frac_bits=f))
         return (p, None)
 
-    pairs = jax.tree.map(split, params)
+    pairs = jax.tree.map(split, params, plan)
     digital = jax.tree.map(lambda pr: pr[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
     sliced = jax.tree.map(lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
     return digital, sliced
@@ -322,7 +386,8 @@ def materialize_split(digital, sliced, cfg: PantherConfig = PantherConfig()):
     return jax.tree.map(pick, digital, sliced, is_leaf=lambda x: x is None or isinstance(x, SlicedTensor))
 
 
-def update_split(grads, digital, sliced, step, lr, cfg: PantherConfig = PantherConfig(), rng=None):
+def update_split(grads, digital, sliced, step, lr, cfg: PantherConfig = PantherConfig(),
+                 rng=None, plan=None):
     """One OPA step on the split state. Returns (digital', sliced').
 
     Gradient leaves may be dense arrays (VFU path / non-operand crossbar
@@ -330,6 +395,8 @@ def update_split(grads, digital, sliced, step, lr, cfg: PantherConfig = PantherC
     (``opa_fused_update``: the ``[M, N]`` gradient never materializes).
     Leaf enumeration — and therefore each leaf's stochastic-rounding key —
     is identical in both modes, so the two pipelines are bit-compatible.
+    ``plan`` supplies per-leaf slice specs (heterogeneous crossbars);
+    ``None`` uses ``cfg.spec`` everywhere.
 
     The dequantized new params are *not* returned — the next step
     re-materializes from the planes, so XLA dead-code-eliminates any unused
@@ -342,39 +409,46 @@ def update_split(grads, digital, sliced, step, lr, cfg: PantherConfig = PantherC
     leaves_g, treedef = jax.tree.flatten(grads, is_leaf=_grad_leaf)
     leaves_d = treedef.flatten_up_to(digital)
     leaves_s = treedef.flatten_up_to(sliced)
+    leaves_pl = _plan_leaves(plan, treedef, len(leaves_g))
     new_d, new_s = [], []
-    for i, (g, d, s) in enumerate(zip(leaves_g, leaves_d, leaves_s)):
+    for i, (g, d, s, pl) in enumerate(zip(leaves_g, leaves_d, leaves_s, leaves_pl)):
         if s is None:
             if is_outer_product_grad(g):
                 g = g.materialize()
             new_d.append((d - lr * g.astype(d.dtype)).astype(d.dtype))
             new_s.append(None)
             continue
+        spec = pl.spec if pl is not None else cfg.spec
         key = jax.random.fold_in(base_key, i)
         if is_outer_product_grad(g):
             planes = opa_fused_update(
-                s.planes, g.x, g.dh, lr, s.frac_bits, cfg.spec,
+                s.planes, g.x, g.dh, lr, s.frac_bits, spec,
                 stochastic=cfg.stochastic_round, key=key,
                 use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
             )
         else:
             upd = quantize(-lr * g.astype(jnp.float32), s.frac_bits, stochastic=cfg.stochastic_round, key=key)
             planes = opa_deposit(
-                s.planes, upd, cfg.spec,
+                s.planes, upd, spec,
                 use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
             )
-        planes = jax.lax.cond(do_crs, lambda x: _crs_dispatch(x, cfg.spec), lambda x: x, planes)
+        planes = jax.lax.cond(
+            do_crs, lambda x, _s=spec: _crs_dispatch(x, _s), lambda x: x, planes
+        )
         new_d.append(None)
         new_s.append(SlicedTensor(planes=planes, frac_bits=s.frac_bits))
     return jax.tree.unflatten(treedef, new_d), jax.tree.unflatten(treedef, new_s)
 
 
-def saturation_report(state: PantherState, cfg: PantherConfig = PantherConfig()):
+def saturation_report(state: PantherState, cfg: PantherConfig = PantherConfig(), plan=None):
     """Per-parameter per-plane saturation fractions (paper Fig 9 metric)."""
 
-    def rep(s):
+    def rep(s, pl=None):
         if s is None:
             return None
-        return saturation_fraction(s.planes, cfg.spec)
+        return saturation_fraction(s.planes, pl.spec if pl is not None else cfg.spec)
 
-    return jax.tree.map(rep, state.sliced, is_leaf=lambda x: x is None or isinstance(x, SlicedTensor))
+    is_leaf = lambda x: x is None or isinstance(x, SlicedTensor)
+    if plan is None:
+        return jax.tree.map(rep, state.sliced, is_leaf=is_leaf)
+    return jax.tree.map(rep, state.sliced, plan, is_leaf=is_leaf)

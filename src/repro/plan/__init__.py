@@ -1,0 +1,416 @@
+"""Declarative per-leaf crossbar mapping plans — PANTHER's programmability
+as a first-class API.
+
+The paper's headline is a *programmable* accelerator: every layer can get its
+own crossbar configuration (heterogeneous slice specs, Fig. 10), its own ADC
+resolution per read path, and its own gradient strategy. Before this module
+the repo decided "is this leaf crossbar-mapped, with which slice spec, which
+gradient path, which ADC" through four disconnected mechanisms (a global
+shape heuristic in ``optim.panther``, a name set in ``models.common``, a
+separately-threaded ``FidelityConfig``, and path regexes in
+``distributed.sharding``). A :class:`LeafPlan` now answers all of it in one
+place, resolved once per parameter tree by an ordered list of
+:class:`PlanRule` s.
+
+Core objects
+------------
+
+:class:`LeafPlan`
+    The frozen per-leaf verdict: ``mapped`` (int8 digit planes vs digital
+    VFU), ``spec`` (the leaf's :class:`~repro.core.SliceSpec`), ``grad``
+    (``"operand"`` = outer-product operands through the fused OPA kernel,
+    ``"dense"`` = materialized gradient + quantize/deposit), ``fidelity``
+    (a :class:`~repro.models.common.FidelityConfig` for finite-ADC
+    crossbar-in-the-loop reads, or ``None`` for the lossless fast path), and
+    ``shard`` (a trailing-dims sharding hint overriding the name rules in
+    ``distributed.sharding``).
+
+:class:`PlanRule`
+    ``pattern`` is a glob over the '/'-joined leaf path (``fnmatch``
+    semantics; ``*`` crosses ``/`` so ``groups/0/*`` covers a whole layer
+    group). ``where`` optionally refines the match with a predicate over
+    :class:`LeafInfo` (path, shape, dtype, tokens) — this is how
+    shape-dependent defaults (the crossbar-eligibility heuristic, the
+    operand-stash threshold) live in the same rule language as name
+    patterns. Every matching rule applies in list order; later rules
+    override earlier ones field-by-field (``UNSET`` fields pass through).
+
+:func:`default_rules`
+    Reproduces the repo's historical behavior bit-for-bit (golden-tested
+    across all ten ``configs/``): matrix-shaped float leaves map to planes
+    at the optimizer spec, single-use matmul weights under ``attn``/``mlp``
+    flow operand gradients, everything else is dense/digital.
+
+:func:`resolve_plan`
+    ``(params, rules, tokens=None) -> pytree of LeafPlan`` mirroring the
+    parameter tree (works on concrete arrays or ``jax.eval_shape`` output).
+
+Worked heterogeneous example
+----------------------------
+
+Give the first layer group high-resolution uniform-6 slices read through a
+9-bit ADC, the second group the paper's 44466555 spec at 6 bits, keep the
+embedding dense-gradient, and shard ``wo`` row-parallel explicitly::
+
+    from repro.plan import PlanRule, default_rules, resolve_plan
+    from repro.core import SliceSpec
+    from repro.models.common import FidelityConfig
+
+    rules = default_rules(opt_cfg) + (
+        PlanRule("groups/0/*", spec=SliceSpec.uniform(6),
+                 fidelity=FidelityConfig(adc_bits_fwd=9, adc_bits_bwd=9)),
+        PlanRule("groups/1/*", spec=SliceSpec((4, 4, 4, 6, 6, 5, 5, 5)),
+                 fidelity=FidelityConfig(adc_bits_fwd=6, adc_bits_bwd=6)),
+        PlanRule("*/wo", shard=("model", None)),
+    )
+    plan = resolve_plan(jax.eval_shape(lambda: lm.init_params(cfg, key)), rules)
+
+    state = train_state_init(cfg, opt_cfg, key, plan=plan)
+    step = make_train_step(cfg, opt_cfg, sched, plan=plan)
+
+The same plan threads into serving (``serve.step.fidelity_params(params,
+sliced, plan=plan)``), sharding (``distributed.sharding.param_specs(...,
+plan=plan)``), and checkpointing (``save_checkpoint(..., plan=plan)``
+persists the layout so a mismatched restore fails loudly instead of
+corrupting planes). ``benchmarks/fig10_hetero.py`` runs this end to end.
+
+Resolution normalizes two things: a leaf whose ``grad`` is not ``"operand"``
+drops its ``fidelity`` (the finite-ADC engine rides the ``xbar_linear``
+custom-vjp sites, which are exactly the operand sites), and an attached
+``FidelityConfig`` has its ``spec`` synced to the leaf's plan spec (the
+engine must read the planes the optimizer writes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Any, Callable, NamedTuple
+
+import jax
+
+from repro.core.slicing import DEFAULT_SPEC, SliceSpec
+from repro.models.common import OPERAND_LINEAR_KEYS, FidelityConfig, path_str
+
+
+class _Unset:
+    """Sentinel distinguishing "no override" from "override with None"."""
+
+    __slots__ = ()
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return "UNSET"
+
+
+UNSET = _Unset()
+
+
+class LeafInfo(NamedTuple):
+    """What a rule predicate can see about a parameter leaf."""
+
+    path: str  # '/'-joined tree path (models.common.path_str convention)
+    shape: tuple
+    dtype: Any
+    tokens: int | None  # flattened tokens per differentiated forward, if known
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    """How one parameter leaf maps to hardware. See module docstring."""
+
+    mapped: bool = False
+    spec: SliceSpec = DEFAULT_SPEC
+    grad: str = "dense"  # "operand" | "dense"
+    fidelity: FidelityConfig | None = None
+    shard: tuple | None = None  # trailing-dims sharding hint (None = name rules)
+
+    def __post_init__(self):
+        if self.grad not in ("operand", "dense"):
+            raise ValueError(f"LeafPlan.grad must be 'operand' or 'dense', got {self.grad!r}")
+        if self.shard is not None:
+            object.__setattr__(self, "shard", _tuplify(self.shard))
+
+    @property
+    def category(self) -> str:
+        """'digital' | 'operand' | 'dense' — the three-way leaf partition."""
+        if not self.mapped:
+            return "digital"
+        return "operand" if self.grad == "operand" else "dense"
+
+
+_OVERRIDE_FIELDS = ("mapped", "spec", "grad", "fidelity", "shard")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRule:
+    """``glob (+ optional predicate) -> field overrides``, applied in order."""
+
+    pattern: str = "*"
+    where: Callable[[LeafInfo], bool] | None = None
+    mapped: Any = UNSET
+    spec: Any = UNSET
+    grad: Any = UNSET
+    fidelity: Any = UNSET
+    shard: Any = UNSET
+
+    def matches(self, info: LeafInfo) -> bool:
+        if not fnmatch.fnmatchcase(info.path, self.pattern):
+            return False
+        return self.where is None or bool(self.where(info))
+
+    def apply(self, plan: LeafPlan, info: LeafInfo) -> LeafPlan:
+        if not self.matches(info):
+            return plan
+        kw = {f: getattr(self, f) for f in _OVERRIDE_FIELDS if getattr(self, f) is not UNSET}
+        return dataclasses.replace(plan, **kw) if kw else plan
+
+
+# ------------------------------ default rules -------------------------------
+
+
+def crossbar_eligible(shape, dtype, min_ndim: int = 2, min_dim: int = 8) -> bool:
+    """The historical shape heuristic: eligibility is a property of the
+    *matrix* dims ``[-2:]`` (leading dims are lax.scan layer stacks / MoE
+    expert stacks — each slice is its own crossbar tile)."""
+    import jax.numpy as jnp
+
+    return (
+        len(shape) >= min_ndim
+        and min(shape[-2:]) >= min_dim
+        and dtype in (jnp.float32, jnp.bfloat16, jnp.float16)
+    )
+
+
+def operand_eligible_path(path: str) -> bool:
+    """Whether the parameter at this '/'-joined path flows operand gradients
+    by default.
+
+    The leaf key alone is not enough: eligibility also requires the
+    immediately enclosing ``attn``/``mlp`` subtree, which is exactly where
+    every ``xbar_linear`` call site lives (xlstm's mlstm block names its
+    projections ``wq``/``wk``/``wv`` at ``groups/<i>/wq`` — no block segment
+    — and consumes them through plain matmuls). Excludes any path under a
+    ``shared`` subtree (zamba shared transformer, MoE shared experts): those
+    weights are applied more than once per step, and outer-product operands
+    from distinct call sites cannot be summed leaf-wise."""
+    parts = path.split("/")
+    return (
+        parts[-1] in OPERAND_LINEAR_KEYS
+        and len(parts) >= 2
+        and parts[-2] in ("attn", "mlp")
+        and "shared" not in parts
+    )
+
+
+def stash_exceeds_dense(info: LeafInfo) -> bool:
+    """True when the operand stash (``T*(M+N)`` activations per leaf) would
+    outweigh the dense ``[M, N]`` gradient it replaces — i.e. ``tokens >
+    M*N/(M+N)`` (ROADMAP open item; integer form avoids the division)."""
+    if info.tokens is None or len(info.shape) < 2:
+        return False
+    m, n = info.shape[-2], info.shape[-1]
+    return info.tokens * (m + n) > m * n
+
+
+def operand_stash_rule() -> PlanRule:
+    """Fallback rule: a leaf whose operand stash is larger than its dense
+    gradient flips to ``grad="dense"``. On the lossless path this is purely
+    a memory lever (bit-compatible per leaf — the two pipelines share
+    quantize/deposit numerics). Caveat: a flipped leaf also sheds any
+    attached ``fidelity`` (the finite-ADC engine rides the operand sites),
+    so combining this rule with a fidelity study makes flipped layers read
+    losslessly — check ``plan_summary`` if every layer must stay on the
+    engine."""
+    return PlanRule("*", where=stash_exceeds_dense, grad="dense")
+
+
+def default_rules(cfg=None, fidelity: FidelityConfig | None = None,
+                  stash_fallback: bool = False) -> tuple:
+    """The rules that reproduce the repo's historical mapping bit-for-bit.
+
+    ``cfg`` is duck-typed (anything with ``spec``/``min_ndim``/``min_dim`` —
+    a ``PantherConfig``); ``None`` uses the PantherConfig defaults.
+    ``fidelity`` attaches one global FidelityConfig to every operand leaf
+    (the legacy ``make_train_step(fidelity=...)`` threading). With
+    ``stash_fallback`` the :func:`operand_stash_rule` is appended, flipping
+    leaves whose stash outweighs the dense gradient (needs ``tokens`` at
+    resolution time; off by default to keep the default plan
+    behavior-preserving).
+    """
+    spec = getattr(cfg, "spec", DEFAULT_SPEC)
+    min_ndim = getattr(cfg, "min_ndim", 2)
+    min_dim = getattr(cfg, "min_dim", 8)
+    rules = [
+        PlanRule("*", where=lambda i: crossbar_eligible(i.shape, i.dtype, min_ndim, min_dim),
+                 mapped=True, spec=spec),
+        PlanRule("*", where=lambda i: operand_eligible_path(i.path), grad="operand"),
+    ]
+    if fidelity is not None:
+        rules.append(PlanRule("*", fidelity=fidelity))
+    if stash_fallback:
+        rules.append(operand_stash_rule())
+    return tuple(rules)
+
+
+# ------------------------------- resolution ---------------------------------
+
+
+def _normalize(plan: LeafPlan) -> LeafPlan:
+    # the finite-ADC engine rides the operand (xbar_linear) sites only; a
+    # fidelity config on any other leaf is inert — drop it so plans compare
+    # cleanly. An attached fid's spec must equal the leaf's plane layout.
+    if plan.fidelity is not None:
+        if plan.grad != "operand" or not plan.mapped:
+            return dataclasses.replace(plan, fidelity=None)
+        if plan.fidelity.spec != plan.spec:
+            return dataclasses.replace(
+                plan, fidelity=dataclasses.replace(plan.fidelity, spec=plan.spec)
+            )
+    return plan
+
+
+def resolve_leaf(path: str, shape, dtype, rules, tokens: int | None = None) -> LeafPlan:
+    info = LeafInfo(path=path, shape=tuple(shape), dtype=dtype, tokens=tokens)
+    plan = LeafPlan()
+    for r in rules:
+        plan = r.apply(plan, info)
+    return _normalize(plan)
+
+
+def resolve_plan(params, rules, tokens: int | None = None):
+    """Resolve a pytree of :class:`LeafPlan` mirroring ``params``.
+
+    ``params`` may be concrete arrays or ``jax.eval_shape`` output — only
+    ``.shape``/``.dtype`` are read. ``tokens`` is the flattened token count
+    per differentiated forward, when known (enables token-dependent rules
+    such as :func:`operand_stash_rule`).
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: resolve_leaf(path_str(p), leaf.shape, leaf.dtype, rules, tokens),
+        params,
+    )
+
+
+def plan_by_path(plan_tree) -> dict:
+    """``{'/'-joined path: LeafPlan}`` — the lookup form consumers that walk
+    other trees (optimizer state, checkpoints) use."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        plan_tree, is_leaf=lambda x: isinstance(x, LeafPlan)
+    )
+    return {path_str(p): pl for p, pl in flat}
+
+
+def plan_summary(plan_tree) -> str:
+    """Human-readable digest: one line per distinct (category, spec, ADC,
+    shard) combination with leaf counts — what ``--plan`` demos print."""
+    combos: dict[tuple, int] = {}
+    for pl in plan_by_path(plan_tree).values():
+        fid = pl.fidelity
+        adc = None if fid is None else (fid.adc_bits_fwd, fid.adc_bits_bwd)
+        key = (pl.category, pl.spec.name() if pl.mapped else "-", adc, pl.shard)
+        combos[key] = combos.get(key, 0) + 1
+    lines = []
+    for (cat, spec, adc, shard), n in sorted(combos.items(), key=lambda kv: -kv[1]):
+        extra = ""
+        if adc is not None:
+            extra += f" adc(fwd,bwd)={adc}"
+        if shard is not None:
+            extra += f" shard={shard}"
+        lines.append(f"  {n:4d} x {cat:8s} spec={spec}{extra}")
+    return "\n".join(lines)
+
+
+# ----------------------- serialization (checkpoints) ------------------------
+
+
+def _tuplify(x):
+    return tuple(_tuplify(e) for e in x) if isinstance(x, (list, tuple)) else x
+
+
+def _fidelity_to_dict(fid: FidelityConfig) -> dict:
+    d = dataclasses.asdict(fid)
+    d["spec"] = fid.spec.name()
+    return d
+
+
+def _fidelity_from_dict(d: dict) -> FidelityConfig:
+    d = dict(d)
+    d["spec"] = SliceSpec(tuple(int(c) for c in d["spec"]))
+    return FidelityConfig(**d)
+
+
+def leaf_plan_to_dict(pl: LeafPlan) -> dict:
+    """JSON-safe form (specs as their '44466555' names; shard tuples as
+    lists) — what checkpoint manifests persist."""
+    return {
+        "mapped": pl.mapped,
+        "spec": pl.spec.name(),
+        "grad": pl.grad,
+        "fidelity": None if pl.fidelity is None else _fidelity_to_dict(pl.fidelity),
+        "shard": None if pl.shard is None else list(
+            list(s) if isinstance(s, tuple) else s for s in pl.shard
+        ),
+    }
+
+
+def leaf_plan_from_dict(d: dict) -> LeafPlan:
+    return LeafPlan(
+        mapped=bool(d["mapped"]),
+        spec=SliceSpec(tuple(int(c) for c in d["spec"])),
+        grad=d["grad"],
+        fidelity=None if d.get("fidelity") is None else _fidelity_from_dict(d["fidelity"]),
+        shard=None if d.get("shard") is None else _tuplify(d["shard"]),
+    )
+
+
+def plan_manifest(plan_tree) -> dict:
+    """``{path: leaf_plan_to_dict(...)}`` for a resolved plan tree."""
+    return {p: leaf_plan_to_dict(pl) for p, pl in plan_by_path(plan_tree).items()}
+
+
+def check_plan_compat(saved: dict, plan_tree, context: str = "checkpoint") -> None:
+    """Raise ``ValueError`` when a persisted plan manifest and the current
+    plan disagree on *storage layout* (mapped / slice spec) for any shared
+    path. ``grad``/``fidelity``/``shard`` are runtime choices and may differ
+    freely; layout mismatches would silently misinterpret stored planes.
+    """
+    errors = []
+    for path, pl in plan_by_path(plan_tree).items():
+        meta = saved.get(path)
+        if meta is None:
+            continue  # new/renamed leaf: the restore path-matcher handles it
+        if bool(meta["mapped"]) != pl.mapped:
+            errors.append(
+                f"  {path}: saved mapped={meta['mapped']} vs current mapped={pl.mapped}"
+            )
+        elif pl.mapped and meta["spec"] != pl.spec.name():
+            errors.append(
+                f"  {path}: saved spec={meta['spec']} vs current spec={pl.spec.name()}"
+            )
+    if errors:
+        raise ValueError(
+            f"{context} plan is layout-incompatible with the current plan "
+            f"({len(errors)} leaves) — restoring would misread the stored "
+            "digit planes. Re-resolve with the saved plan or migrate the "
+            "checkpoint:\n" + "\n".join(errors)
+        )
+
+
+__all__ = [
+    "UNSET",
+    "LeafInfo",
+    "LeafPlan",
+    "PlanRule",
+    "check_plan_compat",
+    "crossbar_eligible",
+    "default_rules",
+    "leaf_plan_from_dict",
+    "leaf_plan_to_dict",
+    "operand_eligible_path",
+    "operand_stash_rule",
+    "plan_by_path",
+    "plan_manifest",
+    "plan_summary",
+    "resolve_leaf",
+    "resolve_plan",
+    "stash_exceeds_dense",
+]

@@ -22,15 +22,19 @@ from repro.models.common import LMConfig
 from repro.optim import panther
 
 
-def fidelity_params(params, sliced, fid):
+def fidelity_params(params, sliced, fid=None, plan=None):
     """Wrap a served (materialized) param tree for finite-ADC reads.
 
     ``sliced`` is the trainer's plane tree (``TrainState.sliced``); ``fid``
-    a ``models.common.FidelityConfig``. Returns params whose operand-eligible
-    leaves are forward-only ``XbarWeight`` wraps — feed them to the prefill /
-    decode fns built below. Forward-only: do not differentiate through them.
+    a ``models.common.FidelityConfig`` applied to every operand-eligible
+    leaf, or pass a resolved ``repro.plan`` tree via ``plan`` for
+    heterogeneous per-layer ADC (each leaf serves at its own
+    ``plan.fidelity``; leaves without one stay on the lossless fast path).
+    Returns params whose wrapped leaves are forward-only ``XbarWeight``
+    wraps — feed them to the prefill / decode fns built below.
+    Forward-only: do not differentiate through them.
     """
-    return panther.fidelitize(params, sliced, fid)
+    return panther.fidelitize(params, sliced, fid, plan=plan)
 
 
 def make_prefill(cfg: LMConfig, mesh=None, global_batch: int | None = None, max_seq: int | None = None):

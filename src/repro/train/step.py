@@ -31,9 +31,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import plan as planlib
 from repro.distributed import sharding as shd
 from repro.models import lm
-from repro.models.common import LMConfig, OuterProductGrad, XbarWeight, is_operand_path
+from repro.models.common import LMConfig, OuterProductGrad, XbarWeight
 from repro.optim import PantherConfig, panther
 
 
@@ -52,23 +53,31 @@ class TrainState(NamedTuple):
     rng: jax.Array
 
 
-def train_state_init(cfg: LMConfig, opt_cfg: PantherConfig, key) -> TrainState:
+def train_state_init(cfg: LMConfig, opt_cfg: PantherConfig, key, plan=None) -> TrainState:
+    """``plan`` (a resolved ``repro.plan`` tree over the param tree) selects
+    which leaves live as digit planes and at which per-leaf slice spec."""
     params = lm.init_params(cfg, key)
-    digital, sliced = panther.init_split(params, opt_cfg)
+    digital, sliced = panther.init_split(params, opt_cfg, plan=plan)
     return TrainState(
         step=jnp.zeros((), jnp.int32), digital=digital, sliced=sliced, rng=jax.random.PRNGKey(7)
     )
 
 
-def train_state_specs(cfg: LMConfig, opt_cfg: PantherConfig, mesh=None, fsdp: bool = False):
+def train_state_specs(cfg: LMConfig, opt_cfg: PantherConfig, mesh=None, fsdp: bool = False,
+                      plan=None):
     """PartitionSpec pytree for TrainState (planes shard like their matrix
     with a leading None for the slice dim). With ``fsdp``, planes
-    additionally shard an unsharded axis over 'data' (ZeRO-3)."""
-    shapes = jax.eval_shape(lambda: train_state_init(cfg, opt_cfg, jax.random.PRNGKey(0)))
+    additionally shard an unsharded axis over 'data' (ZeRO-3). ``plan``
+    supplies per-leaf shard hints overriding the name rules."""
+    shapes = jax.eval_shape(lambda: train_state_init(cfg, opt_cfg, jax.random.PRNGKey(0), plan=plan))
     dsize = mesh.shape["data"] if (fsdp and mesh is not None) else 1
+    hints = {}
+    if plan is not None:
+        hints = {p: pl.shard for p, pl in planlib.plan_by_path(plan).items()}
 
     def digital_spec(path, leaf):
-        s = shd.leaf_spec(shd._path_str(path), leaf.ndim)
+        ps = shd._path_str(path)
+        s = shd.leaf_spec(ps, leaf.ndim, hint=hints.get(ps))
         if mesh is not None:
             s = shd.sanitize_spec(s, leaf.shape, mesh)
         return s
@@ -80,13 +89,14 @@ def train_state_specs(cfg: LMConfig, opt_cfg: PantherConfig, mesh=None, fsdp: bo
         # planes [S, *w] shard like their matrix w (strip the /planes suffix
         # so the name rules see the parameter path), S replicated
         ppath = ps.removesuffix("/planes")
-        base = shd.leaf_spec(ppath, leaf.ndim - 1)
+        hint = hints.get(ppath)
+        base = shd.leaf_spec(ppath, leaf.ndim - 1, hint=hint)
         full = P(*((None,) + tuple(base)))
         if mesh is not None:
             full = shd.sanitize_spec(full, leaf.shape, mesh)
         if fsdp:
             # FSDP only on the trailing matrix axes (never S or scan stacks)
-            n_tail = len(shd.trailing_spec(ppath)) or 2
+            n_tail = len(shd.trailing_spec(ppath, hint=hint)) or 2
             full = shd.fsdp_spec(full, leaf.shape, dsize, n_tail=n_tail)
         return full
 
@@ -105,27 +115,35 @@ def grad_specs(
     fsdp: bool = False,
     operand: bool = False,
     mb_batch: int | None = None,
+    plan=None,
 ):
     """Gradient sharding (mirrors the stored planes minus the S dim) —
     pinning this keeps the f32 accumulation buffer ZeRO-sharded instead of
     letting SPMD fall back to TP-only (which blows HBM on 34B models).
 
-    With ``operand=True``, operand-eligible crossbar leaves get an
-    ``OuterProductGrad`` of specs instead (token axis over the DP axes,
-    feature axes inheriting the weight's own M/N rules) — operands are
-    activation-shaped, so they never need the ZeRO transform."""
+    Eligibility comes from the resolved mapping ``plan`` (default plan of
+    ``opt_cfg`` when ``None``). With ``operand=True``, operand crossbar
+    leaves get an ``OuterProductGrad`` of specs instead (token axis over the
+    DP axes, feature axes inheriting the weight's own M/N rules) — operands
+    are activation-shaped, so they never need the ZeRO transform."""
     shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    if plan is None:
+        plan = planlib.resolve_plan(shapes, planlib.default_rules(opt_cfg))
+    by_path = planlib.plan_by_path(plan)
     dsize = mesh.shape["data"] if (fsdp and mesh is not None) else 1
 
     def spec(path, leaf):
         ps = shd._path_str(path)
-        if operand and panther._is_crossbar_mapped(leaf, opt_cfg) and is_operand_path(ps):
-            return shd.operand_grad_spec(ps, leaf.shape, mesh, mb_batch)
-        base = shd.leaf_spec(ps, leaf.ndim)
+        pl = by_path.get(ps)
+        hint = pl.shard if pl is not None else None
+        mapped = pl is not None and pl.mapped
+        if operand and mapped and pl.grad == "operand":
+            return shd.operand_grad_spec(ps, leaf.shape, mesh, mb_batch, hint=hint)
+        base = shd.leaf_spec(ps, leaf.ndim, hint=hint)
         if mesh is not None:
             base = shd.sanitize_spec(base, leaf.shape, mesh)
-        if fsdp and panther._is_crossbar_mapped(leaf, opt_cfg):
-            n_tail = len(shd.trailing_spec(ps)) or 2
+        if fsdp and mapped:
+            n_tail = len(shd.trailing_spec(ps, hint=hint)) or 2
             base = shd.fsdp_spec(base, leaf.shape, dsize, n_tail=n_tail)
         return base
 
@@ -155,6 +173,9 @@ def make_train_step(
     grad_dtype=jnp.float32,
     operand_grads: bool = True,
     fidelity=None,
+    plan=None,
+    plan_rules=None,
+    stash_fallback: bool = False,
 ):
     """Returns ``train_step(state, batch) -> (state', metrics)``.
 
@@ -178,9 +199,55 @@ def make_train_step(
     plane leaves, so AD runs with ``allow_int`` (their cotangents are
     float0, stripped with the operand zeros). Fidelity mode is a simulator
     configuration: it requires ``operand_grads`` and runs off-mesh (the
-    sharded production step keeps the lossless dequantize→MXU fast path)."""
+    sharded production step keeps the lossless dequantize→MXU fast path).
+
+    ``plan`` / ``plan_rules`` select the declarative per-leaf mapping
+    (``repro.plan``): pass a resolved plan tree, or an ordered
+    ``PlanRule`` list resolved here against the param shapes (token-
+    dependent rules see the real per-microbatch token count at trace time).
+    The plan is the single source of truth for eligibility, per-leaf slice
+    spec, per-leaf fidelity, and shard hints — heterogeneous crossbar
+    configurations per layer (paper Fig. 10). ``stash_fallback`` appends
+    ``repro.plan.operand_stash_rule`` to the default rules: leaves whose
+    operand stash would outweigh the dense gradient fall back to the
+    (bit-compatible) dense deposit path."""
     fidelity = fidelity if fidelity is not None else cfg.fidelity
-    if fidelity is not None:
+    if (plan is not None or plan_rules is not None) and fidelity is not None:
+        raise ValueError("with an explicit plan, attach fidelity per-leaf via "
+                         "PlanRule(fidelity=...) instead of the fidelity arg")
+    if plan is not None and plan_rules is not None:
+        raise ValueError("pass either a resolved plan or plan_rules, not both")
+    if stash_fallback and (plan is not None or plan_rules is not None):
+        # an explicit plan/rule list owns its rule set: appending behind the
+        # caller's back would reorder overrides — append operand_stash_rule()
+        # to the rules (or resolve it into the plan) instead
+        raise ValueError("stash_fallback only augments the default rules; "
+                         "append repro.plan.operand_stash_rule() to your "
+                         "plan_rules (or resolve it into your plan) directly")
+    if fidelity is not None and fidelity.spec != opt_cfg.spec:
+        raise ValueError(
+            f"FidelityConfig.spec {fidelity.spec} must match the optimizer "
+            f"plane layout {opt_cfg.spec}"
+        )
+
+    # Static (build-time) plan: shard/eligibility decisions for the mesh
+    # specs. Rules re-resolve at trace time with the real token count so
+    # token-dependent rules (operand-stash fallback) can flip leaves.
+    rules = tuple(plan_rules) if plan_rules is not None else None
+    if rules is None and plan is None and stash_fallback:
+        rules = planlib.default_rules(opt_cfg, fidelity=fidelity, stash_fallback=True)
+        fidelity = None  # rides the plan from here on
+    plan0 = plan
+    if plan0 is None and rules is not None:
+        shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+        plan0 = planlib.resolve_plan(shapes, rules)
+    use_plan = plan0 is not None
+
+    has_fid = fidelity is not None or (
+        use_plan and any(pl.fidelity is not None
+                         for pl in planlib.plan_by_path(plan0).values())
+    )
+    if has_fid:
         if not operand_grads:
             raise ValueError("fidelity mode rides the operand pipeline (operand_grads=True)")
         if mesh is not None:
@@ -188,22 +255,17 @@ def make_train_step(
                 "fidelity training is a (single-host) simulator mode; the mesh "
                 "path keeps the lossless fast-path numerics"
             )
-        if fidelity.spec != opt_cfg.spec:
-            raise ValueError(
-                f"FidelityConfig.spec {fidelity.spec} must match the optimizer "
-                f"plane layout {opt_cfg.spec}"
-            )
-    allow_int = fidelity is not None
+    allow_int = has_fid
     mb_batch = global_batch // microbatches if global_batch else None
     gshard = pshard = None
     gnamed = None
     if mesh is not None and global_batch is not None:
         act_spec = shd.activation_spec(mesh, mb_batch)
         shard_fn = lambda x: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, act_spec))
-        gspecs_d = grad_specs(cfg, opt_cfg, mesh=mesh, fsdp=fsdp)
+        gspecs_d = grad_specs(cfg, opt_cfg, mesh=mesh, fsdp=fsdp, plan=plan0)
         if operand_grads:
             gspecs = grad_specs(cfg, opt_cfg, mesh=mesh, fsdp=fsdp,
-                                operand=True, mb_batch=mb_batch)
+                                operand=True, mb_batch=mb_batch, plan=plan0)
             # params keep the dense (ZeRO) layout for the compute copy and
             # carry operand-slot specs alongside
             pspecs = jax.tree.map(
@@ -252,6 +314,7 @@ def make_train_step(
 
     def train_step(state: TrainState, batch):
         params = panther.materialize_split(state.digital, state.sliced, opt_cfg)
+        plan_t = plan0
         if operand_grads:
             # flattened tokens per differentiated forward (one microbatch)
             inp = batch["inputs"]
@@ -259,7 +322,21 @@ def make_train_step(
                 tokens = inp.shape[-2] * inp.shape[-1]
             else:
                 tokens = inp.shape[-3] * inp.shape[-2]
-            params = panther.operandize(params, state.sliced, tokens, cfg.dtype, fid=fidelity)
+            if use_plan:
+                # trace-time re-resolution: token-dependent rules (the
+                # operand-stash fallback) see the real microbatch size.
+                # NOT on the mesh path: the sharding specs (gnamed/pnamed)
+                # were built from the build-time plan, and a leaf flipping
+                # operand->dense here would pair a dense gradient with an
+                # OuterProductGrad spec subtree — token-dependent rules are
+                # inert under a mesh (tokens are unknown at spec-build time).
+                if rules is not None and mesh is None:
+                    plan_t = planlib.resolve_plan(params, rules, tokens=tokens)
+                params = panther.operandize(params, state.sliced, tokens, cfg.dtype,
+                                            plan=plan_t)
+            else:
+                params = panther.operandize(params, state.sliced, tokens, cfg.dtype,
+                                            fid=fidelity)
         if pshard is not None:
             # keep the compute copy ZeRO-sharded in storage; the per-layer
             # all-gather happens inside the layer scan, not up front
@@ -341,7 +418,8 @@ def make_train_step(
 
         lr = lr_schedule(state.step)
         new_digital, new_sliced = panther.update_split(
-            grads, state.digital, state.sliced, state.step, lr, opt_cfg, rng=state.rng
+            grads, state.digital, state.sliced, state.step, lr, opt_cfg, rng=state.rng,
+            plan=plan_t,
         )
         new_state = TrainState(
             step=state.step + 1, digital=new_digital, sliced=new_sliced, rng=state.rng

@@ -1,0 +1,393 @@
+"""The declarative per-leaf mapping plan (repro.plan).
+
+Contracts (ISSUE 4 acceptance):
+  * ``default_rules`` is behavior-preserving — the resolved plan reproduces
+    the legacy four-mechanism partition (shape heuristic + operand name set)
+    leaf-for-leaf on all ten configs, with the counts pinned as a golden
+    snapshot;
+  * the operand-stash threshold rule flips leaves to the (bit-compatible)
+    dense path exactly when ``tokens > M*N/(M+N)``;
+  * xlstm's ``groups/<i>/wq``-style leaves (plain-matmul consumers named
+    like operand keys) resolve to dense gradients;
+  * plans round-trip through checkpoint manifests and a mismatched-layout
+    restore raises before any leaf loads;
+  * heterogeneous plans (>=2 slice specs, >=2 ADC settings in one model)
+    train and serve end to end.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_latest, save_checkpoint
+from repro.configs import ARCH_IDS, get, get_smoke
+from repro.core import SliceSpec
+from repro.models import lm
+from repro.models.common import OPERAND_LINEAR_KEYS, FidelityConfig, path_str
+from repro.optim import PantherConfig, panther
+from repro.optim.schedules import constant
+from repro.plan import (
+    LeafPlan,
+    PlanRule,
+    check_plan_compat,
+    default_rules,
+    leaf_plan_from_dict,
+    leaf_plan_to_dict,
+    operand_stash_rule,
+    plan_by_path,
+    plan_manifest,
+    resolve_leaf,
+    resolve_plan,
+)
+from repro.train.step import make_train_step, train_state_init
+
+# Golden snapshot: the (digital, dense, operand) leaf partition of every
+# config under the default rules. Regenerate ONLY for a deliberate mapping
+# change:
+#   PYTHONPATH=src python -c "import tests.test_plan as t; t.regen_golden()"
+GOLDEN_PARTITION = {
+    "zamba2_1p2b": {"digital": 17, "dense": 19, "operand": 0},
+    "musicgen_large": {"digital": 1, "dense": 3, "operand": 5},
+    "deepseek_v2_lite_16b": {"digital": 4, "dense": 13, "operand": 11},
+    "granite_moe_1b_a400m": {"digital": 1, "dense": 7, "operand": 2},
+    "xlstm_125m": {"digital": 17, "dense": 23, "operand": 0},
+    "minicpm_2b": {"digital": 1, "dense": 3, "operand": 5},
+    "gemma2_9b": {"digital": 1, "dense": 9, "operand": 10},
+    "gemma_2b": {"digital": 1, "dense": 3, "operand": 5},
+    "phi4_mini_3p8b": {"digital": 1, "dense": 3, "operand": 5},
+    "chameleon_34b": {"digital": 1, "dense": 6, "operand": 5},
+}
+
+
+def _legacy_category(ps: str, shape, dtype, cfg: PantherConfig) -> str:
+    """Independent reimplementation of the pre-plan dispatch: the
+    ``_is_crossbar_mapped`` shape heuristic + the ``is_operand_path`` name
+    rule, written out literally so the golden test cannot drift with the
+    implementation it checks."""
+    mapped = (
+        len(shape) >= cfg.min_ndim
+        and min(shape[-2:]) >= cfg.min_dim
+        and dtype in (jnp.float32, jnp.bfloat16, jnp.float16)
+    )
+    if not mapped:
+        return "digital"
+    parts = ps.split("/")
+    operand = (
+        parts[-1] in OPERAND_LINEAR_KEYS
+        and len(parts) >= 2
+        and parts[-2] in ("attn", "mlp")
+        and "shared" not in parts
+    )
+    return "operand" if operand else "dense"
+
+
+def _full_plan(arch):
+    cfg = get(arch)
+    shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    return shapes, resolve_plan(shapes, default_rules(PantherConfig()))
+
+
+def regen_golden():  # pragma: no cover - maintenance helper
+    for arch in ARCH_IDS:
+        _, plan = _full_plan(arch)
+        cats = {"digital": 0, "dense": 0, "operand": 0}
+        for pl in plan_by_path(plan).values():
+            cats[pl.category] += 1
+        print(f'    "{arch}": {cats},')
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_default_plan_reproduces_legacy_partition(arch):
+    """Leaf-for-leaf: default rules == the four retired dispatch sites."""
+    cfg = PantherConfig()
+    shapes, plan = _full_plan(arch)
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    by_path = plan_by_path(plan)
+    counts = {"digital": 0, "dense": 0, "operand": 0}
+    for p, leaf in flat:
+        ps = path_str(p)
+        want = _legacy_category(ps, leaf.shape, leaf.dtype, cfg)
+        got = by_path[ps].category
+        assert got == want, (arch, ps, got, want)
+        counts[got] += 1
+        # default rules attach neither fidelity nor shard hints
+        assert by_path[ps].fidelity is None and by_path[ps].shard is None
+        if by_path[ps].mapped:
+            assert by_path[ps].spec == cfg.spec
+    assert counts == GOLDEN_PARTITION[arch], (arch, counts)
+
+
+def test_xlstm_wq_style_leaves_resolve_dense():
+    """Regression (the xlstm footgun): mlstm projections named like operand
+    keys but consumed by plain matmuls must NOT flow operand gradients —
+    their call sites never emit OuterProductGrad cotangents, so an operand
+    plan entry would silently drop their updates."""
+    for cfg in (get("xlstm_125m"), get_smoke("xlstm_125m")):
+        shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+        plan = plan_by_path(resolve_plan(shapes, default_rules(PantherConfig())))
+        hits = 0
+        for ps, pl in plan.items():
+            if ps.split("/")[-1] in ("wq", "wk", "wv"):
+                hits += 1
+                assert pl.mapped, ps  # big matrices: planes, yes
+                assert pl.grad == "dense", ps  # operand flow, no
+        assert hits >= 3  # the footgun leaves exist in this arch
+
+
+# ------------------------------ rule semantics ------------------------------
+
+
+def test_rule_order_and_field_merging():
+    rules = (
+        PlanRule("*", mapped=True, spec=SliceSpec.uniform(4)),
+        PlanRule("a/*", grad="operand"),
+        PlanRule("a/b", spec=SliceSpec.uniform(6)),  # later rule wins per field
+    )
+    pl = resolve_leaf("a/b", (64, 64), jnp.float32, rules)
+    assert pl.mapped and pl.grad == "operand" and pl.spec == SliceSpec.uniform(6)
+    pl2 = resolve_leaf("a/c", (64, 64), jnp.float32, rules)
+    assert pl2.spec == SliceSpec.uniform(4) and pl2.grad == "operand"
+
+
+def test_fidelity_dropped_off_operand_leaves_and_spec_synced():
+    fid = FidelityConfig(adc_bits_fwd=6)
+    rules = default_rules(PantherConfig(), fidelity=fid) + (
+        PlanRule("*", spec=SliceSpec.uniform(5)),
+    )
+    # operand leaf: fidelity kept, spec synced to the leaf's plan spec
+    pl = resolve_leaf("groups/0/attn/wqkv", (64, 128), jnp.float32, rules)
+    assert pl.fidelity is not None and pl.fidelity.spec == SliceSpec.uniform(5)
+    assert pl.fidelity.adc_bits_fwd == 6
+    # dense crossbar leaf and digital leaf: fidelity dropped
+    assert resolve_leaf("embed", (128, 64), jnp.float32, rules).fidelity is None
+    assert resolve_leaf("groups/0/ln/scale", (64,), jnp.float32, rules).fidelity is None
+
+
+def test_leaf_plan_rejects_bad_grad():
+    with pytest.raises(ValueError):
+        LeafPlan(grad="sparse")
+
+
+# ------------------------- operand-stash threshold --------------------------
+
+
+def test_stash_threshold_both_sides():
+    """tokens > M*N/(M+N) flips to dense; at/below stays operand. For
+    M=64, N=128 the threshold is 8192/192 = 42.67: 42 stays, 43 flips."""
+    rules = default_rules(PantherConfig(), stash_fallback=True)
+    path = "groups/0/attn/wqkv"
+    below = resolve_leaf(path, (64, 128), jnp.float32, rules, tokens=42)
+    above = resolve_leaf(path, (64, 128), jnp.float32, rules, tokens=43)
+    assert below.grad == "operand"
+    assert above.grad == "dense"
+    # tokens unknown (build-time resolution): rule stays inert
+    assert resolve_leaf(path, (64, 128), jnp.float32, rules).grad == "operand"
+    # stacked leaves use the matrix dims, not the layer-stack dim
+    stacked = resolve_leaf(path, (12, 64, 128), jnp.float32, rules, tokens=43)
+    assert stacked.grad == "dense"
+
+
+def test_stash_fallback_step_bit_identical_to_operand_step():
+    """End to end: with smoke-sized layers every operand leaf crosses the
+    threshold (T=256 >> M*N/(M+N)), so the whole step runs the dense deposit
+    path — which is bit-compatible with the operand pipeline by the PR-1
+    contract. Planes must match the default step exactly."""
+    cfg = dataclasses.replace(get_smoke("gemma_2b"), dtype=jnp.float32)
+    opt = PantherConfig(stochastic_round=True, crs_every=64)
+    batch = {
+        "inputs": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0, cfg.vocab),
+    }
+    s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    sa, ma = jax.jit(make_train_step(cfg, opt, constant(0.5)))(s0, batch)
+    s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    sb, mb = jax.jit(make_train_step(cfg, opt, constant(0.5), stash_fallback=True))(s0, batch)
+    assert float(ma["loss"]) == float(mb["loss"])
+    for a, b in zip(jax.tree.leaves(sa.sliced), jax.tree.leaves(sb.sliced)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+# --------------------- plan-threaded training / serving ---------------------
+
+
+def _hetero_setup():
+    cfg = dataclasses.replace(
+        get_smoke("gemma_2b"), dtype=jnp.float32,
+        pattern=(("dense", 2), ("dense", 2)), n_layers=4,
+    )
+    opt = PantherConfig(stochastic_round=False, crs_every=1000)
+    rules = default_rules(opt) + (
+        PlanRule("groups/0/*", spec=SliceSpec.uniform(6),
+                 fidelity=FidelityConfig(adc_bits_fwd=9, adc_bits_bwd=9)),
+        PlanRule("groups/1/*", fidelity=FidelityConfig(adc_bits_fwd=6, adc_bits_bwd=6)),
+    )
+    shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    return cfg, opt, resolve_plan(shapes, rules)
+
+
+def test_heterogeneous_plan_trains_and_serves():
+    """One model, two slice specs, two ADC settings: the acceptance demo at
+    test size. Also checks per-group planes really carry different specs."""
+    from repro.serve.step import fidelity_params
+
+    cfg, opt, plan = _hetero_setup()
+    mapped = [pl for pl in plan_by_path(plan).values() if pl.mapped]
+    assert len({pl.spec.name() for pl in mapped}) >= 2
+    assert len({(pl.fidelity.adc_bits_fwd, pl.fidelity.adc_bits_bwd)
+                for pl in mapped if pl.fidelity is not None}) >= 2
+
+    state = train_state_init(cfg, opt, jax.random.PRNGKey(0), plan=plan)
+    batch = {
+        "inputs": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0, cfg.vocab),
+    }
+    step = jax.jit(make_train_step(cfg, opt, constant(0.3), plan=plan))
+    s1, m = step(state, batch)
+    assert np.isfinite(float(m["loss"])) and np.isfinite(float(m["grad_norm"]))
+    # planes updated in both heterogeneous groups
+    for gi in (0, 1):
+        a = state.sliced["groups"][gi]["attn"]["wqkv"].planes
+        b = s1.sliced["groups"][gi]["attn"]["wqkv"].planes
+        assert (np.asarray(a) != np.asarray(b)).any(), gi
+
+    params = panther.materialize_split(s1.digital, s1.sliced, opt)
+    p_fid = fidelity_params(params, s1.sliced, plan=plan)
+    logits, _ = jax.jit(lambda p, x: lm.prefill(cfg, p, x))(p_fid, batch["inputs"])
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_uniform_plan_fidelity_matches_legacy_arg():
+    """A plan carrying one global FidelityConfig is bit-identical to the
+    legacy ``make_train_step(fidelity=...)`` threading."""
+    cfg = dataclasses.replace(get_smoke("gemma_2b"), dtype=jnp.float32)
+    opt = PantherConfig(stochastic_round=False, crs_every=64)
+    fid = FidelityConfig(adc_bits_fwd=6, adc_bits_bwd=6)
+    batch = {
+        "inputs": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0, cfg.vocab),
+    }
+    s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    sa, ma = jax.jit(make_train_step(cfg, opt, constant(0.3), fidelity=fid))(s0, batch)
+    rules = default_rules(opt, fidelity=fid)
+    sb, mb = jax.jit(make_train_step(cfg, opt, constant(0.3), plan_rules=rules))(s0, batch)
+    assert float(ma["loss"]) == float(mb["loss"])
+    for a, b in zip(jax.tree.leaves(sa.sliced), jax.tree.leaves(sb.sliced)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_plan_arg_conflicts_raise():
+    cfg = dataclasses.replace(get_smoke("gemma_2b"), dtype=jnp.float32)
+    opt = PantherConfig()
+    rules = default_rules(opt)
+    with pytest.raises(ValueError):
+        make_train_step(cfg, opt, constant(0.1), plan_rules=rules,
+                        fidelity=FidelityConfig())
+    with pytest.raises(ValueError):
+        shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+        make_train_step(cfg, opt, constant(0.1),
+                        plan=resolve_plan(shapes, rules), plan_rules=rules)
+    with pytest.raises(ValueError):
+        panther.operandize({}, {}, 8, jnp.float32, fid=FidelityConfig(), plan={})
+    # stash_fallback only augments the DEFAULT rules — silently ignoring it
+    # next to an explicit rule list would defeat the memory fallback
+    with pytest.raises(ValueError, match="stash_fallback"):
+        make_train_step(cfg, opt, constant(0.1), plan_rules=rules, stash_fallback=True)
+
+
+# ------------------------------- shard hints --------------------------------
+
+
+def test_shard_hint_overrides_name_rules():
+    from repro.distributed import sharding as shd
+
+    params = {"groups": [{"attn": {"wo": jnp.zeros((64, 64))}}]}
+    rules = default_rules(PantherConfig()) + (
+        PlanRule("*/wo", shard=(None, "model")),  # name rule says ("model", None)
+    )
+    plan = resolve_plan(params, rules)
+    specs = shd.param_specs(params, plan=plan)
+    from jax.sharding import PartitionSpec as P
+
+    assert specs["groups"][0]["attn"]["wo"] == P(None, "model")
+    # without the hint the name rule applies
+    assert shd.param_specs(params)["groups"][0]["attn"]["wo"] == P("model", None)
+
+
+# --------------------- serialization + checkpoint manifest ------------------
+
+
+def test_leaf_plan_dict_round_trip():
+    pls = [
+        LeafPlan(),
+        LeafPlan(mapped=True, spec=SliceSpec.uniform(6), grad="operand",
+                 fidelity=FidelityConfig(adc_bits_fwd=9, adc_bits_bwd=6,
+                                         spec=SliceSpec.uniform(6))),
+        LeafPlan(mapped=True, grad="dense", shard=(None, "model")),
+        LeafPlan(mapped=True, shard=(("pod", "data"), None)),
+    ]
+    for pl in pls:
+        rt = leaf_plan_from_dict(leaf_plan_to_dict(pl))
+        assert rt == pl, (rt, pl)
+    # and through real JSON (checkpoint manifests are json.dump'ed)
+    import json
+
+    for pl in pls:
+        rt = leaf_plan_from_dict(json.loads(json.dumps(leaf_plan_to_dict(pl))))
+        assert rt == pl, (rt, pl)
+
+
+def test_checkpoint_persists_plan_and_validates_restore(tmp_path):
+    cfg = dataclasses.replace(get_smoke("gemma_2b"), dtype=jnp.float32)
+    opt = PantherConfig()
+    shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    plan = resolve_plan(shapes, default_rules(opt))
+    state = train_state_init(cfg, opt, jax.random.PRNGKey(0), plan=plan)
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 3, state, plan=plan)
+
+    # matching plan restores cleanly
+    restored, step = restore_latest(d, state, plan=plan)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+    # mismatched slice spec raises a clear layout error BEFORE loading
+    bad = resolve_plan(shapes, default_rules(PantherConfig(spec=SliceSpec.uniform(6))))
+    with pytest.raises(ValueError, match="layout-incompatible"):
+        restore_latest(d, state, plan=bad)
+    # mismatched mapped-ness too (everything forced digital)
+    allv = resolve_plan(shapes, (PlanRule("*", mapped=False),))
+    with pytest.raises(ValueError, match="layout-incompatible"):
+        restore_latest(d, state, plan=allv)
+
+
+def test_checkpoint_manager_threads_plan(tmp_path):
+    cfg = dataclasses.replace(get_smoke("gemma_2b"), dtype=jnp.float32)
+    opt = PantherConfig()
+    shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    plan = resolve_plan(shapes, default_rules(opt))
+    state = train_state_init(cfg, opt, jax.random.PRNGKey(0), plan=plan)
+    m = CheckpointManager(str(tmp_path / "ck"), every=10, plan=plan)
+    assert m.maybe_save(10, state) is not None
+    restored, step = m.restore(state)
+    assert step == 10
+    # a manager resolved under a different layout refuses the restore
+    m2 = CheckpointManager(
+        str(tmp_path / "ck"), every=10,
+        plan=resolve_plan(shapes, default_rules(PantherConfig(spec=SliceSpec.uniform(5)))),
+    )
+    with pytest.raises(ValueError, match="layout-incompatible"):
+        m2.restore(state)
+
+
+def test_plan_compat_ignores_runtime_fields():
+    """grad / fidelity / shard are runtime choices — only storage layout
+    (mapped, spec) gates a restore."""
+    params = {"w": jnp.zeros((16, 16))}
+    a = resolve_plan(params, default_rules(PantherConfig()))
+    b = resolve_plan(params, default_rules(PantherConfig()) + (
+        PlanRule("*", grad="operand", shard=(None, "model")),
+    ))
+    check_plan_compat(plan_manifest(a), b)  # no raise
