@@ -1,0 +1,140 @@
+"""CI gate over ``BENCH_fidelity.json`` (the fidelity-smoke artifact).
+
+The companion of ``check_regression.py`` for the crossbar-in-the-loop sweep:
+where that script gates kernel *timings*, this one gates the *training
+numerics* the fidelity engine produces. A fresh sweep fails the job when
+
+1. any loss in any trajectory (finite-ADC or not) is non-finite — a
+   saturated/NaN engine read poisons training silently otherwise;
+2. the engine's ``(ideal, ideal)`` trajectory drifts from the float run
+   beyond ``--ideal-tol * (1 + step)`` — the ideal-ADC identity is the
+   engine's correctness anchor (bit-identical in the f32-exact regime; at
+   model scale only DAC rounding separates the runs, and its effect
+   compounds at most linearly through the weight updates);
+3. (with ``--baseline``) a shared trajectory's overlapping step prefix
+   drifts from the committed record beyond ``--drift-tol`` relative — the
+   sweep is seeded/deterministic, so prefix drift means either an engine
+   numerics change or unpinned jax/numpy drift (exactly what the weekly
+   scheduled run exists to catch between PRs).
+
+Refreshing the baseline after an intended numerics change::
+
+    JAX_PLATFORMS=cpu python -m benchmarks.fig9_slice_crs --fidelity
+    git add BENCH_fidelity.json   # commit alongside the engine change
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+IDEAL_KEY = "fwdideal_bwdideal"
+FLOAT_KEY = "float"
+
+REFRESH_HINT = (
+    "If this change is intended (an engine numerics change, a sweep-config "
+    "change), refresh the baseline:\n"
+    "    JAX_PLATFORMS=cpu python -m benchmarks.fig9_slice_crs --fidelity\n"
+    "    git add BENCH_fidelity.json\nand commit it with the change."
+)
+
+
+def _trajectories(rec: dict) -> dict:
+    return {k: v["losses"] for k, v in rec.items() if k != "_meta"}
+
+
+def check_fresh(fresh: dict, ideal_tol: float) -> list[str]:
+    failures: list[str] = []
+    trajs = _trajectories(fresh)
+    for key, losses in sorted(trajs.items()):
+        bad = [i for i, l in enumerate(losses) if not math.isfinite(l)]
+        if bad:
+            failures.append(
+                f"{key}: non-finite loss at step(s) {bad[:5]} — the engine "
+                f"read is saturating or producing NaN/inf"
+            )
+    if FLOAT_KEY in trajs and IDEAL_KEY in trajs:
+        for i, (f, g) in enumerate(zip(trajs[FLOAT_KEY], trajs[IDEAL_KEY])):
+            tol = ideal_tol * (1 + i)
+            if math.isfinite(f) and math.isfinite(g) and abs(f - g) > tol:
+                failures.append(
+                    f"{IDEAL_KEY} drifted from {FLOAT_KEY} at step {i}: "
+                    f"{g:.6f} vs {f:.6f} (|diff| {abs(f - g):.2e} > {tol:.2e}) — "
+                    f"the ideal-ADC identity (engine == float matmul up to DAC "
+                    f"rounding) no longer holds"
+                )
+                break
+    else:
+        failures.append(
+            f"fresh record is missing the '{FLOAT_KEY}'/'{IDEAL_KEY}' "
+            f"trajectories the ideal-ADC anchor check needs"
+        )
+    return failures
+
+
+def check_baseline(base: dict, fresh: dict, drift_tol: float) -> list[str]:
+    failures: list[str] = []
+    bt, ft = _trajectories(base), _trajectories(fresh)
+    shared = sorted(set(bt) & set(ft))
+    if len(shared) < 2:
+        return [
+            f"only {len(shared)} trajectory key(s) shared between baseline and "
+            f"fresh sweep — the baseline is stale and the gate vacuous"
+        ]
+    meta_b, meta_f = base.get("_meta", {}), fresh.get("_meta", {})
+    for field in ("arch", "lr", "spec"):
+        if meta_b.get(field) != meta_f.get(field):
+            return [
+                f"sweep configuration changed ({field}: {meta_b.get(field)!r} -> "
+                f"{meta_f.get(field)!r}) — trajectories are not comparable"
+            ]
+    for key in shared:
+        for i, (b, f) in enumerate(zip(bt[key], ft[key])):
+            if not (math.isfinite(b) and math.isfinite(f)):
+                continue  # finiteness is check_fresh's job
+            rel = abs(f - b) / (1 + abs(b))
+            if rel > drift_tol:
+                failures.append(
+                    f"{key}: step {i} loss {b:.6f} -> {f:.6f} "
+                    f"(rel drift {rel:.2e} > {drift_tol:.0e}) — deterministic "
+                    f"sweep prefix changed (engine regression or jax/numpy drift)"
+                )
+                break
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True, help="freshly measured sweep JSON")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON (default: skip prefix check)")
+    ap.add_argument("--ideal-tol", type=float, default=2e-3,
+                    help="per-step |float - ideal| budget, scaled by (1 + step)")
+    ap.add_argument("--drift-tol", type=float, default=1e-2,
+                    help="max relative per-step drift vs the committed baseline")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures = check_fresh(fresh, args.ideal_tol)
+    if args.baseline is not None:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        failures += check_baseline(base, fresh, args.drift_tol)
+
+    if failures:
+        print("FIDELITY GATE FAILED:")
+        for line in failures:
+            print(f"  - {line}")
+        print(REFRESH_HINT)
+        return 1
+    n = len(_trajectories(fresh))
+    print(f"fidelity gate OK: {n} trajectories finite, ideal-ADC anchor within "
+          f"{args.ideal_tol} * (1 + step)"
+          + ("" if args.baseline is None else ", no baseline prefix drift"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

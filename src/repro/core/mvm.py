@@ -126,8 +126,20 @@ def fidelity_read(
     by ``2^-(x_frac + frac_bits)``. With ``adc_bits=None`` and both operands
     exactly on their grids every step is exact in f32, so the read is
     bit-identical to ``x @ dequantize(planes)`` (property-tested).
+
+    Mesh lowering: inside a ``distributed.fidelity.use_sharded_fidelity``
+    scope (the trainer/server activates one when built with a mesh) the
+    integer read dispatches to ``kernels.sliced_mvm.mvm_sliced_sharded`` —
+    tokens shard over the data axes, crossbar tile blocks over 'model' per
+    ``fid.shard_dim``, with the contraction-side partials psum-reduced
+    exactly. The DAC scale stays *global*: ``choose_frac_bits``/``quantize``
+    run before the shard_map, so every shard quantizes against the same
+    activation range and the sharded read equals the single-host one.
     """
-    from repro.kernels.sliced_mvm import mvm_sliced_batched  # lazy: kernels import core
+    from repro.kernels.sliced_mvm import (  # lazy: kernels import core
+        mvm_sliced_batched,
+        mvm_sliced_sharded,
+    )
 
     adc_bits = fid.adc_bits_bwd if transpose else fid.adc_bits_fwd
     # clip_to_word=False: the DAC scale is a free power of two (the digital
@@ -136,10 +148,23 @@ def fidelity_read(
     xf = choose_frac_bits(x, word_bits=fid.io_bits, margin_bits=fid.margin_bits,
                           clip_to_word=False)
     xq = quantize(x, xf, word_bits=fid.io_bits)
-    acc = mvm_sliced_batched(
-        planes, xq, fid.spec, io_bits=fid.io_bits, adc_bits=adc_bits,
-        transpose=transpose, use_kernel=fid.use_kernel, interpret=fid.interpret,
-    )
+    ctx = None
+    if planes.ndim == 3:  # per-layer planes only (no stacked layer dims)
+        from repro.distributed.fidelity import active as _active_shard_ctx
+
+        ctx = _active_shard_ctx()
+    if ctx is not None:
+        acc = mvm_sliced_sharded(
+            planes, xq, fid.spec, mesh=ctx.mesh, data_axes=ctx.data_axes,
+            model_axis=ctx.model_axis, shard_dim=fid.shard_dim,
+            io_bits=fid.io_bits, adc_bits=adc_bits, transpose=transpose,
+            use_kernel=fid.use_kernel, interpret=fid.interpret,
+        )
+    else:
+        acc = mvm_sliced_batched(
+            planes, xq, fid.spec, io_bits=fid.io_bits, adc_bits=adc_bits,
+            transpose=transpose, use_kernel=fid.use_kernel, interpret=fid.interpret,
+        )
     return acc * exp2i(-(xf + jnp.asarray(frac_bits, jnp.int32)))
 
 

@@ -1,4 +1,4 @@
-from . import sharding
-from .collectives import compressed_psum
+from . import fidelity, sharding
+from .collectives import compressed_psum, tile_psum
 
-__all__ = ["sharding", "compressed_psum"]
+__all__ = ["fidelity", "sharding", "compressed_psum", "tile_psum"]

@@ -1,4 +1,4 @@
-"""Collective helpers: slice-aligned gradient compression.
+"""Collective helpers: slice-aligned gradient compression + exact tile sums.
 
 ``compressed_psum`` quantizes a gradient shard to 16-bit fixed point (the
 paper's I/O precision) before the data-parallel all-reduce and dequantizes
@@ -7,11 +7,28 @@ precision, so nothing is lost that the deposit wouldn't have dropped).
 Stochastic rounding keeps the estimator unbiased. Use inside shard_map with
 an explicit DP axis; the full-model pjit path gets the same 2x from bf16
 grads automatically (roofline §collective quantifies both).
+
+``tile_psum`` is the *exact* counterpart used by the sharded fidelity engine
+(``kernels.sliced_mvm.mvm_sliced_sharded``): it reduces per-shard crossbar
+partials — the forward's row-block shift-and-add partials and the MᵀVM
+``dx`` column partials — across the tensor-parallel axis.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def tile_psum(partial: jax.Array, axis_name: str) -> jax.Array:
+    """Exact f32 all-reduce of per-shard crossbar-tile partials.
+
+    Deliberately NOT :func:`compressed_psum`: the operands are product-grid
+    accumulations (exact integers in the f32-exact regime) and the fidelity
+    contract — ``adc_bits=None`` bit-identical to the float matmul — relies
+    on the reduction adding them exactly. A quantized all-reduce here would
+    silently re-introduce the error the ideal-ADC identity proves away.
+    """
+    return jax.lax.psum(partial, axis_name)
 
 
 def compressed_psum(g: jax.Array, axis_name: str, key: jax.Array | None = None, bits: int = 16):

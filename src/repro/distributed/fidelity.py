@@ -1,0 +1,76 @@
+"""Mesh context for sharded crossbar-in-the-loop (fidelity) reads.
+
+The finite-ADC engine is invoked deep inside model code — ``xbar_linear``'s
+custom-vjp forward/backward call ``core.mvm.fidelity_read`` on whatever
+planes ride the param tree — so the mesh lowering cannot be threaded as an
+argument without rewriting every model site. Instead the trainer / server
+activates a :class:`ShardCtx` for the dynamic extent of *tracing* its step
+(``make_train_step`` under a mesh, ``serve.make_prefill`` /
+``make_decode_step``), and ``fidelity_read`` consults :func:`active` at
+trace time: with a context set, the read lowers through
+``kernels.sliced_mvm.mvm_sliced_sharded`` — token axis over the
+data-parallel axes, crossbar tile blocks over 'model' per the leaf's
+``FidelityConfig.shard_dim`` hint — instead of the single-host batched
+entry. No context (the default) keeps every existing call path byte-
+identical.
+
+The context is trace-time state, not run-time state: it only selects which
+jaxpr is built. A jitted step traced under a context keeps its sharded
+lowering forever; re-tracing without one falls back to single-host.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh lowering parameters for fidelity reads.
+
+    ``data_axes`` are the mesh axes the flattened token axis shards over
+    (the DP axes of the step's batch sharding); ``model_axis`` names the
+    tensor-parallel axis carrying crossbar tile blocks (``None`` disables
+    tile sharding — tokens still shard).
+    """
+
+    mesh: Any
+    data_axes: tuple = ()
+    model_axis: str | None = "model"
+
+
+_local = threading.local()
+
+
+def active() -> ShardCtx | None:
+    """The ShardCtx of the innermost :func:`use_sharded_fidelity` scope."""
+    return getattr(_local, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharded_fidelity(ctx: ShardCtx | None):
+    """Activate ``ctx`` for the dynamic extent (``None`` deactivates —
+    useful to pin single-host lowering inside an outer sharded scope)."""
+    prev = getattr(_local, "ctx", None)
+    _local.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _local.ctx = prev
+
+
+def ctx_for(mesh, global_batch: int | None = None, model_axis: str = "model") -> ShardCtx:
+    """Build the standard ShardCtx for a (pod, data, model) production mesh:
+    tokens shard over the DP axes the step's batch sharding uses — the same
+    *cumulative* divisibility walk as ``sharding.data_spec``, so the engine's
+    token sharding matches the activation layout instead of forcing a
+    reshard on every read (all axes when ``global_batch`` is unknown — the
+    engine pads the token axis to any shard count) — and tile blocks over
+    ``model_axis`` when present."""
+    from repro.distributed import sharding as shd  # lazy: keep import light
+
+    axes = shd.data_axes_for(mesh, global_batch)
+    maxis = model_axis if (model_axis in mesh.axis_names and mesh.shape[model_axis] > 1) else None
+    return ShardCtx(mesh=mesh, data_axes=axes, model_axis=maxis)

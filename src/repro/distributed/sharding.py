@@ -120,10 +120,7 @@ def operand_grad_spec(path_str: str, wshape: tuple, mesh, mb_batch: int | None,
     """
     from repro.models.common import OuterProductGrad  # local: avoid cycles
 
-    base = leaf_spec(path_str, len(wshape), hint=hint)
-    if mesh is not None:
-        base = sanitize_spec(base, wshape, mesh)
-    base = tuple(base) + (None,) * (len(wshape) - len(tuple(base)))
+    base = sanitized_leaf_spec(path_str, wshape, mesh, hint=hint)
     stack = base[:-2]
     m_ax, n_ax = base[-2], base[-1]
     dp = None
@@ -133,6 +130,39 @@ def operand_grad_spec(path_str: str, wshape: tuple, mesh, mb_batch: int | None,
         x=P(*stack, dp, m_ax),
         dh=P(*stack, dp, n_ax),
     )
+
+
+def sanitized_leaf_spec(path_str: str, shape: tuple, mesh,
+                        hint: tuple | None = None) -> tuple:
+    """The *effective* per-dim mesh axes of the leaf at ``path_str`` as
+    stored: name rules (or the plan ``hint``) -> ``sanitize_spec`` against
+    the real ``shape`` -> right-padded to ``len(shape)``. Shared by
+    :func:`fidelity_plane_specs` and ``plan.attach_fidelity_shard_dims`` so
+    the sharded-fidelity tile hint and the plane sharding constraints can
+    never disagree about where the planes live."""
+    base = leaf_spec(path_str, len(shape), hint=hint)
+    if mesh is not None:
+        base = sanitize_spec(base, shape, mesh)
+    return tuple(base) + (None,) * (len(shape) - len(tuple(base)))
+
+
+def fidelity_plane_specs(path_str: str, wshape: tuple, mesh,
+                         hint: tuple | None = None) -> tuple:
+    """Specs for the transient plane/scale leaves a fidelity-wrapped
+    ``XbarWeight`` carries through the differentiated step.
+
+    The wrap's planes are laid out ``[*stack, S, M, N]`` (``optim.panther.
+    _fid_leaves`` moves the slice dim behind the layer-stack dims so lax.scan
+    slices layers) and its ``frac_bits`` broadcasts to ``[*stack]``. The
+    matrix dims shard exactly like the dense weight at ``path_str`` (plan
+    shard hint overriding the name rules, sanitized against ``wshape`` —
+    the crossbar tile blocks live where the stored planes live); S and the
+    stack dims replicate. Returns ``(planes_spec, frac_bits_spec)``.
+    """
+    base = sanitized_leaf_spec(path_str, wshape, mesh, hint=hint)
+    stack = base[:-2]
+    planes = P(*stack, None, base[-2], base[-1])
+    return planes, P(*stack)
 
 
 def fsdp_spec(spec: P, shape: tuple, data_size: int, n_tail: int | None = None) -> P:
@@ -157,15 +187,27 @@ def batch_axes(mesh: Mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
-def data_spec(mesh: Mesh, global_batch: int, ndim: int) -> P:
-    """Shard the batch dim over as many DP axes as divide it; rest replicated."""
+def data_axes_for(mesh: Mesh, global_batch: int | None) -> tuple:
+    """DP axes whose sizes *cumulatively* divide ``global_batch`` (all DP
+    axes when ``None``). The single divisibility walk behind both the batch
+    sharding (:func:`data_spec`) and the sharded-fidelity token sharding
+    (``distributed.fidelity.ctx_for``) — shared so the engine's token layout
+    always matches the activation layout."""
     axes = []
     rem = global_batch
     for a in batch_axes(mesh):
         size = mesh.shape[a]
-        if rem % size == 0:
+        if rem is None:
+            axes.append(a)
+        elif rem % size == 0:
             axes.append(a)
             rem //= size
+    return tuple(axes)
+
+
+def data_spec(mesh: Mesh, global_batch: int, ndim: int) -> P:
+    """Shard the batch dim over as many DP axes as divide it; rest replicated."""
+    axes = data_axes_for(mesh, global_batch)
     spec = tuple(axes) if axes else None
     return P(spec, *((None,) * (ndim - 1)))
 

@@ -13,6 +13,18 @@ forward/backward: arbitrary leading dims flatten into ONE token axis that
 rides the kernel's batch grid, so every crossbar tile still issues one
 ``dot_general`` per bit-block — vmapping the vector entry over tokens would
 shatter that operand back into per-token matmuls (the seed's 6%-MXU shape).
+
+``mvm_sliced_sharded`` is the mesh lowering of the batched entry: a
+shard_map whose token axis shards over the data-parallel axes and whose
+crossbar row/column tile blocks shard over the tensor-parallel 'model' axis,
+each shard running the identical packed schedule on its local tiles. When
+the *contraction* side is sharded (forward read of a row-parallel weight,
+MᵀVM read of a column-parallel one) the per-shard shift-and-add partials are
+psum-reduced exactly (``distributed.collectives.tile_psum``) — the crossbar
+tiling makes this lossless: ADC quantization is per 128-row tile, so as long
+as every shard holds whole tiles the sharded read computes the same tile
+currents as the single-host schedule and only the final (exact-in-the-
+f32-regime) accumulation is distributed.
 """
 from __future__ import annotations
 
@@ -86,11 +98,119 @@ def mvm_sliced_batched(
     t = x2.shape[0]
     pad = (-t) % BATCH_GRANULE
     if pad:
-        x2 = jnp.concatenate([x2, jnp.zeros((pad, contract), x2.dtype)], axis=0)
+        # jnp.pad, not concatenate — see the note in mvm_sliced_sharded
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
     out = mvm_sliced(
         planes, x2, spec, io_bits=io_bits, adc_bits=adc_bits, transpose=transpose,
         use_kernel=use_kernel, interpret=interpret,
     )
+    if pad:
+        out = out[:t]
+    return out.reshape(*lead, out.shape[-1])
+
+
+def mvm_sliced_sharded(
+    planes,
+    x_q,
+    spec: SliceSpec,
+    *,
+    mesh,
+    data_axes: tuple = (),
+    model_axis: str | None = None,
+    shard_dim: int | None = None,
+    io_bits: int = 16,
+    adc_bits: int | None = None,
+    transpose: bool = False,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+):
+    """Mesh-sharded token-batched sliced MVM / MᵀVM (module docstring).
+
+    ``planes`` int8 [S, M, N] (one layer's digit planes — no stack dims);
+    ``x_q`` int [..., M] ([..., N] when ``transpose``). ``data_axes`` are the
+    mesh axes the flattened token axis shards over; ``model_axis`` names the
+    tensor-parallel axis and ``shard_dim`` which matrix dim of the dense
+    ``[M, N]`` weight it carries (``FidelityConfig.shard_dim``: 0 = rows,
+    1 = columns, ``None`` = replicated planes, token sharding only).
+
+    Alignment guards (static, trace-time): a sharded *contraction* dim must
+    split into whole 128-row crossbar tiles per shard at finite ADC (the ADC
+    boundary is per tile — a misaligned split would quantize different tile
+    sums than the single-host schedule) and merely divide evenly at
+    ``adc_bits=None`` (ideal-ADC streaming is linear in row blocks); a
+    sharded *output* dim must divide evenly. Unmet guards drop the model-
+    axis sharding for this read (tokens stay sharded) rather than change
+    numerics — equivalence to the single-host schedule is the contract.
+    """
+    contract = planes.shape[2] if transpose else planes.shape[1]
+    out_dim = planes.shape[1] if transpose else planes.shape[2]
+    lead = x_q.shape[:-1]
+    assert planes.ndim == 3 and x_q.shape[-1] == contract, (planes.shape, x_q.shape)
+
+    dp = tuple(a for a in data_axes if a in mesh.axis_names and mesh.shape[a] > 1)
+    dsize = 1
+    for a in dp:
+        dsize *= mesh.shape[a]
+    maxis = model_axis if (model_axis in mesh.axis_names and mesh.shape[model_axis] > 1) else None
+    msize = mesh.shape[maxis] if maxis is not None else 1
+
+    sd = shard_dim if maxis is not None else None
+    if sd is not None:
+        if sd == (1 if transpose else 0):  # contraction side sharded
+            granule = msize if adc_bits is None else msize * _k.XBAR_ROWS
+            if contract % granule != 0:
+                sd = None
+        elif out_dim % msize != 0:  # output side sharded
+            sd = None
+    if not dp and sd is None:
+        # 1-device (or unusable) mesh: the plain batched entry IS the lowering
+        return mvm_sliced_batched(
+            planes, x_q, spec, io_bits=io_bits, adc_bits=adc_bits,
+            transpose=transpose, use_kernel=use_kernel, interpret=interpret,
+        )
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    x2 = x_q.reshape(-1, contract)
+    t = x2.shape[0]
+    # pad so every data shard lands on the kernel's token granule. jnp.pad,
+    # NOT concatenate: on jax 0.4.37 a concatenate feeding a shard_map input
+    # under jit mispartitions and the reshard SUMS over 'model' instead of
+    # gathering (minimal repro in tests/test_distributed.py history; pad and
+    # at[].set lower correctly).
+    pad = (-t) % (BATCH_GRANULE * dsize)
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+
+    contract_sharded = sd == (1 if transpose else 0)
+    out_sharded = sd == (0 if transpose else 1)
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+    w_spec = [None, None, None]
+    if sd is not None:
+        w_spec[1 + sd] = maxis
+
+    def local(planes_l, x_l):
+        acc = mvm_sliced(
+            planes_l, x_l, spec, io_bits=io_bits, adc_bits=adc_bits,
+            transpose=transpose, use_kernel=use_kernel, interpret=interpret,
+        )
+        if contract_sharded:
+            from repro.distributed.collectives import tile_psum  # lazy: no cycle
+
+            acc = tile_psum(acc, maxis)
+        return acc
+
+    out = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(*w_spec),
+            P(dp_entry, maxis if contract_sharded else None),
+        ),
+        out_specs=P(dp_entry, maxis if out_sharded else None),
+        check_rep=False,
+    )(planes, x2)
     if pad:
         out = out[:t]
     return out.reshape(*lead, out.shape[-1])

@@ -27,6 +27,11 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--mesh", default="none", choices=["none", "debug"])
+    ap.add_argument("--fidelity", default="none",
+                    choices=["none", "ideal", "adc9", "adc6", "adc6_fwd", "adc6_bwd"],
+                    help="crossbar-in-the-loop preset: train through the finite-ADC "
+                         "sliced-MVM/MᵀVM engine (works with --mesh: the reads run "
+                         "shard_map-sharded over the debug mesh)")
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args()
 
@@ -58,8 +63,17 @@ def main():
 
         mesh = make_debug_mesh()
 
+    fid = None
+    if args.fidelity != "none":
+        import dataclasses
+
+        # the engine must read the planes the optimizer writes
+        fid = dataclasses.replace(configs.fidelity_presets()[args.fidelity],
+                                  spec=opt_cfg.spec)
+
     ds = SyntheticLMDataset(cfg.vocab, args.seq, args.batch)
-    step_fn = make_train_step(cfg, opt_cfg, sched, mesh=mesh, global_batch=args.batch if mesh else None)
+    step_fn = make_train_step(cfg, opt_cfg, sched, mesh=mesh,
+                              global_batch=args.batch if mesh else None, fidelity=fid)
     state = train_state_init(cfg, opt_cfg, jax.random.PRNGKey(0))
 
     ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every) if args.ckpt_dir else None

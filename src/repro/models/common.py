@@ -143,6 +143,15 @@ class FidelityConfig:
     question: where does accuracy collapse first?). ``spec`` must match the
     optimizer's plane layout. ``use_kernel``/``interpret`` follow the
     ``kernels.sliced_mvm`` dispatch convention (None = auto: Pallas on TPU).
+
+    ``shard_dim`` is the mesh-lowering hint for sharded fidelity training
+    (``distributed.fidelity``): which matrix dim of the dense ``[M, N]``
+    weight carries the tensor-parallel 'model' axis (``0`` = rows, ``1`` =
+    columns, ``None`` = the planes are replicated over 'model'). It is
+    derived from the leaf's sharding by ``plan.attach_fidelity_shard_dims``
+    so the engine's shard_map path keeps the crossbar tile blocks where the
+    stored planes already live instead of regathering them per read. Inert
+    off-mesh.
     """
 
     io_bits: int = 16
@@ -154,6 +163,7 @@ class FidelityConfig:
     margin_bits: int = 1  # DAC headroom when choosing the per-read IO scale
     use_kernel: bool | None = None
     interpret: bool | None = None
+    shard_dim: int | None = None  # mesh tile-shard hint (0=M, 1=N, None=replicated)
 
 
 @jax.tree_util.register_pytree_node_class

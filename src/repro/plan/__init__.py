@@ -319,6 +319,66 @@ def plan_summary(plan_tree) -> str:
     return "\n".join(lines)
 
 
+# --------------------------- mesh (sharded fidelity) ------------------------
+
+
+def attach_fidelity_shard_dims(plan_tree, mesh, params=None):
+    """Thread the mesh lowering hint into every fidelity-bearing leaf.
+
+    Returns a copy of ``plan_tree`` whose ``LeafPlan.fidelity`` carries
+    ``shard_dim`` — which matrix dim of the dense ``[M, N]`` weight the
+    tensor-parallel 'model' axis shards (0 = rows, 1 = columns, ``None`` =
+    replicated) — derived from the leaf's sharding: the plan's own ``shard``
+    hint when set, else the ``distributed.sharding`` name rules. The engine's
+    shard_map path (``kernels.sliced_mvm.mvm_sliced_sharded``) uses the hint
+    to keep crossbar tile blocks where the stored planes already live; its
+    own trace-time alignment guards handle divisibility.
+
+    ``params`` (the parameter tree, concrete or ``jax.eval_shape`` output,
+    mirroring ``plan_tree``) lets the hint go through the same
+    ``sanitize_spec`` pass the stored-plane specs use, so a relocated
+    'model' axis (non-divisible dim) yields the shard_dim the planes
+    actually have instead of the one the raw name rule names. Without
+    shapes the raw trailing spec applies. A ``None``/model-less mesh
+    returns the tree unchanged.
+    """
+    if mesh is None:
+        return plan_tree
+    from repro.distributed import sharding as shd  # lazy: avoid module cycle
+
+    if shd.MODEL not in mesh.axis_names or mesh.shape[shd.MODEL] <= 1:
+        return plan_tree
+    shapes = {}
+    if params is not None:
+        flat, _ = jax.tree_util.tree_flatten_with_path(params)
+        shapes = {path_str(p): tuple(leaf.shape) for p, leaf in flat}
+
+    def has_model(entry) -> bool:
+        return entry == shd.MODEL or (isinstance(entry, tuple) and shd.MODEL in entry)
+
+    def one(path, pl: LeafPlan) -> LeafPlan:
+        if pl.fidelity is None:
+            return pl
+        ps = path_str(path)
+        shape = shapes.get(ps)
+        if shape is not None and len(shape) >= 2:
+            trailing = shd.sanitized_leaf_spec(ps, shape, mesh, hint=pl.shard)
+        else:
+            trailing = shd.trailing_spec(ps, hint=pl.shard)
+        sd = None
+        if len(trailing) >= 2:
+            sd = 0 if has_model(trailing[-2]) else (1 if has_model(trailing[-1]) else None)
+        if sd == pl.fidelity.shard_dim:
+            return pl
+        return dataclasses.replace(
+            pl, fidelity=dataclasses.replace(pl.fidelity, shard_dim=sd)
+        )
+
+    return jax.tree_util.tree_map_with_path(
+        one, plan_tree, is_leaf=lambda x: isinstance(x, LeafPlan)
+    )
+
+
 # ----------------------- serialization (checkpoints) ------------------------
 
 
@@ -400,6 +460,7 @@ __all__ = [
     "LeafInfo",
     "LeafPlan",
     "PlanRule",
+    "attach_fidelity_shard_dims",
     "check_plan_compat",
     "crossbar_eligible",
     "default_rules",

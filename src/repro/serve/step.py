@@ -8,21 +8,29 @@ Finite-ADC serving: pass a tree produced by :func:`fidelity_params` instead
 of the plain dequantized params and every operand-eligible linear reads the
 int8 planes through the packed sliced-MVM engine at the configured ADC
 resolution — the Fig-9/10 serving-fidelity readout as a first-class serving
-mode (off-mesh; the sharded production path serves the lossless fast path).
+mode. Under a mesh the prefill/decode fns built below trace inside a
+``distributed.fidelity`` ShardCtx, so fidelity-wrapped leaves serve through
+the SAME sharded planes the sharded fidelity trainer wrote — token axis over
+the DP axes, crossbar tile blocks over 'model' (pass ``mesh`` to
+:func:`fidelity_params` so each leaf's ``shard_dim`` hint is attached).
 """
 from __future__ import annotations
+
+import contextlib
+import types
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
+from repro.distributed import fidelity as dist_fid
 from repro.distributed import sharding as shd
 from repro.models import lm
 from repro.models.common import LMConfig
 from repro.optim import panther
 
 
-def fidelity_params(params, sliced, fid=None, plan=None):
+def fidelity_params(params, sliced, fid=None, plan=None, mesh=None):
     """Wrap a served (materialized) param tree for finite-ADC reads.
 
     ``sliced`` is the trainer's plane tree (``TrainState.sliced``); ``fid``
@@ -33,8 +41,33 @@ def fidelity_params(params, sliced, fid=None, plan=None):
     Returns params whose wrapped leaves are forward-only ``XbarWeight``
     wraps — feed them to the prefill / decode fns built below.
     Forward-only: do not differentiate through them.
+
+    With ``mesh``, each wrap's FidelityConfig carries the tile-shard hint
+    (``shard_dim``) the sharded engine path uses — a global ``fid`` is first
+    resolved into a per-leaf plan (same default rules the trainer uses) so
+    wqkv-style column-parallel and wo-style row-parallel leaves get their
+    own hints. Serve through fns built with the same ``mesh`` so the reads
+    actually trace inside the ShardCtx.
     """
+    if mesh is not None:
+        from repro import plan as planlib
+
+        if plan is None and fid is not None:
+            duck = types.SimpleNamespace(spec=fid.spec)  # min_ndim/min_dim default
+            plan = planlib.resolve_plan(params, planlib.default_rules(duck, fidelity=fid))
+            fid = None
+        if plan is not None:
+            plan = planlib.attach_fidelity_shard_dims(plan, mesh, params)
     return panther.fidelitize(params, sliced, fid, plan=plan)
+
+
+def _fid_scope(mesh, global_batch):
+    """Trace-time ShardCtx for the serving fns: fidelity-wrapped leaves (if
+    any) lower their reads through the sharded engine; inert otherwise."""
+    if mesh is None:
+        return contextlib.nullcontext
+    ctx = dist_fid.ctx_for(mesh, global_batch)
+    return lambda: dist_fid.use_sharded_fidelity(ctx)
 
 
 def make_prefill(cfg: LMConfig, mesh=None, global_batch: int | None = None, max_seq: int | None = None):
@@ -64,8 +97,11 @@ def make_prefill(cfg: LMConfig, mesh=None, global_batch: int | None = None, max_
     else:
         shard_fn = None
 
+    scope = _fid_scope(mesh, global_batch)
+
     def prefill(params, inputs):
-        return lm.prefill(cfg, params, inputs, shard_fn=shard_fn, cshard=cshard)
+        with scope():
+            return lm.prefill(cfg, params, inputs, shard_fn=shard_fn, cshard=cshard)
 
     return prefill
 
@@ -77,8 +113,11 @@ def make_decode_step(cfg: LMConfig, mesh=None, global_batch: int | None = None, 
     else:
         shard_fn = None
 
+    scope = _fid_scope(mesh, global_batch)
+
     def decode_step(params, token, caches, pos, rng=None):
-        logits, caches = lm.decode_step(cfg, params, token, caches, pos, shard_fn=shard_fn)
+        with scope():
+            logits, caches = lm.decode_step(cfg, params, token, caches, pos, shard_fn=shard_fn)
         if sample:
             nxt = jax.random.categorical(rng, logits.astype(jnp.float32), axis=-1)
         else:

@@ -25,6 +25,7 @@ bit-compatible per leaf.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any, NamedTuple
 
 import jax
@@ -197,9 +198,19 @@ def make_train_step(
     read, on the SAME int8 planes the OPA deposit writes — the Fig-9/10
     study for gradients. The differentiated param tree then carries integer
     plane leaves, so AD runs with ``allow_int`` (their cotangents are
-    float0, stripped with the operand zeros). Fidelity mode is a simulator
-    configuration: it requires ``operand_grads`` and runs off-mesh (the
-    sharded production step keeps the lossless dequantize→MXU fast path).
+    float0, stripped with the operand zeros). Fidelity requires
+    ``operand_grads``. Under a ``mesh`` the whole loop runs pjit-sharded
+    (the paper's multi-core/multi-tile regime): the step traces inside a
+    ``distributed.fidelity`` ShardCtx, so every engine read lowers through
+    the shard_map path — token axis over the DP axes, crossbar tile blocks
+    over 'model' per each leaf's ``FidelityConfig.shard_dim`` (attached here
+    from the plan shard hints / name rules via
+    ``plan.attach_fidelity_shard_dims``), contraction-side partials (the
+    forward's row-block shift-and-add, the MᵀVM ``dx`` column partials)
+    psum-reduced exactly. The transient plane/scale leaves the wraps carry
+    get sharding constraints mirroring the stored planes
+    (``sharding.fidelity_plane_specs``), so the reads, the OPA deposit, and
+    the optimizer state agree on one layout.
 
     ``plan`` / ``plan_rules`` select the declarative per-leaf mapping
     (``repro.plan``): pass a resolved plan tree, or an ordered
@@ -230,6 +241,17 @@ def make_train_step(
             f"plane layout {opt_cfg.spec}"
         )
 
+    # Abstract param shapes, traced at most once per build (the initializer
+    # trace is nontrivial on multi-B configs and up to three sites need it).
+    _shapes_memo = []
+
+    def param_shapes():
+        if not _shapes_memo:
+            _shapes_memo.append(
+                jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+            )
+        return _shapes_memo[0]
+
     # Static (build-time) plan: shard/eligibility decisions for the mesh
     # specs. Rules re-resolve at trace time with the real token count so
     # token-dependent rules (operand-stash fallback) can flip leaves.
@@ -239,8 +261,7 @@ def make_train_step(
         fidelity = None  # rides the plan from here on
     plan0 = plan
     if plan0 is None and rules is not None:
-        shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
-        plan0 = planlib.resolve_plan(shapes, rules)
+        plan0 = planlib.resolve_plan(param_shapes(), rules)
     use_plan = plan0 is not None
 
     has_fid = fidelity is not None or (
@@ -251,10 +272,17 @@ def make_train_step(
         if not operand_grads:
             raise ValueError("fidelity mode rides the operand pipeline (operand_grads=True)")
         if mesh is not None:
-            raise NotImplementedError(
-                "fidelity training is a (single-host) simulator mode; the mesh "
-                "path keeps the lossless fast-path numerics"
-            )
+            # Sharded fidelity: everything rides a resolved plan so each
+            # fidelity leaf can carry its tile-shard hint (shard_dim), and
+            # the step body traces inside a ShardCtx (below) so the engine
+            # reads lower through the shard_map path.
+            if plan0 is None:
+                plan0 = planlib.resolve_plan(
+                    param_shapes(), planlib.default_rules(opt_cfg, fidelity=fidelity)
+                )
+                fidelity = None  # rides the plan from here on
+                use_plan = True
+            plan0 = planlib.attach_fidelity_shard_dims(plan0, mesh, param_shapes())
     allow_int = has_fid
     mb_batch = global_batch // microbatches if global_batch else None
     gshard = pshard = None
@@ -267,11 +295,36 @@ def make_train_step(
             gspecs = grad_specs(cfg, opt_cfg, mesh=mesh, fsdp=fsdp,
                                 operand=True, mb_batch=mb_batch, plan=plan0)
             # params keep the dense (ZeRO) layout for the compute copy and
-            # carry operand-slot specs alongside
-            pspecs = jax.tree.map(
-                lambda d, o: XbarWeight(d, o) if _is_opg(o) else d,
-                gspecs_d, gspecs, is_leaf=lambda x: isinstance(x, P),
-            )
+            # carry operand-slot specs alongside; fidelity wraps additionally
+            # carry plane/scale leaves, whose specs mirror the stored planes
+            # (same fid aux as the wraps operandize builds, so the spec tree
+            # and the param tree flatten identically)
+            if has_fid:
+                shapes_p = param_shapes()
+                by_path = planlib.plan_by_path(plan0)
+
+                def pspec_leaf(path, d, o, leaf):
+                    if not _is_opg(o):
+                        return d
+                    ps = shd._path_str(path)
+                    pl = by_path.get(ps)
+                    if pl is None or pl.fidelity is None:
+                        return XbarWeight(d, o)
+                    planes_s, frac_s = shd.fidelity_plane_specs(
+                        ps, leaf.shape, mesh, hint=pl.shard
+                    )
+                    return XbarWeight(d, o, planes=planes_s, frac_bits=frac_s,
+                                      fid=pl.fidelity)
+
+                pspecs = jax.tree_util.tree_map_with_path(
+                    pspec_leaf, gspecs_d, gspecs, shapes_p,
+                    is_leaf=lambda x: isinstance(x, P),
+                )
+            else:
+                pspecs = jax.tree.map(
+                    lambda d, o: XbarWeight(d, o) if _is_opg(o) else d,
+                    gspecs_d, gspecs, is_leaf=lambda x: isinstance(x, P),
+                )
         else:
             gspecs = pspecs = gspecs_d
         _named = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
@@ -312,7 +365,17 @@ def make_train_step(
     def loss_of(params, mb):
         return lm.loss_fn(cfg, params, mb, remat=remat_mode, shard_fn=shard_fn, wshard=wshard)
 
-    def train_step(state: TrainState, batch):
+    # Trace-time mesh scope for the fidelity engine: with a ShardCtx active,
+    # every fidelity_read in the step (forward MVM, backward MᵀVM) lowers
+    # through the shard_map path. No-op without a mesh or without fidelity.
+    _fid_scope = contextlib.nullcontext
+    if mesh is not None and has_fid:
+        from repro.distributed import fidelity as dist_fid
+
+        _fid_ctx = dist_fid.ctx_for(mesh, mb_batch)
+        _fid_scope = lambda: dist_fid.use_sharded_fidelity(_fid_ctx)
+
+    def _train_step(state: TrainState, batch):
         params = panther.materialize_split(state.digital, state.sliced, opt_cfg)
         plan_t = plan0
         if operand_grads:
@@ -426,5 +489,9 @@ def make_train_step(
         )
         gnorm = panther.global_grad_norm(grads)
         return new_state, {"loss": loss_val, "lr": lr, "grad_norm": gnorm}
+
+    def train_step(state: TrainState, batch):
+        with _fid_scope():
+            return _train_step(state, batch)
 
     return train_step
