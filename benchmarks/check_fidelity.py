@@ -70,6 +70,11 @@ def check_fresh(fresh: dict, ideal_tol: float) -> list[str]:
             f"fresh record is missing the '{FLOAT_KEY}'/'{IDEAL_KEY}' "
             f"trajectories the ideal-ADC anchor check needs"
         )
+    if not any(k.startswith("io") for k in trajs):
+        failures.append(
+            "fresh record has no io_bits-sweep trajectories (io*_adc* keys) — "
+            "the fig9 IO-resolution axis silently dropped out of the sweep"
+        )
     return failures
 
 

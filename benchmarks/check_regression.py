@@ -1,11 +1,20 @@
 """CI perf-regression gate over ``BENCH_kernels.json``.
 
 Compares a freshly-measured benchmark JSON against the committed baseline and
-fails (exit 1) when any *packed-path* timing (``us_packed`` — the Pallas
-dispatch — or ``us_packed_ref`` — the vectorized jnp reference of the same
-schedule) slows down by more than ``--threshold`` (default 1.3x), or when a
-kernel's jaxpr-counted ``dots_per_tile`` grows (a schedule regression back
-toward the seed's per-(slice, bit) serial matmuls).
+fails (exit 1) when any gated timing — the packed-path ``us_packed`` /
+``us_packed_ref`` or the quantize-fused ``us_fused_ref`` / ``us_fused_kernel``
+— slows down by more than ``--threshold`` (default 1.3x), when a kernel's
+jaxpr-counted ``dots_per_tile`` grows (a schedule regression back toward the
+seed's per-(slice, bit) serial matmuls), or when any row's ``no_hbm_crossing``
+flag turns false (a quantized operand, bit-plane, or noise-grid array
+reappeared at the pallas_call boundary — the DAC/RNG fusion contract).
+
+Mode guard: baseline and fresh run must agree on ``_meta.smoke``. In
+particular a committed *smoke* baseline must never gate a non-smoke run —
+smoke shrinks shapes AND iteration counts, so cross-mode ratios are
+meaningless and the gate would silently pass on garbage. The full committed
+record is ``BENCH_kernels.json`` (non-smoke); CI's smoke job gates against
+the separately committed ``BENCH_kernels.smoke.json``.
 
 CI runners are not this laptop: raw wall-clock ratios between machines are
 meaningless. The gate therefore normalizes every per-case ratio by the
@@ -24,7 +33,7 @@ import argparse
 import json
 import sys
 
-PACKED_TIMING_KEYS = ("us_packed", "us_packed_ref")
+PACKED_TIMING_KEYS = ("us_packed", "us_packed_ref", "us_fused_ref", "us_fused_kernel")
 MIN_SHARED_CASES = 3  # fewer ⇒ the baseline is stale and the gate vacuous
 
 REFRESH_HINT = (
@@ -34,9 +43,31 @@ REFRESH_HINT = (
 )
 
 
+def check_modes(base: dict, fresh: dict) -> list[str]:
+    """Refuse cross-mode comparisons (see module docstring)."""
+    bs = base.get("_meta", {}).get("smoke")
+    fs = fresh.get("_meta", {}).get("smoke")
+    if bs is True and fs is False:
+        return [
+            "the committed baseline is a SMOKE record (_meta.smoke=true) but "
+            "this is a non-smoke run — refusing to gate across modes. Refresh "
+            "the full baseline:\n    JAX_PLATFORMS=cpu python -m benchmarks.kernels"
+            "\n    git add BENCH_kernels.json"
+        ]
+    if bs != fs:
+        return [
+            f"_meta.smoke mismatch: baseline={bs} fresh={fs} — smoke and full "
+            "runs use different shapes/iters; gate like against like "
+            "(BENCH_kernels.smoke.json is the smoke baseline)"
+        ]
+    return []
+
+
 def compare(base: dict, fresh: dict, threshold: float) -> list[str]:
+    failures = check_modes(base, fresh)
+    if failures:
+        return failures
     shared = [k for k in base if k != "_meta" and k in fresh]
-    failures: list[str] = []
     if len(shared) < MIN_SHARED_CASES:
         return [
             f"only {len(shared)} benchmark case(s) shared between baseline and "
@@ -74,6 +105,12 @@ def compare(base: dict, fresh: dict, threshold: float) -> list[str]:
             failures.append(
                 f"{k}.dots_per_tile: {bd} -> {fd} (packed schedule regressed "
                 f"toward serial per-(slice, bit) dots)"
+            )
+        if fresh[k].get("no_hbm_crossing") is False:
+            failures.append(
+                f"{k}.no_hbm_crossing is false: a quantized operand, bit-plane "
+                f"stack, or noise grid crosses the pallas_call boundary — the "
+                f"fused DAC/RNG contract is broken"
             )
     return failures
 

@@ -149,6 +149,7 @@ def fidelity_sweep(steps: int | None = None, out_json: str | None = None):
     from repro.data import SyntheticLMDataset
     from repro.models.common import FidelityConfig
     from repro.optim.schedules import constant
+    from repro.plan import default_rules
     from repro.train.step import make_train_step, train_state_init
 
     steps = steps if steps is not None else (3 if SMOKE else 40)
@@ -158,9 +159,13 @@ def fidelity_sweep(steps: int | None = None, out_json: str | None = None):
     ds = SyntheticLMDataset(cfg.vocab, seq_len=32, global_batch=8, seed=3)
     lr = 0.3
 
-    def trajectory(fid):
+    def trajectory(fid=None, rules=None):
         state = train_state_init(cfg, opt, jax.random.PRNGKey(0))
-        step = jax.jit(make_train_step(cfg, opt, constant(lr), fidelity=fid))
+        if rules is not None:
+            step_fn = make_train_step(cfg, opt, constant(lr), plan_rules=rules)
+        else:
+            step_fn = make_train_step(cfg, opt, constant(lr), fidelity=fid)
+        step = jax.jit(step_fn)
         losses = []
         for i in range(steps):
             state, m = step(state, ds.batch(i))
@@ -184,6 +189,22 @@ def fidelity_sweep(steps: int | None = None, out_json: str | None = None):
         results[key] = {
             "adc_bits_fwd": fwd_b, "adc_bits_bwd": bwd_b, "engine": True,
             "losses": losses,
+        }
+        emit(f"fig9/fidelity_{key}", 0.0,
+             f"loss0={losses[0]:.4f};lossN={losses[-1]:.4f};steps={steps}")
+    # io_bits sweep (the fig9 IO-resolution axis — ROADMAP residual gap):
+    # driven through the declarative plan path, one scanned PlanRule list per
+    # DAC width, so the sweep also exercises make_train_step(plan_rules=...)
+    # end to end. The in-kernel DAC quantize gets io_bits as a static arg;
+    # each width recompiles, as a re-taped hardware config should.
+    for io in (8, 12, 16):
+        fid = FidelityConfig(adc_bits_fwd=9, adc_bits_bwd=9, io_bits=io,
+                             spec=opt.spec)
+        losses = trajectory(rules=default_rules(opt, fidelity=fid))
+        key = f"io{io}_adc9"
+        results[key] = {
+            "adc_bits_fwd": 9, "adc_bits_bwd": 9, "io_bits": io,
+            "engine": True, "plan_rules": True, "losses": losses,
         }
         emit(f"fig9/fidelity_{key}", 0.0,
              f"loss0={losses[0]:.4f};lossN={losses[-1]:.4f};steps={steps}")

@@ -13,6 +13,19 @@ machine-readable before/after record for the packed bit-plane MVM schedule:
 * ``dots_per_tile`` — jaxpr-counted MXU ops per crossbar tile for the packed
   kernel body vs the seed's ``S * (io_bits - 1)``.
 
+Each MVM row also records the quantize-FUSED entry (the DAC boundary inside
+the read engine — what ``fidelity_read`` now calls):
+
+* ``us_fused_ref`` — fused jnp reference, float activation in (DAC exponent
+  choice + quantize + bit planes + read, one jitted program);
+* ``us_unfused_ref_total`` — the pre-fusion composition the same program
+  replaced (``choose_frac_bits`` → ``quantize`` → integer packed read);
+* ``fused_speedup_vs_unfused`` — the ratio (machine-independent);
+* ``us_fused_kernel`` — the fused Pallas dispatch (double-buffered DMA
+  lowering; interpret off-TPU);
+* ``no_hbm_crossing`` — jaxpr-audited proof that no quantized operand or
+  bit-plane array crosses the pallas_call boundary on the fused path.
+
 ``BENCH_SMOKE=1`` shrinks shapes/iters for the CI smoke job.
 """
 from __future__ import annotations
@@ -25,7 +38,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import DEFAULT_SPEC, slice_weights
-from repro.kernels.sliced_mvm import mvm_sliced, mvm_sliced_batched
+from repro.core.fixed_point import choose_frac_bits, quantize
+from repro.kernels.common import forbid_pallas_inputs
+from repro.kernels.sliced_mvm import (
+    mvm_sliced,
+    mvm_sliced_batched,
+    mvm_sliced_fused,
+)
 from repro.kernels.sliced_mvm.kernel import tile_dot_count
 from repro.kernels.sliced_mvm.ref import mvm_sliced_looped
 from repro.kernels.sliced_opa import opa_deposit, opa_fused_update
@@ -100,6 +119,37 @@ def main():
         emit(f"kernels/opa_fused_{m}x{n}_T{t}", us, f"hbm_bytes_saved_vs_unfused={saved}")
         results[f"opa_fused_{m}x{n}_T{t}"] = {"us": us, "hbm_bytes_saved_vs_unfused": saved}
 
+        # stochastic rounding with the noise GENERATED IN-KERNEL (counter
+        # mode): only two key words enter via SMEM — the legacy grid mode
+        # shipped an f32 [M, N] noise array through HBM on every update
+        key = jax.random.PRNGKey(0)
+        us_sr = time_jit(
+            jax.jit(lambda pl, xx, dd, kk: opa_fused_update(
+                pl, xx, dd, lr, fbits, spec, stochastic=True, key=kk,
+                rng_mode="counter", use_kernel=True, interpret=interpret
+            )),
+            planes, x, dh, key, iters=iters, warmup=warmup, stat="min",
+        )
+        try:
+            forbid_pallas_inputs(
+                lambda pl, xx, dd, kk: opa_fused_update(
+                    pl, xx, dd, lr, fbits, spec, stochastic=True, key=kk,
+                    rng_mode="counter", use_kernel=True, interpret=interpret),
+                planes, x, dh, key, forbidden=[((m, n), "float32")],
+            )
+            no_noise_grid = True
+        except AssertionError:
+            no_noise_grid = False
+        saved_sr = saved + 4 * m * n  # + the U[0,1) grid that no longer crosses
+        emit(f"kernels/opa_fused_sr_{m}x{n}_T{t}", us_sr,
+             f"hbm_bytes_saved_vs_unfused={saved_sr};no_hbm_crossing={no_noise_grid}")
+        results[f"opa_fused_sr_{m}x{n}_T{t}"] = {
+            "us": us_sr,
+            "hbm_bytes_saved_vs_unfused": saved_sr,
+            "no_hbm_crossing": no_noise_grid,
+        }
+        assert no_noise_grid, f"opa_fused_sr_{m}x{n}: noise grid crossed HBM"
+
     # ------------------------------ MVM ------------------------------------
     for m, n, b, io_bits, adc, transpose in _mvm_cases():
         q = jnp.asarray(rng.integers(-(2**26), 2**26, size=(m, n)), jnp.int32)
@@ -144,6 +194,62 @@ def main():
             "dots_per_tile_budget_S": spec.n_slices,
         }
         assert dots_packed <= spec.n_slices, (name, dots_packed)
+
+        # ----- quantize-fused entry (float activation straight in) ---------
+        xF = jnp.asarray(rng.normal(size=(b, contract)), jnp.float32)
+
+        def _dac_exp(a):
+            return choose_frac_bits(a, word_bits=io_bits, margin_bits=2,
+                                    clip_to_word=False)
+
+        us_unfused_total = time_jit(
+            jax.jit(lambda pl, a: mvm_sliced(
+                pl, quantize(a, _dac_exp(a), word_bits=io_bits), spec,
+                use_kernel=False, **kw)),
+            planes, xF, iters=iters, warmup=warmup, stat="min",
+        )
+        us_fused_ref = time_jit(
+            jax.jit(lambda pl, a: mvm_sliced_fused(
+                pl, a, _dac_exp(a), spec, use_kernel=False, **kw)),
+            planes, xF, iters=iters, warmup=warmup, stat="min",
+        )
+        us_fused_kernel = time_jit(
+            jax.jit(lambda pl, a: mvm_sliced_fused(
+                pl, a, _dac_exp(a), spec, use_kernel=True, interpret=interpret,
+                **kw)),
+            planes, xF, iters=iters, warmup=warmup, stat="min",
+        )
+        # jaxpr audit: nothing quantized at the pallas boundary on the fused
+        # path (the unfused row above is the 'before' that DOES ship x_q)
+        try:
+            forbid_pallas_inputs(
+                lambda pl, a, f: mvm_sliced_fused(
+                    pl, a, f, spec, use_kernel=True, interpret=interpret, **kw),
+                planes, xF, jnp.int32(11),
+                forbidden=[
+                    ((b, contract), "int32"),
+                    ((io_bits - 1, b, contract), "int32"),
+                    ((io_bits - 1, b, contract), "float32"),
+                ],
+            )
+            no_crossing = True
+        except AssertionError:
+            no_crossing = False
+        speedup = us_unfused_total / max(us_fused_ref, 1e-9)
+        emit(
+            f"kernels/{name}_fused", us_fused_ref,
+            f"unfused_total_us={us_unfused_total:.2f};"
+            f"fused_speedup={speedup:.2f}x;kernel_us={us_fused_kernel:.2f};"
+            f"no_hbm_crossing={no_crossing}",
+        )
+        results[name].update({
+            "us_fused_ref": us_fused_ref,
+            "us_unfused_ref_total": us_unfused_total,
+            "fused_speedup_vs_unfused": speedup,
+            "us_fused_kernel": us_fused_kernel,
+            "no_hbm_crossing": no_crossing,
+        })
+        assert no_crossing, f"{name}: quantized operand crossed the kernel boundary"
 
     # --------------------- token-batched entry (training shape) -------------
     # The fidelity training mode flattens [B, S, M] activations through

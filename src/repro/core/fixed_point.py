@@ -58,6 +58,92 @@ def choose_frac_bits(
     return jnp.clip(f, -64, 64).astype(jnp.int32)
 
 
+# ------------------- counter-based stochastic-rounding noise -----------------
+# The U[0, 1) draw for stochastic rounding is generated from a stateless
+# integer hash of (row, col) element coordinates plus two key words — NOT from
+# jax.random's array-shaped traversal. This makes the draw a pure function of
+# the *global* element position, so a Pallas kernel computing noise for one
+# VMEM block from broadcasted iotas produces bit-identical values to the jnp
+# reference on the whole array, for any block size. All arithmetic is int32
+# (two's-complement wrapping multiplies == uint32 mults; logical shifts), so
+# the same expression runs unchanged inside a TPU kernel body.
+
+_FMIX_C1 = -2048144789  # 0x85ebca6b as int32
+_FMIX_C2 = -1028477387  # 0xc2b2ae35 as int32
+_GOLDEN = -1640531527  # 0x9e3779b9 as int32
+
+# float factor mapping the top 24 hash bits onto [0, 1): u = (h >>> 8) * 2^-24
+_U24 = float(2.0**-24)
+
+
+def _fmix32(h: jax.Array) -> jax.Array:
+    """murmur3 finalizer: full-avalanche mix of an int32 word."""
+    h = h ^ jax.lax.shift_right_logical(h, 16)
+    h = h * jnp.int32(_FMIX_C1)
+    h = h ^ jax.lax.shift_right_logical(h, 13)
+    h = h * jnp.int32(_FMIX_C2)
+    h = h ^ jax.lax.shift_right_logical(h, 16)
+    return h
+
+
+def counter_key_scalars(key: jax.Array) -> jax.Array:
+    """Two int32 key words from a JAX PRNG key — the scalars a kernel launch
+    prefetches into SMEM. Accepts raw ``uint32[2]`` keys (``PRNGKey``) and
+    typed keys (``jax.random.key``)."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    kd = jax.lax.bitcast_convert_type(key.astype(jnp.uint32), jnp.int32)
+    return kd.reshape(-1)[:2]
+
+
+def counter_u01(r: jax.Array, c: jax.Array, k0: jax.Array, k1: jax.Array) -> jax.Array:
+    """U[0, 1) f32 noise for elements at (row ``r``, col ``c``) under key
+    words ``(k0, k1)``. Pure int32 counter hash — identical inside a Pallas
+    kernel body (iota coordinates) and in jnp (meshgrid coordinates)."""
+    r = r.astype(jnp.int32)
+    c = c.astype(jnp.int32)
+    h = (r * jnp.int32(_GOLDEN)) ^ (c * jnp.int32(_FMIX_C2)) ^ k0
+    h = _fmix32(h ^ k1)
+    return jax.lax.shift_right_logical(h, 8).astype(jnp.float32) * jnp.float32(_U24)
+
+
+def counter_uniform(key: jax.Array, shape: tuple) -> jax.Array:
+    """Counter-mode U[0, 1) array of ``shape``: the trailing two dims are the
+    (row, col) element grid; each leading (layer-stack) index gets its own
+    ``fold_in(key, l)`` subkey — the SAME per-layer derivation the stacked
+    operand kernel launch uses, so the dense-grad quantize draw stays
+    bit-compatible with the fused OPA kernel draw for a given leaf key.
+    Rank < 2 shapes are treated as one row."""
+    gs = shape[-2:] if len(shape) >= 2 else (1,) + tuple(shape)
+    r = jax.lax.broadcasted_iota(jnp.int32, gs, 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, gs, 1)
+    lead = shape[:-2] if len(shape) >= 2 else ()
+    L = 1
+    for d in lead:
+        L *= d
+    if not lead:
+        ks = counter_key_scalars(key)
+        u = counter_u01(r, c, ks[0], ks[1])
+        return u.reshape(shape)
+    keys = jax.vmap(lambda l: counter_key_scalars(jax.random.fold_in(key, l)))(
+        jnp.arange(L)
+    )  # [L, 2]
+    u = jax.vmap(lambda ks: counter_u01(r, c, ks[0], ks[1]))(keys)
+    return u.reshape(shape)
+
+
+def rounding_noise(key: jax.Array, shape: tuple, rng_mode: str = "counter") -> jax.Array:
+    """The U[0, 1) stochastic-rounding draw for ``shape`` under ``rng_mode``:
+    ``"counter"`` (stateless coordinate hash, kernel-reproducible) or
+    ``"grid"`` (legacy ``jax.random.uniform`` array traversal — the PR 1-5
+    draw, kept so old checkpoints replay bit-identically)."""
+    if rng_mode == "counter":
+        return counter_uniform(key, shape)
+    if rng_mode == "grid":
+        return jax.random.uniform(key, shape, jnp.float32)
+    raise ValueError(f"unknown rng_mode {rng_mode!r} (expected 'counter' or 'grid')")
+
+
 def quantize(
     x: jax.Array,
     frac_bits: jax.Array | int,
@@ -65,20 +151,22 @@ def quantize(
     *,
     stochastic: bool = False,
     key: jax.Array | None = None,
+    rng_mode: str = "counter",
 ) -> jax.Array:
     """Quantize float -> signed fixed point int32 with saturation.
 
     ``stochastic=True`` uses unbiased stochastic rounding (needs ``key``) —
     important for the tiny learning-rate-scaled gradient updates that would
-    otherwise deterministically round to zero.
+    otherwise deterministically round to zero. ``rng_mode`` selects the noise
+    source (see :func:`rounding_noise`); ``"counter"`` matches the in-kernel
+    draw of ``kernels.sliced_opa`` bit-for-bit.
     """
     scale = exp2i(frac_bits)
     y = x.astype(jnp.float32) * scale
     if stochastic:
         if key is None:
             raise ValueError("stochastic rounding requires a PRNG key")
-        noise = jax.random.uniform(key, y.shape, jnp.float32)
-        y = jnp.floor(y + noise)
+        y = jnp.floor(y + rounding_noise(key, y.shape, rng_mode))
     else:
         y = jnp.round(y)
     lim = float(2 ** (word_bits - 1) - 1)

@@ -119,25 +119,31 @@ def fidelity_read(
     anything with its fields); ``transpose`` selects ``adc_bits_bwd`` over
     ``adc_bits_fwd``.
 
-    The IO conversion is the paper's DAC/ADC boundary: ``x`` is quantized to
-    ``fid.io_bits`` fixed point with a per-call power-of-two scale (the DAC
-    range tracks the activation), the packed bit-plane engine computes the
-    integer product grid per 128-row crossbar tile, and the result is scaled
-    by ``2^-(x_frac + frac_bits)``. With ``adc_bits=None`` and both operands
-    exactly on their grids every step is exact in f32, so the read is
-    bit-identical to ``x @ dequantize(planes)`` (property-tested).
+    The IO conversion is the paper's DAC/ADC boundary — and it lives INSIDE
+    the read engine: only the DAC *exponent* is chosen here
+    (``choose_frac_bits`` needs the global ``max|x|``); the float activation
+    is handed straight to the quantize-fused entries of
+    ``kernels.sliced_mvm``, which perform the ``io_bits`` DAC quantize and
+    bit-plane extraction in the kernel prologue. No integer operand or
+    bit-plane array exists at the kernel boundary (jaxpr-asserted in tests).
+    The packed engine computes the integer product grid per 128-row crossbar
+    tile and the result is scaled by ``2^-(x_frac + frac_bits)``. With
+    ``adc_bits=None`` and both operands exactly on their grids every step is
+    exact in f32, so the read is bit-identical to ``x @ dequantize(planes)``
+    (property-tested).
 
     Mesh lowering: inside a ``distributed.fidelity.use_sharded_fidelity``
     scope (the trainer/server activates one when built with a mesh) the
-    integer read dispatches to ``kernels.sliced_mvm.mvm_sliced_sharded`` —
+    fused read dispatches to ``kernels.sliced_mvm.mvm_sliced_sharded`` —
     tokens shard over the data axes, crossbar tile blocks over 'model' per
     ``fid.shard_dim``, with the contraction-side partials psum-reduced
-    exactly. The DAC scale stays *global*: ``choose_frac_bits``/``quantize``
-    run before the shard_map, so every shard quantizes against the same
-    activation range and the sharded read equals the single-host one.
+    exactly. The DAC scale stays *global*: ``choose_frac_bits`` runs before
+    the shard_map and the exponent enters replicated, so every shard
+    quantizes against the same activation range and the sharded read equals
+    the single-host one.
     """
     from repro.kernels.sliced_mvm import (  # lazy: kernels import core
-        mvm_sliced_batched,
+        mvm_sliced_fused_batched,
         mvm_sliced_sharded,
     )
 
@@ -147,7 +153,6 @@ def fidelity_read(
     # io_bits of resolution instead of pinning at F = io_bits - 1
     xf = choose_frac_bits(x, word_bits=fid.io_bits, margin_bits=fid.margin_bits,
                           clip_to_word=False)
-    xq = quantize(x, xf, word_bits=fid.io_bits)
     ctx = None
     if planes.ndim == 3:  # per-layer planes only (no stacked layer dims)
         from repro.distributed.fidelity import active as _active_shard_ctx
@@ -155,14 +160,14 @@ def fidelity_read(
         ctx = _active_shard_ctx()
     if ctx is not None:
         acc = mvm_sliced_sharded(
-            planes, xq, fid.spec, mesh=ctx.mesh, data_axes=ctx.data_axes,
+            planes, x, fid.spec, mesh=ctx.mesh, data_axes=ctx.data_axes,
             model_axis=ctx.model_axis, shard_dim=fid.shard_dim,
             io_bits=fid.io_bits, adc_bits=adc_bits, transpose=transpose,
-            use_kernel=fid.use_kernel, interpret=fid.interpret,
+            use_kernel=fid.use_kernel, interpret=fid.interpret, frac_bits=xf,
         )
     else:
-        acc = mvm_sliced_batched(
-            planes, xq, fid.spec, io_bits=fid.io_bits, adc_bits=adc_bits,
+        acc = mvm_sliced_fused_batched(
+            planes, x, xf, fid.spec, io_bits=fid.io_bits, adc_bits=adc_bits,
             transpose=transpose, use_kernel=fid.use_kernel, interpret=fid.interpret,
         )
     return acc * exp2i(-(xf + jnp.asarray(frac_bits, jnp.int32)))

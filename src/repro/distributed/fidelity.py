@@ -14,6 +14,13 @@ data-parallel axes, crossbar tile blocks over 'model' per the leaf's
 entry. No context (the default) keeps every existing call path byte-
 identical.
 
+The sharded entry is quantize-FUSED: the FLOAT activation shards over the
+mesh and each shard's kernel performs the DAC quantize/bit-plane extraction
+locally in VMEM. Only the scalar DAC exponent (chosen globally by
+``fidelity_read`` before the shard_map, so every shard sees the same range)
+enters replicated — no quantized operand or bit-plane array exists at the
+shard_map or pallas_call boundary.
+
 The context is trace-time state, not run-time state: it only selects which
 jaxpr is built. A jitted step traced under a context keeps its sharded
 lowering forever; re-tracing without one falls back to single-host.

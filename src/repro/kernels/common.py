@@ -1,6 +1,7 @@
 """Shared kernel utilities."""
 from __future__ import annotations
 
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 
@@ -30,3 +31,52 @@ def pick_block(dim: int, pref: int, granule: int = 128) -> int:
         if dim % cand == 0:
             return cand
     return dim
+
+
+def _walk_pallas_inputs(jaxpr, out):
+    """Collect the input avals of every ``pallas_call`` in ``jaxpr``,
+    recursing through call/control-flow sub-jaxprs but NOT into the pallas
+    kernels themselves (the boundary is what we audit)."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            out.extend(v.aval for v in eqn.invars)
+            continue
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (list, tuple)) else (val,)
+            for v in vals:
+                if isinstance(v, jax.core.ClosedJaxpr):
+                    _walk_pallas_inputs(v.jaxpr, out)
+                elif isinstance(v, jax.core.Jaxpr):
+                    _walk_pallas_inputs(v, out)
+    return out
+
+
+def pallas_input_avals(fn, *args, **kwargs):
+    """Abstract-eval ``fn`` and return the list of avals crossing INTO any
+    ``pallas_call`` it traces to (HBM-side kernel operands). The audit tool
+    behind the no-quantized-operand-crosses-HBM contract of the fused
+    DAC/RNG boundary."""
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+    return _walk_pallas_inputs(jaxpr.jaxpr, [])
+
+
+def forbid_pallas_inputs(fn, *args, forbidden, **kwargs):
+    """Assert no pallas_call operand of ``fn(*args, **kwargs)`` matches a
+    ``(shape, dtype)`` pair in ``forbidden``, e.g. ``((16, 1024), "int32")``.
+    Raises AssertionError listing the offending avals; returns the audited
+    aval list on success. Used by tests and the bench gate to prove the
+    DAC/RNG fusion: quantized operands, bit planes, and noise grids must not
+    exist at the kernel boundary."""
+    import numpy as np
+
+    bad = []
+    avals = pallas_input_avals(fn, *args, **kwargs)
+    norm = {(tuple(s), np.dtype(d).name) for s, d in forbidden}
+    for a in avals:
+        if (tuple(getattr(a, "shape", ())), np.dtype(getattr(a, "dtype", None)).name) in norm:
+            bad.append(a)
+    assert not bad, (
+        "forbidden array(s) cross the pallas_call boundary (HBM): "
+        + ", ".join(str(a) for a in bad)
+    )
+    return avals

@@ -33,6 +33,25 @@ driven from the columns. The contraction runs over 128-column tiles of the
 logical matrix with the identical packed schedule (the ADC full scale stays
 ``128·plane_max`` — square crossbars).
 
+**Quantize-fused entry** (``mvm_sliced_fused``): the DAC boundary lives
+inside the kernel. The float activation block is the only operand that
+crosses HBM; the tile prologue (``_dac_block``) performs the ``io_bits``
+round/saturate onto the ``2^-frac_bits`` grid — the exact arithmetic of
+``core.fixed_point.quantize``, with the scale built by the same ``exp2i``
+bitcast so fused and unfused integer grids are bit-identical — and the
+bit-plane extraction happens per tile in VMEM. ``frac_bits`` enters as a
+scalar through SMEM. No ``x_q``-shaped or ``[T, B, M]`` plane array exists
+at the pallas_call boundary (jaxpr-audited by
+``kernels.common.forbid_pallas_inputs`` in tests and the bench gate).
+
+**Double-buffered tile DMA** (``double_buffer=True``, the default fused
+lowering): the grid drops to 2-D (batch, out) and the crossbar-tile loop
+runs inside the kernel — digit planes stay in HBM/ANY and each 128-row tile
+block is DMA'd into one of two VMEM slots while the MXU contracts the other
+(start slot ``k+1`` before waiting on slot ``k``; one DMA semaphore per
+slot). ``double_buffer=False`` keeps the 3-D grid lowering for equivalence
+tests; both compute identical numbers (same per-tile body, same k order).
+
 This kernel is the fidelity path (and the Fig-9/10 engine); production
 training uses the lossless dequantize->MXU fast path, which equals this
 kernel at adc_bits=None (asserted in tests).
@@ -46,6 +65,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.fixed_point import exp2i
 from repro.core.mvm import _adc
 from repro.core.slicing import LOGICAL_BITS, SliceSpec
 from repro.kernels.common import pick_block, tpu_compiler_params
@@ -53,6 +73,16 @@ from repro.kernels.common import pick_block, tpu_compiler_params
 XBAR_ROWS = 128
 DEFAULT_BB = 8
 DEFAULT_BN = 256
+
+
+def _dac_block(x, frac_bits, io_bits: int):
+    """In-kernel DAC prologue: float block -> int32 on the ``2^-frac_bits``
+    grid, saturated to ``io_bits`` signed — the exact arithmetic of
+    ``core.fixed_point.quantize`` (``exp2i`` is a pure bitcast, so the scale
+    is the identical power of two in-kernel and out)."""
+    lim = float(2 ** (io_bits - 1) - 1)
+    y = jnp.round(x.astype(jnp.float32) * exp2i(frac_bits))
+    return jnp.clip(y, -lim, lim).astype(jnp.int32)
 
 
 def _tile_compute(xq, w, *, spec: SliceSpec, io_bits: int, adc_bits: int | None,
@@ -194,3 +224,165 @@ def mvm_sliced(
         interpret=interpret,
         name="panther_mvm_sliced_t" if transpose else "panther_mvm_sliced",
     )(x_q, planes)
+
+
+def _mvm_fused_kernel(f_ref, x_ref, planes_ref, out_ref, acc_ref, *, spec,
+                      io_bits, adc_bits, nk, transpose):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # DAC quantize fused into the tile prologue: the float activation block
+    # is the only operand that crossed HBM.
+    xq = _dac_block(x_ref[...], f_ref[0, 0], io_bits)
+    acc_ref[...] += _tile_compute(
+        xq, planes_ref[...],
+        spec=spec, io_bits=io_bits, adc_bits=adc_bits, transpose=transpose,
+    )
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        out_ref[...] = acc_ref[...]
+
+
+def _mvm_fused_db_kernel(f_ref, x_ref, planes_ref, out_ref, wtile_ref, sem,
+                         *, spec, io_bits, adc_bits, nk, bn, transpose):
+    """Double-buffered lowering: 2-D grid (batch, out) — the crossbar-tile
+    loop runs *inside* the kernel over the full input strip, with the next
+    tile's digit planes DMA'd from HBM/ANY into the spare VMEM slot while the
+    MXU contracts the current one."""
+    j = pl.program_id(1)  # program ids must be read at kernel top level
+    # whole strip quantized once per block (bb x contract int32 in VMEM)
+    xq = _dac_block(x_ref[...], f_ref[0, 0], io_bits)
+    bb = xq.shape[0]
+
+    def tile_copy(slot, kk):
+        # identical descriptor for start and wait (same src/dst/sem triplet)
+        if transpose:
+            src = planes_ref.at[:, pl.ds(j * bn, bn), pl.ds(kk * XBAR_ROWS, XBAR_ROWS)]
+        else:
+            src = planes_ref.at[:, pl.ds(kk * XBAR_ROWS, XBAR_ROWS), pl.ds(j * bn, bn)]
+        return pltpu.make_async_copy(src, wtile_ref.at[slot], sem.at[slot])
+
+    tile_copy(0, 0).start()
+
+    def body(k, acc):
+        slot = jax.lax.rem(k, 2)
+
+        @pl.when(k + 1 < nk)
+        def _prefetch():
+            tile_copy(jax.lax.rem(k + 1, 2), k + 1).start()
+
+        tile_copy(slot, k).wait()
+        xq_k = jax.lax.dynamic_slice(xq, (0, k * XBAR_ROWS), (bb, XBAR_ROWS))
+        return acc + _tile_compute(
+            xq_k, wtile_ref[slot],
+            spec=spec, io_bits=io_bits, adc_bits=adc_bits, transpose=transpose,
+        )
+
+    out_ref[...] = jax.lax.fori_loop(
+        0, nk, body, jnp.zeros(out_ref.shape, jnp.float32)
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "spec", "io_bits", "adc_bits", "bb", "bn", "interpret", "transpose",
+        "double_buffer",
+    ),
+)
+def mvm_sliced_fused(
+    planes: jax.Array,
+    x: jax.Array,
+    frac_bits: jax.Array,
+    *,
+    spec: SliceSpec,
+    io_bits: int = 16,
+    adc_bits: int | None = None,
+    bb: int = DEFAULT_BB,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+    transpose: bool = False,
+    double_buffer: bool = True,
+) -> jax.Array:
+    """Quantize-fused sliced MVM: planes int8 [S,M,N]; x FLOAT [B,M]
+    ([B,N] when ``transpose``); frac_bits int32 scalar DAC exponent ->
+    f32 [B,N] ([B,M]) on the product grid.
+
+    The DAC boundary lives inside the kernel: the float activation crosses
+    HBM once and is quantized/bit-planed per tile in VMEM — no int operand
+    or bit-plane array exists at the pallas_call boundary (jaxpr-asserted
+    in tests). ``double_buffer=True`` selects the in-kernel crossbar-tile
+    loop with 2-slot DMA prefetch of the digit planes; ``False`` keeps the
+    3-D grid of ``mvm_sliced`` (used for equivalence testing and as the
+    conservative fallback).
+    """
+    S, M, N = planes.shape
+    B = x.shape[0]
+    contract, out_dim = (N, M) if transpose else (M, N)
+    assert x.shape == (B, contract)
+    assert contract % XBAR_ROWS == 0, (
+        f"contraction dim {contract} must be a multiple of crossbar rows ({XBAR_ROWS})"
+    )
+    bb, bn = pick_block(B, bb, granule=8), pick_block(out_dim, bn)
+    nk = contract // XBAR_ROWS
+    f_spec = pl.BlockSpec(
+        (1, 1), (lambda i, j: (0, 0)) if double_buffer else (lambda i, j, k: (0, 0)),
+        memory_space=pltpu.SMEM,
+    )
+    f_arg = jnp.asarray(frac_bits, jnp.int32).reshape(1, 1)
+    name = "panther_mvm_fused_t" if transpose else "panther_mvm_fused"
+
+    if double_buffer:
+        wshape = (2, S, bn, XBAR_ROWS) if transpose else (2, S, XBAR_ROWS, bn)
+        return pl.pallas_call(
+            functools.partial(
+                _mvm_fused_db_kernel, spec=spec, io_bits=io_bits,
+                adc_bits=adc_bits, nk=nk, bn=bn, transpose=transpose,
+            ),
+            grid=(B // bb, out_dim // bn),
+            in_specs=[
+                f_spec,
+                pl.BlockSpec((bb, contract), lambda i, j: (i, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),  # full planes, DMA'd per tile
+            ],
+            out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+            scratch_shapes=[
+                pltpu.VMEM(wshape, jnp.int8),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+            out_shape=jax.ShapeDtypeStruct((B, out_dim), jnp.float32),
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel"),
+            ),
+            interpret=interpret,
+            name=name + "_db",
+        )(f_arg, x.astype(jnp.float32), planes)
+
+    if transpose:
+        plane_spec = pl.BlockSpec((S, bn, XBAR_ROWS), lambda i, j, k: (0, j, k))
+    else:
+        plane_spec = pl.BlockSpec((S, XBAR_ROWS, bn), lambda i, j, k: (0, k, j))
+    return pl.pallas_call(
+        functools.partial(
+            _mvm_fused_kernel, spec=spec, io_bits=io_bits, adc_bits=adc_bits,
+            nk=nk, transpose=transpose,
+        ),
+        grid=(B // bb, out_dim // bn, nk),
+        in_specs=[
+            f_spec,
+            pl.BlockSpec((bb, XBAR_ROWS), lambda i, j, k: (i, k)),
+            plane_spec,
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j, k: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bb, bn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((B, out_dim), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name=name,
+    )(f_arg, x.astype(jnp.float32), planes)

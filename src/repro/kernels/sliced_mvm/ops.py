@@ -14,6 +14,15 @@ rides the kernel's batch grid, so every crossbar tile still issues one
 ``dot_general`` per bit-block — vmapping the vector entry over tokens would
 shatter that operand back into per-token matmuls (the seed's 6%-MXU shape).
 
+``mvm_sliced_fused`` / ``mvm_sliced_fused_batched`` are the quantize-fused
+entries ``core.mvm.fidelity_read`` dispatches to: they take the FLOAT
+activation plus the scalar DAC exponent and perform the ``io_bits``
+round/saturate and bit-plane extraction inside the kernel (or inside the
+jitted reference on the fallback path) — no quantized operand or bit-plane
+array crosses the HBM boundary. Bit-identical to quantize → ``mvm_sliced``
+composition (tested); the kernel path defaults to the double-buffered tile
+DMA lowering (see ``kernel.py``).
+
 ``mvm_sliced_sharded`` is the mesh lowering of the batched entry: a
 shard_map whose token axis shards over the data-parallel axes and whose
 crossbar row/column tile blocks shard over the tensor-parallel 'model' axis,
@@ -66,6 +75,81 @@ def mvm_sliced(
         planes, x_q, spec=spec, io_bits=io_bits, adc_bits=adc_bits,
         interpret=interpret, transpose=transpose,
     )
+
+
+def mvm_sliced_fused(
+    planes,
+    x,
+    frac_bits,
+    spec: SliceSpec,
+    *,
+    io_bits: int = 16,
+    adc_bits: int | None = None,
+    transpose: bool = False,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    double_buffer: bool | None = None,
+):
+    """Quantize-fused vector entry: ``x`` FLOAT [B, M] ([B, N] when
+    ``transpose``) plus the int32 DAC exponent ``frac_bits`` -> f32 on the
+    product grid. The ``io_bits`` DAC quantize and bit-plane extraction
+    happen inside the kernel (or inside the fused reference) — callers never
+    materialise the integer operand. ``double_buffer`` picks the in-kernel
+    crossbar-tile loop with 2-slot DMA prefetch (default on the kernel path);
+    ``False`` keeps the 3-D grid for equivalence testing.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel is None:
+        use_kernel = on_tpu
+    if interpret is None:
+        interpret = not on_tpu
+    contract = planes.shape[2] if transpose else planes.shape[1]
+    if not use_kernel or contract % _k.XBAR_ROWS != 0:
+        return _ref.mvm_sliced_fused_ref(
+            planes, x, jnp.asarray(frac_bits, jnp.int32), spec, io_bits,
+            adc_bits, transpose=transpose,
+        )
+    return _k.mvm_sliced_fused(
+        planes, x, frac_bits, spec=spec, io_bits=io_bits, adc_bits=adc_bits,
+        interpret=interpret, transpose=transpose,
+        double_buffer=True if double_buffer is None else double_buffer,
+    )
+
+
+def mvm_sliced_fused_batched(
+    planes,
+    x,
+    frac_bits,
+    spec: SliceSpec,
+    *,
+    io_bits: int = 16,
+    adc_bits: int | None = None,
+    transpose: bool = False,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    double_buffer: bool | None = None,
+):
+    """Token-batched quantize-fused read: FLOAT ``x`` [..., M] ([..., N] when
+    ``transpose``), arbitrary leading dims flattened into one token axis (see
+    ``mvm_sliced_batched``). Zero padding rows quantize to zero (round(0)=0)
+    ⇒ all-zero bit planes, so padding stays value-inert on the fused path too.
+    """
+    contract = planes.shape[2] if transpose else planes.shape[1]
+    lead = x.shape[:-1]
+    assert x.shape[-1] == contract, (x.shape, planes.shape, transpose)
+    x2 = x.reshape(-1, contract)
+    t = x2.shape[0]
+    pad = (-t) % BATCH_GRANULE
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = mvm_sliced_fused(
+        planes, x2, frac_bits, spec, io_bits=io_bits, adc_bits=adc_bits,
+        transpose=transpose, use_kernel=use_kernel, interpret=interpret,
+        double_buffer=double_buffer,
+    )
+    if pad:
+        out = out[:t]
+    return out.reshape(*lead, out.shape[-1])
 
 
 def mvm_sliced_batched(
@@ -123,11 +207,18 @@ def mvm_sliced_sharded(
     transpose: bool = False,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
+    frac_bits=None,
 ):
     """Mesh-sharded token-batched sliced MVM / MᵀVM (module docstring).
 
     ``planes`` int8 [S, M, N] (one layer's digit planes — no stack dims);
-    ``x_q`` int [..., M] ([..., N] when ``transpose``). ``data_axes`` are the
+    ``x_q`` int [..., M] ([..., N] when ``transpose``). With
+    ``frac_bits`` (int32 scalar DAC exponent) the entry is the quantize-FUSED
+    read: ``x_q`` is then the FLOAT activation and every shard runs the fused
+    kernel locally. The exponent itself was chosen *globally* by the caller
+    (``choose_frac_bits`` before the shard_map) and enters replicated, so
+    each shard quantizes against the same DAC range and the sharded fused
+    read equals the single-host one. ``data_axes`` are the
     mesh axes the flattened token axis shards over; ``model_axis`` names the
     tensor-parallel axis and ``shard_dim`` which matrix dim of the dense
     ``[M, N]`` weight it carries (``FidelityConfig.shard_dim``: 0 = rows,
@@ -164,6 +255,11 @@ def mvm_sliced_sharded(
             sd = None
     if not dp and sd is None:
         # 1-device (or unusable) mesh: the plain batched entry IS the lowering
+        if frac_bits is not None:
+            return mvm_sliced_fused_batched(
+                planes, x_q, frac_bits, spec, io_bits=io_bits, adc_bits=adc_bits,
+                transpose=transpose, use_kernel=use_kernel, interpret=interpret,
+            )
         return mvm_sliced_batched(
             planes, x_q, spec, io_bits=io_bits, adc_bits=adc_bits,
             transpose=transpose, use_kernel=use_kernel, interpret=interpret,
@@ -190,27 +286,37 @@ def mvm_sliced_sharded(
     if sd is not None:
         w_spec[1 + sd] = maxis
 
-    def local(planes_l, x_l):
-        acc = mvm_sliced(
-            planes_l, x_l, spec, io_bits=io_bits, adc_bits=adc_bits,
-            transpose=transpose, use_kernel=use_kernel, interpret=interpret,
-        )
+    def local(planes_l, x_l, f_l):
+        if frac_bits is not None:
+            acc = mvm_sliced_fused(
+                planes_l, x_l, f_l, spec, io_bits=io_bits, adc_bits=adc_bits,
+                transpose=transpose, use_kernel=use_kernel, interpret=interpret,
+            )
+        else:
+            acc = mvm_sliced(
+                planes_l, x_l, spec, io_bits=io_bits, adc_bits=adc_bits,
+                transpose=transpose, use_kernel=use_kernel, interpret=interpret,
+            )
         if contract_sharded:
             from repro.distributed.collectives import tile_psum  # lazy: no cycle
 
             acc = tile_psum(acc, maxis)
         return acc
 
+    # the DAC exponent rides along replicated (P()); a dummy zero keeps the
+    # shard_map signature static on the unfused path
+    f_arg = jnp.asarray(0 if frac_bits is None else frac_bits, jnp.int32)
     out = shard_map(
         local,
         mesh=mesh,
         in_specs=(
             P(*w_spec),
             P(dp_entry, maxis if contract_sharded else None),
+            P(),
         ),
         out_specs=P(dp_entry, maxis if out_sharded else None),
         check_rep=False,
-    )(planes, x2)
+    )(planes, x2, f_arg)
     if pad:
         out = out[:t]
     return out.reshape(*lead, out.shape[-1])

@@ -5,7 +5,7 @@ into 128-row tiles; each tile's analog column sum passes through its own ADC
 (per slice, per input-bit cycle) before the digital shift-and-add combines
 bits, slices, and row-tiles.
 
-Two implementations:
+Three implementations:
 
 ``mvm_sliced_ref``    — the bit-plane packed schedule (mirrors the Pallas
                         kernel): the ``io_bits-1`` sign·magnitude planes of
@@ -14,6 +14,24 @@ Two implementations:
                         applies elementwise on the ``[T, B, S, bn]`` block,
                         and the shift-and-add is a single contraction with
                         the static ``2^t·16^s`` grid.
+
+``mvm_sliced_fused_ref`` — the quantize-fused entry: takes FLOAT activations
+                        plus the DAC exponent and performs the
+                        ``io_bits``-bit DAC quantize in the prologue (the
+                        exact ``core.fixed_point.quantize`` arithmetic, so
+                        the integer product grid is bit-identical to the
+                        unfused composition). The finite-ADC schedule is
+                        additionally restructured for locality: the digit
+                        planes are prescaled by the inverse ADC step once,
+                        the per-tile contraction keeps its natural
+                        ``[T, B, S, bn]`` layout, the ADC reduces to a fused
+                        round+clip producing integer codes, and the digital
+                        shift-and-add becomes a leading-axis bit fold + a
+                        per-slice fold with the step folded back into the
+                        static weights — no 4-D transpose, no separate
+                        divide pass. Same numbers up to f32 reassociation
+                        (exact at ``adc_bits=None``, where the ideal branch
+                        is kept verbatim for bit-identity).
 
 ``mvm_sliced_looped`` — the seed's serial per-(slice, bit) schedule, kept as
                         the bit-exactness oracle for property tests (one tiny
@@ -27,10 +45,20 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.fixed_point import exp2i
 from repro.core.mvm import _adc, bit_planes, shift_add_scales
 from repro.core.slicing import LOGICAL_BITS, SliceSpec
 
 XBAR_ROWS = 128
+
+
+def dac_quantize(x, frac_bits, io_bits: int):
+    """The DAC prologue: float -> ``io_bits`` fixed point on the ``2^-F``
+    grid — the exact arithmetic of ``core.fixed_point.quantize`` (round,
+    saturate), inlined so fused entries produce bit-identical integers."""
+    lim = float(2 ** (io_bits - 1) - 1)
+    y = jnp.round(x.astype(jnp.float32) * exp2i(frac_bits))
+    return jnp.clip(y, -lim, lim).astype(jnp.int32)
 
 
 def mvm_sliced_ref(
@@ -75,6 +103,68 @@ def mvm_sliced_ref(
                        preferred_element_type=jnp.float32)
         y = _adc(y, full_scale[:, None], adc_bits)
         out = out + jnp.einsum("tbsn,ts->bn", y, scales)
+    return out
+
+
+def mvm_sliced_fused_ref(
+    planes,
+    x,
+    frac_bits,
+    spec: SliceSpec,
+    io_bits: int = 16,
+    adc_bits: int | None = None,
+    xbar_rows: int = XBAR_ROWS,
+    transpose: bool = False,
+):
+    """Quantize-fused packed MVM: planes int8 [S,M,N]; x FLOAT [B,M] ([B,N]
+    when ``transpose``); frac_bits int32 scalar DAC exponent -> f32 [B,N]
+    ([B,M]) on the product grid (caller applies ``2^-(xf+F)``).
+
+    The DAC quantize happens here — callers never materialise the int32
+    operand or its bit planes. At ``adc_bits=None`` the value is
+    bit-identical to ``mvm_sliced_ref(planes, dac_quantize(x, ...))``; at
+    finite ADC the restructured fold reassociates f32 sums (same analog
+    model, values within the kernel-vs-ref tolerance).
+    """
+    w = planes.astype(jnp.float32)
+    if transpose:
+        w = jnp.swapaxes(w, 1, 2)
+    S, M, N = w.shape
+    B = x.shape[0]
+    assert x.shape == (B, M)
+    x_q = dac_quantize(x, frac_bits, io_bits)
+    n_tiles = -(-M // xbar_rows)
+    out = jnp.zeros((B, N), jnp.float32)
+
+    if adc_bits is None:
+        # Kept verbatim from mvm_sliced_ref's ideal branch: fused and
+        # unfused entries are bit-identical here (property-tested).
+        xf = x_q.astype(jnp.float32)
+        s_scale = jnp.exp2(LOGICAL_BITS * jnp.arange(S, dtype=jnp.float32))
+        for tile in range(n_tiles):
+            lo, hi = tile * xbar_rows, min((tile + 1) * xbar_rows, M)
+            y = jnp.einsum("bm,smn->bsn", xf[:, lo:hi], w[:, lo:hi],
+                           preferred_element_type=jnp.float32)
+            out = out + jnp.einsum("bsn,s->bn", y, s_scale)
+        return out
+
+    T = io_bits - 1
+    bp = bit_planes(x_q, io_bits).astype(jnp.float32)  # [T, B, M]
+    full_scale = xbar_rows * jnp.asarray(spec.plane_max, jnp.float32)  # [S]
+    step = 2.0 * full_scale / float(2**adc_bits)
+    half = float(2 ** (adc_bits - 1))
+    # Prescale the planes by 1/step so the ADC is a bare round+clip to
+    # integer codes; step folds back into the per-slice shift-add weights.
+    w2 = w * (1.0 / step)[:, None, None]
+    tw = jnp.exp2(jnp.arange(T, dtype=jnp.float32))
+    sw = step * jnp.exp2(LOGICAL_BITS * jnp.arange(S, dtype=jnp.float32))
+    for tile in range(n_tiles):
+        lo, hi = tile * xbar_rows, min((tile + 1) * xbar_rows, M)
+        y = jnp.einsum("tbm,smn->tbsn", bp[:, :, lo:hi], w2[:, lo:hi],
+                       preferred_element_type=jnp.float32)
+        q = jnp.clip(jnp.round(y), -half, half)  # integer ADC codes
+        z = jnp.tensordot(tw, q, axes=([0], [0]))  # bit fold -> [B, S, n]
+        out = out + jnp.einsum("bsn,s->bn", z, sw)  # slice fold (step folded)
     return out
 
 

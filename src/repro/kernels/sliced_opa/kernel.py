@@ -14,6 +14,20 @@ Two entry points:
                    this is the memory-roofline win corresponding to the
                    paper's elimination of serial crossbar reads/writes.
 
+In-kernel stochastic rounding: with ``rkey`` set, the rounding noise is
+generated inside the kernel at GLOBAL element coordinates — each (i, j) grid
+tile derives its sub-window from ``program_id`` offsets, so the U[0, 1)
+value at logical element (r, c) is a pure function of (r, c) and the two
+int32 key words, independent of blocking. ``rng_impl="counter"`` uses the
+murmur3-fmix32 coordinate hash shared with ``core.fixed_point
+.counter_uniform`` (bit-identical to the jnp reference and to any block
+shape); ``rng_impl="hw"`` seeds the TPU hardware PRNG per tile from the key
+words mixed with the linear tile id (fastest; not coordinate-stable across
+blockings; TPU-only). The legacy ``noise`` grid input remains as the
+``rng_mode="grid"`` escape hatch for replaying PR1–5 runs — it ships an
+[M, N] f32 array through HBM on the hottest write path, which the keyed
+modes exist to eliminate (audited by ``kernels.common.forbid_pallas_inputs``).
+
 Blocking: planes are [S, bm, bn] per grid cell (S is a small leading dim —
 all slices of a tile co-reside in VMEM, like the S crossbars of one MCU).
 bm/bn default to 128/256: int8 native tile is (32, 128); f32 accumulate tile
@@ -93,14 +107,48 @@ def opa_deposit(
     )(p_q, planes)
 
 
+def _block_noise(rng: str, k0, k1, i, j, tid, block_shape):
+    """In-kernel U[0, 1) block for stochastic rounding at GLOBAL element
+    coordinates (program-id block offsets ``i``/``j`` + iotas), so the draw
+    is identical for any bm/bn blocking.
+
+    ``rng="counter"`` — the stateless int32 coordinate hash shared with
+    ``core.fixed_point.counter_uniform``: bit-identical to the jnp reference
+    (and the dense-pipeline ``quantize``) in compiled and interpret mode.
+
+    ``rng="hw"`` — the TPU hardware PRNG (``pltpu.prng_random_bits``), seeded
+    per (i, j) tile from the two prefetched key words mixed with the linear
+    tile id. Highest throughput on real hardware, but the bit stream is not
+    reproducible against the CPU reference (and the interpreter has no
+    lowering for it) — an opt-in for TPU runs that don't replay checkpoints.
+    """
+    from repro.core.fixed_point import _fmix32, _U24, counter_u01
+
+    bm, bn = block_shape
+    if rng == "counter":
+        r = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+        c = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+        return counter_u01(r, c, k0, k1)
+    assert rng == "hw", rng
+    pltpu.prng_seed(_fmix32(k0 ^ _fmix32(k1 ^ tid)))
+    bits = pltpu.prng_random_bits((bm, bn))
+    return jax.lax.shift_right_logical(bits, 8).astype(jnp.float32) * jnp.float32(_U24)
+
+
 def _opa_fused_kernel(
-    scale_ref, x_ref, dh_ref, planes_ref, *rest, spec: SliceSpec, nk: int, stochastic: bool
+    scale_ref, x_ref, dh_ref, planes_ref, *rest, spec: SliceSpec, nk: int, rng: str | None
 ):
-    if stochastic:
+    if rng == "grid":
         noise_ref, out_ref, acc_ref = rest
+    elif rng is not None:
+        key_ref, out_ref, acc_ref = rest
     else:
-        noise_ref = None
         out_ref, acc_ref = rest
+    # program ids are read at top level (the interpret-mode evaluator only
+    # substitutes them outside sub-jaxprs) and closed over by _finalize
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    tid = i * pl.num_programs(1) + j
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -119,18 +167,25 @@ def _opa_fused_kernel(
     def _finalize():
         lim = float(2**31 - 1)
         y = acc_ref[...] * scale_ref[0, 0]
-        if stochastic:
-            # unbiased stochastic rounding: floor(y + u), u ~ U[0, 1) fed as
-            # a grid input (matches core.fixed_point.quantize bit-for-bit;
-            # in-kernel pltpu.prng generation is the recorded follow-up)
+        if rng == "grid":
+            # legacy escape hatch: U[0, 1) fed as a grid-shaped HBM input
+            # (the PR 1-5 draw — kept so old checkpoints replay bit-exactly)
             y = jnp.floor(y + noise_ref[...])
+        elif rng is not None:
+            # unbiased stochastic rounding with the noise GENERATED IN-KERNEL
+            # from the two prefetched key words — no grid array crosses HBM
+            y = jnp.floor(
+                y + _block_noise(rng, key_ref[0, 0], key_ref[0, 1], i, j, tid, acc_ref.shape)
+            )
         else:
             y = jnp.round(y)
         p_q = jnp.clip(y, -lim, lim).astype(jnp.int32)
         out_ref[...] = _deposit(planes_ref[...].astype(jnp.int32), p_q, spec)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "bm", "bn", "bt", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("spec", "bm", "bn", "bt", "interpret", "rng_impl")
+)
 def opa_fused(
     planes: jax.Array,
     x: jax.Array,
@@ -143,18 +198,31 @@ def opa_fused(
     bt: int = DEFAULT_BT,
     interpret: bool = False,
     noise: jax.Array | None = None,
+    rkey: jax.Array | None = None,
+    rng_impl: str = "counter",
 ) -> jax.Array:
     """Fused ``planes <- deposit(planes, q(X^T dH * scale))``.
 
     planes int8 [S,M,N]; x [T,M]; dh [T,N] (``-lr`` folded by caller into
-    ``scale``); scale f32 scalar (±lr·2**F). ``noise`` f32 [M,N] in [0, 1)
-    switches the final quantization to unbiased stochastic rounding
-    (``floor(y + noise)``) — the gradient itself still never leaves VMEM.
+    ``scale``); scale f32 scalar (±lr·2**F). Stochastic rounding options:
+
+    * ``rkey`` int32 ``[2]`` key words — the noise is generated **inside the
+      kernel** at global element coordinates (``rng_impl="counter"``, the
+      reproducible coordinate hash; ``"hw"`` the TPU hardware PRNG). Only two
+      scalars cross into SMEM; neither the gradient nor any noise grid
+      touches HBM.
+    * ``noise`` f32 [M,N] in [0, 1) — legacy grid input (``rng_mode="grid"``
+      upstream), kept for bit-exact replay of PR 1-5 checkpoints.
     """
     S, M, N = planes.shape
     T = x.shape[0]
     assert x.shape == (T, M) and dh.shape == (T, N)
-    stochastic = noise is not None
+    assert noise is None or rkey is None, "pass a noise grid OR key words, not both"
+    rng = None
+    if noise is not None:
+        rng = "grid"
+    elif rkey is not None:
+        rng = rng_impl
     bm, bn, bt = pick_block(M, bm), pick_block(N, bn), pick_block(T, bt)
     nk = T // bt
     grid = (M // bm, N // bn, nk)
@@ -170,11 +238,16 @@ def opa_fused(
         dh.astype(jnp.float32),
         planes,
     ]
-    if stochastic:
+    if rng == "grid":
         in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)))
         args.append(noise.astype(jnp.float32))
+    elif rng is not None:
+        in_specs.append(
+            pl.BlockSpec((1, 2), lambda i, j, k: (0, 0), memory_space=pltpu.SMEM)
+        )
+        args.append(jnp.asarray(rkey, jnp.int32).reshape(1, 2))
     return pl.pallas_call(
-        functools.partial(_opa_fused_kernel, spec=spec, nk=nk, stochastic=stochastic),
+        functools.partial(_opa_fused_kernel, spec=spec, nk=nk, rng=rng),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((S, bm, bn), lambda i, j, k: (0, i, j)),

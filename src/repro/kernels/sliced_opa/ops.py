@@ -63,44 +63,69 @@ def opa_fused_update(
     *,
     stochastic: bool = False,
     key=None,
+    rng_mode: str = "counter",
     use_kernel: bool | None = None,
     interpret: bool | None = None,
 ):
     """The full PANTHER weight update from gradient *operands*.
 
     Semantically ``opa_deposit(planes, quantize(-lr * x^T@dh, frac_bits,
-    stochastic, key))`` — but on the kernel path the ``[M, N]`` gradient is
-    formed tile-by-tile in VMEM and deposited in the same pass, never
-    reaching HBM. ``-lr`` and the ``2**F`` weight grid fold into the kernel's
-    scalar scale; stochastic rounding feeds the same ``U[0,1)`` draw the
-    dense path uses (grid-shaped HBM read; in-kernel pltpu.prng is the
-    recorded follow-up).
+    stochastic, key, rng_mode))`` — but on the kernel path the ``[M, N]``
+    gradient is formed tile-by-tile in VMEM and deposited in the same pass,
+    never reaching HBM. ``-lr`` and the ``2**F`` weight grid fold into the
+    kernel's scalar scale.
+
+    ``rng_mode`` selects the stochastic-rounding noise source:
+
+    * ``"counter"`` (default) — the stateless coordinate hash. The kernel
+      generates the draw in VMEM from two prefetched key words; the jnp
+      reference (and the dense pipeline's ``quantize``) computes the same
+      bits, so all paths stay bit-compatible and nothing noise-shaped
+      crosses HBM.
+    * ``"grid"`` — legacy ``jax.random.uniform`` grid fed to the kernel as
+      an ``[M, N]`` HBM input: the PR 1-5 draw, kept (golden-tested) so old
+      checkpoints replay bit-identically.
+    * ``"hw"`` — the TPU hardware PRNG inside the kernel. Fastest on real
+      hardware; not bit-reproducible against the CPU reference (and
+      unavailable off-TPU), so it requires the kernel dispatch.
 
     Shapes: planes int8 ``[S, *stack, M, N]``; x ``[*stack, T, M]``;
     dh ``[*stack, T, N]``. Stacked (lax.scan layer-group) leaves run the
-    kernel per layer under a lax.scan; the stochastic draw uses the same
-    ``[*stack, M, N]`` shape/key as the dense path so both pipelines
-    consume identical noise.
+    kernel per layer under a lax.scan; layer ``l`` derives its key as
+    ``fold_in(key, l)`` — the same per-layer derivation
+    ``core.fixed_point.counter_uniform`` applies on the dense path, so both
+    pipelines consume identical noise for a given leaf key.
     """
     use_kernel, interpret = _resolve(use_kernel, interpret)
     if stochastic and key is None:
         raise ValueError("stochastic rounding requires a PRNG key")
     if not use_kernel:
+        if stochastic and rng_mode == "hw":
+            raise ValueError(
+                "rng_mode='hw' uses the TPU hardware PRNG and has no reference "
+                "path; use 'counter' (reproducible) off-TPU"
+            )
         return _ref.opa_fused_update_ref(
-            planes, x, dh, lr, frac_bits, spec, stochastic=stochastic, key=key
+            planes, x, dh, lr, frac_bits, spec,
+            stochastic=stochastic, key=key, rng_mode=rng_mode,
         )
 
     # exp2i: the 2^F grid scale must be the exact power of two the dense
     # pipeline's quantize() uses, or the fused/dense bit-compat breaks
-    from repro.core.fixed_point import exp2i
+    from repro.core.fixed_point import counter_key_scalars, exp2i
 
     scale = -jnp.asarray(lr, jnp.float32) * exp2i(frac_bits)
-    noise = None
-    if stochastic:
+    noise = rkey = None
+    if stochastic and rng_mode == "grid":
         noise = jax.random.uniform(key, planes.shape[1:], jnp.float32)
+    elif stochastic:
+        rkey = counter_key_scalars(key)
 
     if planes.ndim == 3:
-        return _k.opa_fused(planes, x, dh, scale, spec=spec, interpret=interpret, noise=noise)
+        return _k.opa_fused(
+            planes, x, dh, scale, spec=spec, interpret=interpret,
+            noise=noise, rkey=rkey, rng_impl=rng_mode if stochastic else "counter",
+        )
 
     # stacked leaf [S, *stack, M, N]: one kernel launch per stacked layer
     S = planes.shape[0]
@@ -113,14 +138,14 @@ def opa_fused_update(
     x_l = x.reshape(L, T, M)
     dh_l = dh.reshape(L, T, N)
 
-    if noise is None:
+    if noise is None and rkey is None:
 
         def body(_, args):
             p_i, x_i, dh_i = args
             return None, _k.opa_fused(p_i, x_i, dh_i, scale, spec=spec, interpret=interpret)
 
         _, out = jax.lax.scan(body, None, (p_l, x_l, dh_l))
-    else:
+    elif noise is not None:
         n_l = noise.reshape(L, M, N)
 
         def body_n(_, args):
@@ -130,4 +155,18 @@ def opa_fused_update(
             )
 
         _, out = jax.lax.scan(body_n, None, (p_l, x_l, dh_l, n_l))
+    else:
+        # per-layer key words [L, 2]: fold_in(key, l), as on the dense path
+        k_l = jax.vmap(
+            lambda l: counter_key_scalars(jax.random.fold_in(key, l))
+        )(jnp.arange(L))
+
+        def body_k(_, args):
+            p_i, x_i, dh_i, k_i = args
+            return None, _k.opa_fused(
+                p_i, x_i, dh_i, scale, spec=spec, interpret=interpret,
+                rkey=k_i, rng_impl=rng_mode,
+            )
+
+        _, out = jax.lax.scan(body_k, None, (p_l, x_l, dh_l, k_l))
     return jnp.moveaxis(out, 0, 1).reshape(planes.shape)

@@ -13,17 +13,20 @@ def opa_deposit_ref(planes, p_q, spec: SliceSpec):
 
 
 def opa_fused_update_ref(planes, x, dh, lr, frac_bits, spec: SliceSpec, *,
-                         stochastic: bool = False, key=None):
+                         stochastic: bool = False, key=None, rng_mode: str = "counter"):
     """Operand-form OPA update oracle: exact mirror of the dense pipeline.
 
     ``einsum(x, dh)`` in the operand dtype is the same contraction XLA's AD
     emits for ``x @ w`` on the dense-grad path, and ``quantize`` is the same
     call ``optim.panther`` makes there — so this oracle (and the CPU
     dispatch of ``opa_fused_update``) is bit-identical to dense-grad +
-    ``opa_deposit``, including the stochastic-rounding draw for a given key.
+    ``opa_deposit``, including the stochastic-rounding draw for a given
+    (key, rng_mode). With ``rng_mode="counter"`` the draw is additionally
+    bit-identical to the Pallas kernel's in-kernel generation.
     """
     g = jnp.einsum("...tm,...tn->...mn", x, dh)
-    upd = quantize(-lr * g.astype(jnp.float32), frac_bits, stochastic=stochastic, key=key)
+    upd = quantize(-lr * g.astype(jnp.float32), frac_bits,
+                   stochastic=stochastic, key=key, rng_mode=rng_mode)
     return opa_batched(planes, upd, spec)
 
 

@@ -59,6 +59,13 @@ class PantherConfig:
     variant: str = "v2"  # informational: v1 (SGD), v2 (mini-batch), v3 (large-batch)
     margin_bits: int = 2  # headroom when choosing the per-tensor scale
     compute_dtype: Any = jnp.float32
+    # Stochastic-rounding noise source, threaded identically to the dense
+    # quantize+deposit path and the fused operand kernel so the two pipelines
+    # stay bit-compatible: "counter" (default; stateless coordinate hash,
+    # generated in-kernel, bit-reproducible everywhere), "grid" (legacy PR 1-5
+    # U[0,1) HBM grid — old checkpoints replay bit-identically), "hw" (TPU
+    # hardware PRNG in-kernel; fastest, not replayable off-TPU).
+    rng_mode: str = "counter"
     # OPA kernel dispatch override (None = auto: Pallas on TPU, jnp ref on
     # CPU). Tests force (True, True) to run the fused kernel in interpret
     # mode; the ref path is bit-identical to dense-grad + opa_deposit.
@@ -312,16 +319,19 @@ def update(
             # operand path: X^T@dH -> quantize -> deposit in one fused pass
             planes = opa_fused_update(
                 s.planes, g_eff.x, g_eff.dh, lr, s.frac_bits, spec,
-                stochastic=cfg.stochastic_round, key=key,
+                stochastic=cfg.stochastic_round, key=key, rng_mode=cfg.rng_mode,
                 use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
             )
         else:
-            # dense path: quantize -lr*g onto the weight grid, deposit.
+            # dense path: quantize -lr*g onto the weight grid, deposit. The
+            # "hw" draw exists only inside the fused kernel; dense leaves
+            # then take the (equally in-kernel-generatable) counter draw.
             upd = quantize(
                 -lr * g_eff.astype(jnp.float32),
                 s.frac_bits,
                 stochastic=cfg.stochastic_round,
                 key=key,
+                rng_mode=cfg.rng_mode if cfg.rng_mode != "hw" else "counter",
             )
             planes = opa_deposit(
                 s.planes, upd, spec,
@@ -423,11 +433,15 @@ def update_split(grads, digital, sliced, step, lr, cfg: PantherConfig = PantherC
         if is_outer_product_grad(g):
             planes = opa_fused_update(
                 s.planes, g.x, g.dh, lr, s.frac_bits, spec,
-                stochastic=cfg.stochastic_round, key=key,
+                stochastic=cfg.stochastic_round, key=key, rng_mode=cfg.rng_mode,
                 use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
             )
         else:
-            upd = quantize(-lr * g.astype(jnp.float32), s.frac_bits, stochastic=cfg.stochastic_round, key=key)
+            upd = quantize(
+                -lr * g.astype(jnp.float32), s.frac_bits,
+                stochastic=cfg.stochastic_round, key=key,
+                rng_mode=cfg.rng_mode if cfg.rng_mode != "hw" else "counter",
+            )
             planes = opa_deposit(
                 s.planes, upd, spec,
                 use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
