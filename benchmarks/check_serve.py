@@ -1,0 +1,156 @@
+"""CI gate over ``BENCH_serve.json`` (the continuous-batching trace bench).
+
+Checks a freshly-produced serving record for:
+
+* **sanity** — every reported latency/throughput number is finite and
+  positive; both policies served every request in the trace.
+* **the headline claim** — continuous batching beats the static barrier by at
+  least ``--min-speedup`` aggregate tokens/sec (default 1.1: the smoke model
+  is tiny, so dispatch overhead compresses the ratio; the committed full
+  record clears 1.5x).
+* **tier frontier shape** — both SLA tiers served requests, the bulk tier's
+  ADC resolution is below the premium tier's, and its throughput is higher
+  (lower-resolution reads are priced faster on the virtual clock).
+
+Mode guard (mirrors ``check_regression``): when ``--baseline`` is given, the
+baseline and fresh records must agree on ``_meta.smoke`` — smoke shrinks the
+model AND the trace, so cross-mode ratios are meaningless. CI gates the fresh
+smoke run alone (no baseline ratio to compare — the virtual clock is
+calibrated per machine), plus the committed full record's internal claims.
+
+Refreshing the committed record after an intended scheduler change::
+
+    JAX_PLATFORMS=cpu python -m repro.launch.serve --trace --out BENCH_serve.json
+    git add BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+LATENCY_KEYS = ("tokens_per_sec", "per_token_p50_ms", "per_token_p99_ms",
+                "ttft_p50_ms", "ttft_p99_ms", "makespan_s")
+
+REFRESH_HINT = (
+    "If this change is intended (e.g. a scheduler policy change), refresh the "
+    "committed record:\n    JAX_PLATFORMS=cpu python -m repro.launch.serve "
+    "--trace --out BENCH_serve.json\n    git add BENCH_serve.json\n"
+    "and commit it with the scheduler change."
+)
+
+
+def _finite_summary(name: str, s: dict) -> list[str]:
+    bad = []
+    if s.get("requests", 0) <= 0:
+        return [f"{name}: no requests completed"]
+    for k in LATENCY_KEYS:
+        v = s.get(k)
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v < 0:
+            bad.append(f"{name}.{k} is not a finite non-negative number: {v!r}")
+    if isinstance(s.get("tokens_per_sec"), (int, float)) and s["tokens_per_sec"] <= 0:
+        bad.append(f"{name}.tokens_per_sec must be positive: {s['tokens_per_sec']}")
+    return bad
+
+
+def check_modes(base: dict, fresh: dict) -> list[str]:
+    bs = base.get("_meta", {}).get("smoke")
+    fs = fresh.get("_meta", {}).get("smoke")
+    if bs != fs:
+        return [
+            f"_meta.smoke mismatch: baseline={bs} fresh={fs} — smoke and full "
+            "runs use different models and traces; gate like against like"
+        ]
+    return []
+
+
+def check(fresh: dict, min_speedup: float) -> list[str]:
+    failures = []
+    for policy in ("static", "continuous"):
+        if policy not in fresh:
+            failures.append(f"missing {policy!r} summary")
+            continue
+        failures += _finite_summary(policy, fresh[policy])
+    if failures:
+        return failures
+
+    n_req = fresh.get("_meta", {}).get("n_requests")
+    for policy in ("static", "continuous"):
+        if n_req and fresh[policy]["requests"] != n_req:
+            failures.append(
+                f"{policy} served {fresh[policy]['requests']} of {n_req} "
+                f"requests — the trace did not drain"
+            )
+
+    speedup = fresh.get("speedup")
+    if not isinstance(speedup, (int, float)) or not math.isfinite(speedup):
+        failures.append(f"speedup is not finite: {speedup!r}")
+    elif speedup < min_speedup:
+        failures.append(
+            f"continuous/static speedup {speedup:.3f}x is below the "
+            f"{min_speedup}x floor — continuous batching regressed"
+        )
+
+    tiers = fresh.get("tiers", {})
+    if set(tiers) < {"premium", "bulk"}:
+        failures.append(f"expected premium+bulk tiers, got {sorted(tiers)}")
+        return failures
+    for name, t in tiers.items():
+        if t.get("requests", 0) <= 0:
+            failures.append(f"tier {name}: no requests served")
+        loss = t.get("loss")
+        if not isinstance(loss, (int, float)) or not math.isfinite(loss):
+            failures.append(f"tier {name}: loss is not finite: {loss!r}")
+    if not failures:
+        prem, bulk = tiers["premium"], tiers["bulk"]
+        if bulk["adc_bits"] >= prem["adc_bits"]:
+            failures.append(
+                f"bulk tier ADC ({bulk['adc_bits']}b) should be below "
+                f"premium ({prem['adc_bits']}b)"
+            )
+        if bulk.get("tokens_per_sec", 0) <= prem.get("tokens_per_sec", 0):
+            failures.append(
+                "bulk tier is not faster than premium "
+                f"({bulk.get('tokens_per_sec')} vs {prem.get('tokens_per_sec')} "
+                "tok/s) — the ADC latency pricing is inverted or absent"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True, help="freshly measured serve JSON")
+    ap.add_argument("--baseline", default=None,
+                    help="optional committed record for the smoke-mode guard")
+    ap.add_argument("--min-speedup", type=float, default=1.1,
+                    help="continuous/static tokens-per-sec floor (default 1.1 "
+                         "for smoke; the full committed record clears 1.5)")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures = []
+    if args.baseline:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        failures += check_modes(base, fresh)
+    if not failures:
+        failures = check(fresh, args.min_speedup)
+
+    if failures:
+        print("SERVE BENCH GATE FAILED:")
+        for line in failures:
+            print(f"  - {line}")
+        print(REFRESH_HINT)
+        return 1
+    print(
+        f"serve gate OK: speedup {fresh['speedup']:.2f}x >= {args.min_speedup}x, "
+        f"{fresh['continuous']['requests']} requests drained, "
+        f"tiers {sorted(fresh['tiers'])} finite"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

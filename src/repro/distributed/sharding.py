@@ -259,6 +259,30 @@ def cache_specs(mesh: Mesh, cache_shapes, global_batch: int):
     return jax.tree.map(one, cache_shapes)
 
 
+def page_pool_spec(shape: tuple, mesh: Mesh, n_leading: int = 2) -> P:
+    """Sharding for a serving page-pool leaf.
+
+    Paged leaves are ``[P, page, *tail]`` (``n_leading=2``): the physical-
+    page and within-page axes are the unit of host-side recycling and must
+    stay replicated — a page moves between slots without reshuffling data.
+    Dense per-slot state leaves are ``[..., n_slots, ...]`` (``n_leading=1``
+    covers the common slot-leading case). TP lands on the first trailing dim
+    divisible by 'model', scanning from the back — the same
+    head_dim-before-kv-heads rule as :func:`cache_specs`."""
+    msize = mesh.shape[MODEL]
+    spec = [None] * len(shape)
+    for i in range(len(shape) - 1, n_leading - 1, -1):
+        if shape[i] % msize == 0 and shape[i] >= msize:
+            spec[i] = MODEL
+            break
+    return P(*spec)
+
+
+def page_pool_specs(mesh: Mesh, pool_shapes, n_leading: int = 2):
+    """Tree-mapped :func:`page_pool_spec` over a pool shape/array tree."""
+    return jax.tree.map(lambda a: page_pool_spec(a.shape, mesh, n_leading), pool_shapes)
+
+
 def named(mesh: Mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))

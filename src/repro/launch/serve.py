@@ -1,28 +1,174 @@
-"""Serving launcher: prefill a batch of prompts, then decode N tokens.
+"""Serving launcher: legacy fixed-batch decode, or the serving-engine bench.
+
+Legacy (default): prefill one fixed batch of equal-length prompts, then
+decode N tokens in a Python loop — the baseline the continuous-batching
+engine is measured against.
+
+``--trace``: replay a seeded open-loop Poisson trace (mixed prompt/output
+lengths) through ``serve.engine``/``serve.scheduler`` under both the static
+barrier policy and continuous batching, on one calibrated virtual clock, and
+record p50/p99 per-token latency, TTFT, and aggregate tokens/sec into
+``BENCH_serve.json``. A second, tier-tagged trace serves two
+``fidelity_params`` trees built over the SAME sliced crossbar planes
+(premium/adc9 and bulk/adc6) and records the per-tier fidelity/throughput
+frontier: finite-ADC reads change serving loss, and the tier's ADC
+resolution prices its readout latency (same Murmann-survey trend the fig10
+energy model uses — ~2x sample cost per +2 bits).
 
 ``python -m repro.launch.serve --arch gemma-2b --smoke --tokens 32``
+``python -m repro.launch.serve --trace --smoke --out BENCH_serve.json``
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import time
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma-2b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=16)
-    args = ap.parse_args()
+def _adc_latency_factor(bits: int, base_bits: int = 9) -> float:
+    """Relative ADC sample latency at ``bits`` resolution vs ``base_bits``
+    (~2x per +2 bits — the trend ``benchmarks.fig10_hetero`` prices energy
+    with). A 6-bit bulk tier reads ~2.8x faster than the 9-bit premium."""
+    return 2.0 ** ((bits - base_bits) * 0.5)
 
+
+def _tier_summaries(result, sch):
+    out = {}
+    for tier in sorted({r.tier for r in result["requests"]}):
+        sub = {"requests": [r for r in result["requests"] if r.tier == tier]}
+        out[tier] = sch.summarize(sub)
+    return out
+
+
+def run_trace_bench(args):
+    import jax
+
+    from repro import configs
+    from repro.models import lm
+    from repro.optim import PantherConfig, panther
+    from repro.serve import scheduler as sch
+    from repro.serve import trace as tracelib
+    from repro.serve.engine import Engine
+    from repro.serve.step import fidelity_params
+
+    cfg = configs.get_smoke(args.arch)
+    if not args.smoke:
+        # CPU-sized bench model (cf. BENCH_dist note): the bench isolates the
+        # scheduling policy and the tier frontier; absolute tok/s are not
+        # paper-scale. The smoke model is kept tiny for CI.
+        cfg = dataclasses.replace(
+            cfg, d_model=256, n_heads=8, n_kv_heads=2, head_dim=32,
+            d_ff=512, vocab=512, pattern=(("dense", 4),),
+        )
+    key = jax.random.PRNGKey(0)
+    params0 = lm.init_params(cfg, key)
+    # serve from the sliced crossbar state: the same cells training wrote
+    opt_cfg = PantherConfig()
+    digital, sliced = panther.init_split(params0, opt_cfg)
+    params = panther.materialize_split(digital, sliced, opt_cfg)
+
+    n_requests = args.requests or (24 if args.smoke else 32)
+    prompt_lens = (8, 16, 32)
+    out_choices = ((4, 0.75), (120, 0.25))  # bimodal: chat turns + long gens
+    n_slots, page, chunk = 8, 16, 16
+    max_seq = 160
+    trace = tracelib.synth_trace(
+        seed=args.seed, n_requests=n_requests, rate=args.rate,
+        prompt_lens=prompt_lens, vocab=cfg.vocab, out_choices=out_choices,
+    )
+
+    # ---- headline: static barrier vs continuous batching, lossless params.
+    # One shared cost table: both policies run on identical per-shape costs.
+    costs: dict = {}
+    results = {}
+    for policy in ("continuous", "static"):
+        eng = Engine(cfg, params, n_slots=n_slots, max_seq=max_seq, page=page,
+                     chunk_size=chunk, costs=costs)
+        t0 = time.time()
+        res = sch.run_trace({"default": eng}, trace, policy=policy)
+        results[policy] = sch.summarize(res)
+        print(f"{policy}: {results[policy]['tokens_per_sec']:.0f} tok/s "
+              f"(ttft p50 {results[policy]['ttft_p50_ms']:.1f}ms, "
+              f"wall {time.time() - t0:.0f}s)")
+    speedup = results["continuous"]["tokens_per_sec"] / results["static"]["tokens_per_sec"]
+    print(f"continuous/static speedup: {speedup:.2f}x")
+
+    # ---- SLA tiers: two fidelity trees over the SAME sliced planes ----
+    presets = configs.fidelity_presets()
+    tier_defs = {"premium": "adc9", "bulk": "adc6"}
+    n_tier = max(6, n_requests // 4)
+    tier_trace = tracelib.synth_trace(
+        seed=args.seed + 1, n_requests=n_tier, rate=args.rate,
+        prompt_lens=(8, 16), vocab=cfg.vocab,
+        out_choices=((4, 0.7), (24, 0.3)),
+        tiers=(("premium", 0.3), ("bulk", 0.7)),
+    )
+    batch = {
+        "inputs": jax.random.randint(jax.random.fold_in(key, 7), (2, 32), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.fold_in(key, 8), (2, 32), 0, cfg.vocab),
+    }
+    lossless_loss = float(lm.loss_fn(cfg, params, batch))
+    engines, trees = {}, {}
+    for tier, adc in tier_defs.items():
+        trees[tier] = fidelity_params(params, sliced, fid=presets[adc])
+        bits = presets[adc].adc_bits_fwd
+        engines[tier] = Engine(
+            cfg, trees[tier], n_slots=4, max_seq=48, page=16,
+            cost_scale=_adc_latency_factor(bits),
+        )
+    t0 = time.time()
+    tier_res = sch.run_trace(engines, tier_trace, policy="continuous")
+    print(f"tier trace wall {time.time() - t0:.0f}s")
+    tier_sums = _tier_summaries(tier_res, sch)
+    tiers = {}
+    for tier, adc in tier_defs.items():
+        loss = float(lm.loss_fn(cfg, trees[tier], batch))
+        tiers[tier] = {
+            "adc": adc,
+            "adc_bits": presets[adc].adc_bits_fwd,
+            "loss": loss,
+            "loss_delta_vs_lossless": loss - lossless_loss,
+            **tier_sums.get(tier, {"requests": 0}),
+        }
+        print(f"tier {tier} ({adc}): loss {loss:.4f} "
+              f"(+{loss - lossless_loss:.4f}), "
+              f"{tiers[tier].get('tokens_per_sec', 0):.0f} tok/s")
+
+    out = {
+        "_meta": {
+            "smoke": bool(args.smoke),
+            "arch": args.arch,
+            "backend": jax.default_backend(),
+            "seed": args.seed,
+            "n_requests": n_requests,
+            "rate": args.rate,
+            "n_slots": n_slots,
+            "page": page,
+            "chunk": chunk,
+            "max_seq": max_seq,
+            "note": ("virtual clock from per-shape calibrated device costs; "
+                     "tier latency priced by ADC resolution"),
+        },
+        "static": results["static"],
+        "continuous": results["continuous"],
+        "speedup": speedup,
+        "lossless_loss": lossless_loss,
+        "tiers": tiers,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"wrote {args.out}")
+
+
+def run_legacy(args):
     import jax
     import jax.numpy as jnp
 
     from repro import configs
     from repro.models import lm
     from repro.optim import PantherConfig, panther
+    from repro.serve import kv_pages
     from repro.serve.step import make_decode_step
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -42,16 +188,9 @@ def main():
     t0 = time.time()
     logits, caches = jax.jit(lambda p, x: lm.prefill(cfg, p, x))(params, prompts)
     caches = lm.unstack_caches(cfg, caches)
-    # grow cache seq axes to max_seq
-    def grow(x):
-        pads = [(0, 0)] * x.ndim
-        for ax, d in enumerate(x.shape):
-            if d == args.prompt_len:
-                pads[ax] = (0, max_seq - d)
-                return jnp.pad(x, pads)
-        return x
-
-    caches = jax.tree.map(grow, caches)
+    # grow cache seq axes to max_seq, spec-driven (the old shape-sniffing
+    # grow corrupted the batch axis whenever batch == prompt_len)
+    caches = kv_pages.grow_caches(cfg, caches, max_seq)
     print(f"prefill [{args.batch}x{args.prompt_len}] in {time.time() - t0:.2f}s")
 
     decode = jax.jit(make_decode_step(cfg), donate_argnums=2)
@@ -71,6 +210,28 @@ def main():
     print(f"decoded {args.tokens - 1} steps x {args.batch} seqs in {dt:.2f}s "
           f"({(args.tokens - 1) * args.batch / max(dt, 1e-9):.1f} tok/s)")
     print("sample:", toks[0][:16].tolist())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--trace", action="store_true",
+                    help="run the continuous-batching trace bench")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="trace length (0 = mode default)")
+    ap.add_argument("--rate", type=float, default=1e4,
+                    help="open-loop Poisson arrival rate (requests/sec)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+    if args.trace:
+        run_trace_bench(args)
+    else:
+        run_legacy(args)
 
 
 if __name__ == "__main__":

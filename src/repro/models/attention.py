@@ -10,7 +10,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import LMConfig, apply_rope, dense_init, rms_norm, rms_norm_init, softcap, xbar_linear
+from .common import (
+    LMConfig,
+    apply_rope,
+    dense_init,
+    is_paged_cache,
+    paged_gather,
+    paged_scatter,
+    rms_norm,
+    rms_norm_init,
+    seq_scatter,
+    softcap,
+    xbar_linear,
+)
 from .mlp import mlp_apply, mlp_init
 
 
@@ -191,32 +203,70 @@ def _cache_load(entry, dtype):
     return (entry["q"].astype(jnp.float32) * entry["s"]).astype(dtype)
 
 
+def decode_posmask(pos, S: int, window=None):
+    """Additive decode mask over ``S`` cached positions. Scalar ``pos`` gives
+    the legacy ``[1, S]`` mask (bit-compatible with the single-request path);
+    vector ``pos [B]`` gives per-slot ``[B, S]`` masks — the continuous-
+    batching form where every decode slot sits at its own position and dead
+    slots (``pos`` = the out-of-range sentinel) see an all-visible mask over
+    garbage they alone consume."""
+    kpos = jnp.arange(S)
+    if jnp.ndim(pos) == 0:
+        ok = kpos <= pos
+        if window is not None:
+            ok &= kpos > pos - window
+        return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[None, :]
+    ok = kpos[None, :] <= pos[:, None]
+    if window is not None:
+        ok &= kpos[None, :] > pos[:, None] - window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def _entry_write(entry, new, pos, table=None):
+    """Write a decoded token's quantized K or V dict into a cache entry:
+    paged scatter when a page ``table`` rides along, per-slot dense scatter
+    for vector ``pos``, legacy dynamic_update_slice for scalar ``pos``."""
+    if table is not None:
+        return jax.tree.map(lambda c, n: paged_scatter(c, table, n, pos), entry, new)
+    if jnp.ndim(pos):
+        return jax.tree.map(lambda c, n: seq_scatter(c, n, pos), entry, new)
+    return jax.tree.map(
+        lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, pos, axis=1), entry, new
+    )
+
+
 def attn_decode(cfg: LMConfig, p, h, cache, pos, window=None):
-    """One-token decode. h [B,1,d]; cache {k,v: {q:[B,Smax,KV,hd](, s)}};
-    pos scalar."""
+    """One-token decode. h [B,1,d]; pos scalar (legacy) or [B] per-slot.
+
+    ``cache`` is either the dense ``{k,v: {q:[B,Smax,KV,hd](, s)}}`` layout or
+    the paged layout ``{table, k, v}`` where each K/V leaf is a page pool
+    ``[P, page, KV, hd]`` indexed through ``table [B, max_pages]`` (see
+    ``models.common.paged_gather``). Writes for dead slots drop through the
+    sentinel page; reads mask per slot."""
     x = rms_norm(p["ln"], h, cfg.norm_eps)
     q, k_new, v_new = _qkv(cfg, p, x, pos[..., None] if pos.ndim else pos.reshape(1))
     cdtype = cache["k"]["q"].dtype
-    # write the new K/V at position pos
-    k = jax.tree.map(
-        lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, pos, axis=1),
-        cache["k"], _cache_store(k_new, cdtype),
-    )
-    v = jax.tree.map(
-        lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, pos, axis=1),
-        cache["v"], _cache_store(v_new, cdtype),
-    )
-    S = k["q"].shape[1]
-    kpos = jnp.arange(S)
-    ok = kpos <= pos
-    if window is not None:
-        ok &= kpos > pos - window
-    mask = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[None, :]
-    o = _sdpa(cfg, q, _cache_load(k, q.dtype), _cache_load(v, q.dtype), mask)
+    table = cache.get("table") if is_paged_cache(cache) else None
+    wpos = pos if (table is None or pos.ndim) else jnp.full((h.shape[0],), pos, jnp.int32)
+    k = _entry_write(cache["k"], _cache_store(k_new, cdtype), wpos, table)
+    v = _entry_write(cache["v"], _cache_store(v_new, cdtype), wpos, table)
+    if table is not None:
+        kd = jax.tree.map(lambda c: paged_gather(c, table), k)
+        vd = jax.tree.map(lambda c: paged_gather(c, table), v)
+        S = table.shape[1] * k["q"].shape[1]
+        new_cache = {"table": table, "k": k, "v": v}
+    else:
+        kd, vd = k, v
+        S = k["q"].shape[1]
+        new_cache = {"k": k, "v": v}
+    mask = decode_posmask(pos, S, window)
+    if jnp.ndim(pos):
+        mask = mask[:, None, None, None, :]  # [B,S] -> broadcast vs [B,kv,g,q,s]
+    o = _sdpa(cfg, q, _cache_load(kd, q.dtype), _cache_load(vd, q.dtype), mask)
     o = xbar_linear(o.reshape(*o.shape[:2], -1), p["wo"], h.dtype)
     if cfg.post_norm:
         o = rms_norm(p["post_ln"], o, cfg.norm_eps)
-    return h + o, {"k": k, "v": v}
+    return h + o, new_cache
 
 
 def attn_cache_spec(cfg: LMConfig, batch: int, max_seq: int, dtype):
@@ -252,6 +302,58 @@ def block_prefill(cfg: LMConfig, p, h, positions, window=None):
 def block_decode(cfg: LMConfig, p, h, cache, pos, window=None):
     h, cache = attn_decode(cfg, p["attn"], h, cache, pos, window)
     return mlp_apply(cfg, p["mlp"], h), cache
+
+
+# ------------------------ chunked-prefill continuation -----------------------
+# Multi-token generalization of decode: process a chunk of C prompt tokens at
+# absolute positions ``start .. start+C`` against a dense cache that already
+# holds the first ``start`` positions (zeros beyond — masked). The serving
+# engine drives these to prefill long prompts in fixed-size chunks so decode
+# slots never stall more than one chunk (repro.serve.engine).
+
+
+def attn_cont(cfg: LMConfig, p, h, cache, positions, start, window=None):
+    """Prefill-continuation for the GQA core. h [B,C,d]; positions [C]
+    absolute; ``start`` scalar offset of the chunk; cache dense [B,Stot,...]."""
+    x = rms_norm(p["ln"], h, cfg.norm_eps)
+    q, k_new, v_new = _qkv(cfg, p, x, positions)
+    cdtype = cache["k"]["q"].dtype
+    k = jax.tree.map(
+        lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, start, axis=1),
+        cache["k"], _cache_store(k_new, cdtype),
+    )
+    v = jax.tree.map(
+        lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, start, axis=1),
+        cache["v"], _cache_store(v_new, cdtype),
+    )
+    C, S = q.shape[1], k["q"].shape[1]
+    mask = causal_mask(C, S, window, q_offset=start)
+    o = _sdpa(cfg, q, _cache_load(k, q.dtype), _cache_load(v, q.dtype), mask)
+    o = xbar_linear(o.reshape(*o.shape[:2], -1), p["wo"], h.dtype)
+    if cfg.post_norm:
+        o = rms_norm(p["post_ln"], o, cfg.norm_eps)
+    return h + o, {"k": k, "v": v}
+
+
+def block_cont(cfg: LMConfig, p, h, cache, positions, start, window=None):
+    h, cache = attn_cont(cfg, p["attn"], h, cache, positions, start, window)
+    return mlp_apply(cfg, p["mlp"], h), cache
+
+
+def mla_cont(cfg: LMConfig, p, h, cache, positions, start):
+    """Prefill-continuation for MLA (compressed c_kv + shared k_rope cache)."""
+    x = rms_norm(p["ln"], h, cfg.norm_eps)
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(cfg, p, x, positions)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), start, axis=1
+    )
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), start, axis=1
+    )
+    C, S = q_nope.shape[1], c_kv.shape[1]
+    mask = causal_mask(C, S, None, q_offset=start)
+    o = _mla_attend(cfg, p, q_nope, q_rope, c_kv.astype(x.dtype), k_rope.astype(x.dtype), mask, x.dtype)
+    return h + xbar_linear(o, p["wo"], h.dtype), {"c_kv": c_kv, "k_rope": k_rope}
 
 
 # ------------------------------- MLA ----------------------------------------
@@ -337,15 +439,38 @@ def mla_apply(cfg: LMConfig, p, h, positions, with_cache=False):
 def mla_decode(cfg: LMConfig, p, h, cache, pos):
     """MLA decode caches the *compressed* c_kv (+ shared k_rope) — the point
     of MLA. The up-projection runs over the cache each step (the absorbed-
-    matmul optimization is a recorded perf-iteration candidate)."""
+    matmul optimization is a recorded perf-iteration candidate).
+
+    ``pos`` may be a scalar (legacy) or ``[B]`` per-slot positions, and
+    ``cache`` may be the paged ``{table, c_kv, k_rope}`` layout (pools
+    ``[P, page, ...]``) — same conventions as :func:`attn_decode`."""
     x = rms_norm(p["ln"], h, cfg.norm_eps)
-    q_nope, q_rope, c_new, kr_new = _mla_qkv(cfg, p, x, pos.reshape(1))
-    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
-    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
-    S = c_kv.shape[1]
-    mask = jnp.where(jnp.arange(S) <= pos, 0.0, -1e30).astype(jnp.float32)[None, :]
-    o = _mla_attend(cfg, p, q_nope, q_rope, c_kv.astype(x.dtype), k_rope.astype(x.dtype), mask, x.dtype)
-    return h + xbar_linear(o, p["wo"], h.dtype), {"c_kv": c_kv, "k_rope": k_rope}
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(
+        cfg, p, x, pos[..., None] if pos.ndim else pos.reshape(1)
+    )
+    table = cache.get("table") if is_paged_cache(cache) else None
+    wpos = pos if (table is None or pos.ndim) else jnp.full((h.shape[0],), pos, jnp.int32)
+    new = {"c_kv": c_new.astype(cache["c_kv"].dtype), "k_rope": kr_new.astype(cache["k_rope"].dtype)}
+    if table is not None or jnp.ndim(pos):
+        ent = _entry_write({k: cache[k] for k in ("c_kv", "k_rope")}, new, wpos, table)
+        c_kv, k_rope = ent["c_kv"], ent["k_rope"]
+    else:
+        c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], new["c_kv"], pos, axis=1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], new["k_rope"], pos, axis=1)
+    if table is not None:
+        cd = paged_gather(c_kv, table)
+        krd = paged_gather(k_rope, table)
+        S = cd.shape[1]
+        new_cache = {"table": table, "c_kv": c_kv, "k_rope": k_rope}
+    else:
+        cd, krd = c_kv, k_rope
+        S = c_kv.shape[1]
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    mask = decode_posmask(pos, S)
+    if jnp.ndim(pos):
+        mask = mask[:, None, None, :]  # [B,S] -> broadcast vs [B,H,q,s]
+    o = _mla_attend(cfg, p, q_nope, q_rope, cd.astype(x.dtype), krd.astype(x.dtype), mask, x.dtype)
+    return h + xbar_linear(o, p["wo"], h.dtype), new_cache
 
 
 def mla_cache_spec(cfg: LMConfig, batch: int, max_seq: int, dtype):

@@ -484,3 +484,54 @@ def dense_init(key, d_in: int, d_out: int, scale: float | None = None) -> jax.Ar
 
 def embed_init(key, vocab: int, d: int) -> jax.Array:
     return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(jnp.float32)
+
+
+# ----------------------- paged KV-cache primitives ---------------------------
+# The serving engine (repro.serve) stores seq-axis cache leaves in a shared
+# page pool: ``pool [P, page, *tail]`` plus a per-slot page table
+# ``table [n_slots, max_pages] int32`` mapping logical page index -> physical
+# page. The sentinel value P (== pool.shape[0], one past the last physical
+# page) marks unallocated / evicted table entries: reads through it clip to an
+# arbitrary (finite, masked) page, and writes through it fall off the pool's
+# first axis and are DROPPED (`mode="drop"`) — dead decode slots are inert by
+# construction. Blocks detect a paged cache by the ``"table"`` key riding in
+# the cache dict next to the usual leaf names (see ``attention.attn_decode``).
+
+
+def is_paged_cache(cache) -> bool:
+    return isinstance(cache, dict) and "table" in cache
+
+
+def paged_gather(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Materialize the dense logical view ``[n_slots, max_pages*page, *tail]``
+    of a paged leaf. Sentinel table entries clip to the last physical page —
+    garbage, but every consumer masks positions beyond the slot's ``pos``."""
+    P, page = pool.shape[0], pool.shape[1]
+    g = pool[jnp.clip(table, 0, P - 1)]  # [n_slots, max_pages, page, *tail]
+    return g.reshape(table.shape[0], table.shape[1] * page, *pool.shape[2:])
+
+
+def paged_scatter(pool: jax.Array, table: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write one token per slot into the pool at logical position ``pos``.
+
+    ``new [n_slots, 1, *tail]``; ``pos [n_slots]`` int32. A slot whose
+    logical page resolves to the sentinel (dead slot, or ``pos`` past the
+    allocated range) scatters out of bounds and is dropped."""
+    n_slots, max_pages = table.shape
+    P, page = pool.shape[0], pool.shape[1]
+    page_idx = pos // page
+    phys = jnp.where(
+        page_idx < max_pages,
+        table[jnp.arange(n_slots), jnp.clip(page_idx, 0, max_pages - 1)],
+        P,
+    )
+    return pool.at[phys, pos % page].set(new[:, 0], mode="drop")
+
+
+def seq_scatter(cache: jax.Array, new: jax.Array, pos: jax.Array, axis: int = 1) -> jax.Array:
+    """Per-slot single-token write into a dense seq-axis cache leaf:
+    ``cache [B, S, *tail]``, ``new [B, 1, *tail]``, ``pos [B]``. Out-of-range
+    positions (the dead-slot sentinel) are dropped."""
+    assert axis == 1, "dense per-slot writes assume [B, S, ...] layout"
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), pos].set(new[:, 0], mode="drop")

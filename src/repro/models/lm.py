@@ -22,6 +22,8 @@ from . import attention as att
 from . import mamba2 as m2
 from . import xlstm as xl
 from .common import LMConfig, dense_init, embed_init, rms_norm, rms_norm_init, softcap
+from .common import is_paged_cache as common_is_paged
+from .common import paged_gather as common_paged_gather
 from .common import xbar_linear as common_xbar_linear
 from .mlp import mlp_apply, mlp_init, moe_apply, moe_aux_loss, moe_init
 
@@ -32,6 +34,11 @@ class BlockDef(NamedTuple):
     prefill: Callable  # (cfg, params, h, ctx) -> (h, cache)
     decode: Callable  # (cfg, params, h, cache, ctx) -> (h, cache)
     cache_spec: Callable  # (cfg, B, S, dtype) -> pytree of ShapeDtypeStruct
+    # optional chunked-prefill continuation: (cfg, params, h, cache, ctx) ->
+    # (h, cache), processing ctx["positions"] absolute positions against a
+    # dense cache holding positions < ctx["start"]. None = block only
+    # supports single-shot prefill (the serving engine falls back).
+    cont: Callable | None = None
 
 
 def _no_aux(f):
@@ -65,7 +72,11 @@ def _mk_attn_block(window_from_cfg: bool):
         s_eff = min(s, cfg.window) if (window_from_cfg and cfg.window) else s
         return att.attn_cache_spec(cfg, b, s_eff, dt)
 
-    return BlockDef(init, _no_aux(apply), prefill, decode, cache_spec)
+    def cont(cfg, p, h, cache, ctx):
+        w = cfg.window if window_from_cfg else None
+        return att.block_cont(cfg, p, h, cache, ctx["positions"], ctx["start"], w)
+
+    return BlockDef(init, _no_aux(apply), prefill, decode, cache_spec, cont)
 
 
 _DENSE = _mk_attn_block(False)
@@ -80,31 +91,45 @@ def _local_decode_pos(cfg, pos):
 # local decode with bounded cache: override decode to write modulo window
 def _local_decode(cfg, p, h, cache, ctx):
     pos = ctx["pos"]
+    vec = jnp.ndim(pos) == 1
+    paged = common_is_paged(cache)
+    table = cache.get("table") if paged else None
     # emulate sliding window on a ring buffer: positions are stored modulo W
-    W = cache["k"]["q"].shape[1]
+    if paged:
+        W = table.shape[1] * cache["k"]["q"].shape[1]
+    else:
+        W = cache["k"]["q"].shape[1]
     write = pos % W
     x = rms_norm(p["attn"]["ln"], h, cfg.norm_eps)
-    q, k_new, v_new = att._qkv(cfg, p["attn"], x, pos.reshape(1))
+    q, k_new, v_new = att._qkv(cfg, p["attn"], x, pos[..., None] if pos.ndim else pos.reshape(1))
     cdtype = cache["k"]["q"].dtype
-    k = jax.tree.map(
-        lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, write, axis=1),
-        cache["k"], att._cache_store(k_new, cdtype),
-    )
-    v = jax.tree.map(
-        lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, write, axis=1),
-        cache["v"], att._cache_store(v_new, cdtype),
-    )
-    # slots with ring index > pos are empty early on
+    wpos = write if (table is None or vec) else jnp.full((h.shape[0],), write, jnp.int32)
+    k = att._entry_write(cache["k"], att._cache_store(k_new, cdtype), wpos, table)
+    v = att._entry_write(cache["v"], att._cache_store(v_new, cdtype), wpos, table)
+    if paged:
+        kd = jax.tree.map(lambda c: common_paged_gather(c, table), k)
+        vd = jax.tree.map(lambda c: common_paged_gather(c, table), v)
+        new_cache = {"table": table, "k": k, "v": v}
+    else:
+        kd, vd = k, v
+        new_cache = {"k": k, "v": v}
+    # ring slots with index > pos are empty early on
     slot = jnp.arange(W)
-    age = pos - ((pos - slot) % W)  # absolute position stored in each slot
-    ok = (age >= 0) & (age > pos - cfg.window)  # window mask, not ring size
-    mask = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[None, :]
-    o = att._sdpa(cfg, q, att._cache_load(k, q.dtype), att._cache_load(v, q.dtype), mask)
+    if vec:
+        posb = pos[:, None]
+        age = posb - ((posb - slot[None, :]) % W)
+        ok = (age >= 0) & (age > posb - cfg.window)
+        mask = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[:, None, None, None, :]
+    else:
+        age = pos - ((pos - slot) % W)  # absolute position stored in each slot
+        ok = (age >= 0) & (age > pos - cfg.window)  # window mask, not ring size
+        mask = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[None, :]
+    o = att._sdpa(cfg, q, att._cache_load(kd, q.dtype), att._cache_load(vd, q.dtype), mask)
     o = common_xbar_linear(o.reshape(*o.shape[:2], -1), p["attn"]["wo"], h.dtype)
     if cfg.post_norm:
         o = rms_norm(p["attn"]["post_ln"], o, cfg.norm_eps)
     h = h + o
-    return mlp_apply(cfg, p["mlp"], h), {"k": k, "v": v}
+    return mlp_apply(cfg, p["mlp"], h), new_cache
 
 
 _LOCAL = _LOCAL._replace(decode=_local_decode)
@@ -142,7 +167,15 @@ def _pair_cache_spec(cfg, b, s, dt):
     }
 
 
-_GEMMA2_PAIR = BlockDef(_pair_init, _no_aux(_pair_apply), _pair_prefill, _pair_decode, _pair_cache_spec)
+def _pair_cont(cfg, p, h, cache, ctx):
+    h, c1 = att.block_cont(cfg, p["local"], h, cache["local"], ctx["positions"], ctx["start"], cfg.window)
+    h, c2 = att.block_cont(cfg, p["global"], h, cache["global"], ctx["positions"], ctx["start"], None)
+    return h, {"local": c1, "global": c2}
+
+
+_GEMMA2_PAIR = BlockDef(
+    _pair_init, _no_aux(_pair_apply), _pair_prefill, _pair_decode, _pair_cache_spec, _pair_cont
+)
 
 
 # ------------------------------ MoE blocks ----------------------------------
@@ -169,7 +202,12 @@ def _moe_decode(cfg, p, h, cache, ctx):
     return moe_apply(cfg, p["moe"], h), cache
 
 
-_MOE = BlockDef(_moe_init, _moe_apply, _moe_prefill, _moe_decode, att.attn_cache_spec)
+def _moe_cont(cfg, p, h, cache, ctx):
+    h, cache = att.attn_cont(cfg, p["attn"], h, cache, ctx["positions"], ctx["start"])
+    return moe_apply(cfg, p["moe"], h), cache
+
+
+_MOE = BlockDef(_moe_init, _moe_apply, _moe_prefill, _moe_decode, att.attn_cache_spec, _moe_cont)
 
 
 # ------------------------------ MLA blocks ----------------------------------
@@ -196,8 +234,14 @@ def _mla_dense_decode(cfg, p, h, cache, ctx):
     return mlp_apply(cfg, p["mlp"], h), cache
 
 
+def _mla_dense_cont(cfg, p, h, cache, ctx):
+    h, cache = att.mla_cont(cfg, p["attn"], h, cache, ctx["positions"], ctx["start"])
+    return mlp_apply(cfg, p["mlp"], h), cache
+
+
 _MLA_DENSE = BlockDef(
-    _mla_dense_init, _no_aux(_mla_dense_apply), _mla_dense_prefill, _mla_dense_decode, att.mla_cache_spec
+    _mla_dense_init, _no_aux(_mla_dense_apply), _mla_dense_prefill, _mla_dense_decode,
+    att.mla_cache_spec, _mla_dense_cont,
 )
 
 
@@ -222,7 +266,14 @@ def _mla_moe_decode(cfg, p, h, cache, ctx):
     return moe_apply(cfg, p["moe"], h), cache
 
 
-_MLA_MOE = BlockDef(_mla_moe_init, _mla_moe_apply, _mla_moe_prefill, _mla_moe_decode, att.mla_cache_spec)
+def _mla_moe_cont(cfg, p, h, cache, ctx):
+    h, cache = att.mla_cont(cfg, p["attn"], h, cache, ctx["positions"], ctx["start"])
+    return moe_apply(cfg, p["moe"], h), cache
+
+
+_MLA_MOE = BlockDef(
+    _mla_moe_init, _mla_moe_apply, _mla_moe_prefill, _mla_moe_decode, att.mla_cache_spec, _mla_moe_cont
+)
 
 
 # ------------------------------ SSM blocks ----------------------------------
@@ -238,6 +289,7 @@ _MAMBA2 = BlockDef(
     _mamba_prefill,
     lambda cfg, p, h, cache, ctx: m2.mamba2_decode(cfg, p, h, cache, ctx["pos"]),
     m2.mamba2_cache_spec,
+    lambda cfg, p, h, cache, ctx: m2.mamba2_apply(cfg, p, h, with_state=True, state=cache),
 )
 
 _MLSTM = BlockDef(
@@ -302,20 +354,27 @@ def _zamba_shared_apply(cfg, sp, h, x0, positions, cache=None, pos=None):
         mask = att.causal_mask(S, S, None)
         new_cache = {"k": {"q": k}, "v": {"q": v}}
     else:
-        q = apply_rope(q, pos.reshape(1), cfg.rope_theta)
-        k = apply_rope(k, pos.reshape(1), cfg.rope_theta)
+        rpos = pos[..., None] if pos.ndim else pos.reshape(1)
+        q = apply_rope(q, rpos, cfg.rope_theta)
+        k = apply_rope(k, rpos, cfg.rope_theta)
         cdtype = cache["k"]["q"].dtype
-        kc = jax.tree.map(
-            lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, pos, axis=1),
-            cache["k"], att._cache_store(k, cdtype),
-        )
-        vc = jax.tree.map(
-            lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, pos, axis=1),
-            cache["v"], att._cache_store(v, cdtype),
-        )
-        mask = jnp.where(jnp.arange(kc["q"].shape[1]) <= pos, 0.0, -1e30).astype(jnp.float32)[None, :]
-        k, v = att._cache_load(kc, q.dtype), att._cache_load(vc, q.dtype)
-        new_cache = {"k": kc, "v": vc}
+        table = cache.get("table") if common_is_paged(cache) else None
+        wpos = pos if (table is None or pos.ndim) else jnp.full((B,), pos, jnp.int32)
+        kc = att._entry_write(cache["k"], att._cache_store(k, cdtype), wpos, table)
+        vc = att._entry_write(cache["v"], att._cache_store(v, cdtype), wpos, table)
+        if table is not None:
+            kd = jax.tree.map(lambda c: common_paged_gather(c, table), kc)
+            vd = jax.tree.map(lambda c: common_paged_gather(c, table), vc)
+            S_c = table.shape[1] * kc["q"].shape[1]
+            new_cache = {"table": table, "k": kc, "v": vc}
+        else:
+            kd, vd = kc, vc
+            S_c = kc["q"].shape[1]
+            new_cache = {"k": kc, "v": vc}
+        mask = att.decode_posmask(pos, S_c)
+        if jnp.ndim(pos):
+            mask = mask[:, None, None, None, :]
+        k, v = att._cache_load(kd, q.dtype), att._cache_load(vd, q.dtype)
     o = att._sdpa(cfg, q, k, v, mask)
     h = h + o.reshape(B, -1, H * hd) @ sp["wo"].astype(h.dtype)
     xm = rms_norm(sp["mlp_ln"], jnp.concatenate([h, x0], axis=-1), cfg.norm_eps)
@@ -564,34 +623,69 @@ def init_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None):
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_specs(cfg, batch, max_seq, dtype))
 
 
-def prefill(cfg: LMConfig, params, inputs, shard_fn=None, cshard=None):
+def prefill(cfg: LMConfig, params, inputs, shard_fn=None, cshard=None, caches=None, start=0):
     """Full-sequence prefill. Returns (last-position logits, caches).
 
     ``cshard``: optional list (per pattern group) of constraint fns applied
     to each layer's cache *inside* the scan body — without this the scan's
-    stacked-ys KV buffer materializes under-sharded (multi-TB at 32k)."""
+    stacked-ys KV buffer materializes under-sharded (multi-TB at 32k).
+
+    Chunked-prefill continuation: pass ``caches`` (the stacked-layout tree
+    from a previous call, or zeros allocated at the full prompt length) and
+    ``start`` (absolute position of ``inputs[:, 0]``) and each block's
+    ``cont`` processes the chunk against the existing cache — the serving
+    engine uses this to interleave long-prompt prefill with decode rounds.
+    Requires every block in the pattern to define ``cont`` (see
+    :func:`supports_chunked_prefill`)."""
     h = _embed_in(cfg, params, inputs)
     S = h.shape[1]
-    ctx = {"positions": jnp.arange(S), "x0": h, "shared": params.get("shared")}
+    ctx = {"positions": jnp.arange(S) + start, "x0": h, "shared": params.get("shared"), "start": start}
     shard_fn = shard_fn or (lambda x: x)
-    caches = []
-    for gi, ((name, count), gparams) in enumerate(zip(cfg.pattern, params["groups"])):
-        block = BLOCKS[name]
-        csc = cshard[gi] if cshard is not None else (lambda c: c)
-        if count == 1:
-            h, cache = block.prefill(cfg, gparams, shard_fn(h), ctx)
-            cache = csc(cache)
-        else:
+    if caches is None:
+        out_caches = []
+        for gi, ((name, count), gparams) in enumerate(zip(cfg.pattern, params["groups"])):
+            block = BLOCKS[name]
+            csc = cshard[gi] if cshard is not None else (lambda c: c)
+            if count == 1:
+                h, cache = block.prefill(cfg, gparams, shard_fn(h), ctx)
+                cache = csc(cache)
+            else:
 
-            def body(carry, p_i, _block=block, _csc=csc):
-                hh, cache_i = _block.prefill(cfg, p_i, shard_fn(carry), ctx)
-                return hh, _csc(cache_i)
+                def body(carry, p_i, _block=block, _csc=csc):
+                    hh, cache_i = _block.prefill(cfg, p_i, shard_fn(carry), ctx)
+                    return hh, _csc(cache_i)
 
-            h, cache = jax.lax.scan(body, h, gparams)
-        caches.append(cache)
+                h, cache = jax.lax.scan(body, h, gparams)
+            out_caches.append(cache)
+    else:
+        out_caches = []
+        for gi, ((name, count), gparams) in enumerate(zip(cfg.pattern, params["groups"])):
+            block = BLOCKS[name]
+            if block.cont is None:
+                raise NotImplementedError(
+                    f"block {name!r} does not support chunked prefill (no cont)"
+                )
+            if count == 1:
+                h, cache = block.cont(cfg, gparams, shard_fn(h), caches[gi], ctx)
+            else:
+
+                def cbody(carry, xs, _block=block):
+                    p_i, c_i = xs
+                    hh, c_new = _block.cont(cfg, p_i, shard_fn(carry), c_i, ctx)
+                    return hh, c_new
+
+                h, cache = jax.lax.scan(cbody, h, (gparams, caches[gi]))
+            out_caches.append(cache)
     # head on the LAST position only — the full [B,S,V] logits of a 32k
     # prefill are tens of GiB (and useless: decode continues from position S)
-    return _head_out(cfg, params, h[:, -1:])[:, 0], caches
+    return _head_out(cfg, params, h[:, -1:])[:, 0], out_caches
+
+
+def supports_chunked_prefill(cfg: LMConfig) -> bool:
+    """True when every block in ``cfg.pattern`` defines a prefill
+    continuation (``BlockDef.cont``) — the serving engine falls back to
+    single-shot prefill otherwise (zamba units and xLSTM blocks currently)."""
+    return all(BLOCKS[name].cont is not None for name, _ in cfg.pattern)
 
 
 def decode_step(cfg: LMConfig, params, token_or_embed, caches, pos, shard_fn=None):

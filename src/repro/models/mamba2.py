@@ -70,15 +70,23 @@ def _split_in(cfg, p, x):
     return z, xbc, dt
 
 
-def mamba2_apply(cfg: LMConfig, p, h, with_state: bool = False):
-    """Full-sequence SSD. h [B,S,d]."""
+def mamba2_apply(cfg: LMConfig, p, h, with_state: bool = False, state=None):
+    """Full-sequence SSD. h [B,S,d].
+
+    ``state`` (optional): a cache dict ``{ssd, conv}`` from a previous
+    ``with_state=True`` call (or decode steps) — the chunk scan starts from
+    ``state["ssd"]`` and the causal conv consumes ``state["conv"]`` as left
+    context, so long prompts can prefill in chunks (serving engine)."""
     s = cfg.ssm
     d_inner, H = _dims(cfg)
     hd, ds, Q = s.head_dim, s.d_state, s.chunk
     B, S, _ = h.shape
     x_in = rms_norm(p["ln"], h, cfg.norm_eps)
     z, xbc, dt_raw = _split_in(cfg, p, x_in)
-    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xbc, conv_tail = _causal_conv(
+        xbc, p["conv_w"], p["conv_b"],
+        prev=None if state is None else state["conv"].astype(xbc.dtype),
+    )
     x, Bs, Cs = jnp.split(xbc, [d_inner, d_inner + ds], axis=-1)
 
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
@@ -126,7 +134,7 @@ def mamba2_apply(cfg: LMConfig, p, h, with_state: bool = False):
         new = state * jnp.exp(total_q)[:, :, None, None] + contrib_q
         return new, state  # emit the state *entering* this chunk
 
-    init = jnp.zeros((B, H, hd, ds), jnp.float32)
+    init = jnp.zeros((B, H, hd, ds), jnp.float32) if state is None else state["ssd"]
     final_state, entering = jax.lax.scan(
         chunk_step, init, (contrib.swapaxes(0, 1), total.swapaxes(0, 1))
     )

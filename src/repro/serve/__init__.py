@@ -1,3 +1,41 @@
-from .step import make_decode_step, make_prefill
+"""Serving: single-request steps and the continuous-batching engine.
 
-__all__ = ["make_decode_step", "make_prefill"]
+Layers, bottom up:
+
+* ``step`` — batched prefill / single-token decode builders over the stock
+  model fns, plus :func:`fidelity_params`, which wraps a served param tree
+  so operand-eligible linears read the trainer's int8 crossbar planes
+  through the packed sliced-MVM engine at a configured (per-leaf) ADC
+  resolution. The SLA-tier pattern: build SEVERAL wrapped trees at different
+  ADC settings over the SAME sliced planes — one crossbar state, many
+  fidelity/throughput operating points.
+* ``kv_pages`` — the paged KV-cache: per-layer page pools ``[P, page,
+  *tail]`` for every sequence-axis cache leaf, one shared slot→page table,
+  host-side free-list allocation with recycling on eviction, and the
+  eval_shape-driven cache-layout discovery that replaces shape-sniffing.
+* ``engine`` — a fixed grid of decode slots over those pools: exact-length
+  (or chunked, interleavable) prefill, jitted scanned decode rounds with
+  donated caches and per-slot positions, sentinel-inert dead slots.
+* ``scheduler`` — continuous-batching admit/evict (and the static-batch
+  barrier baseline) over one or more engines on a shared virtual clock
+  built from measured device times; tier-tagged requests route to the
+  engine serving their SLA tier's params tree.
+* ``trace`` — seeded open-loop Poisson request traces for the bench
+  (``python -m repro.launch.serve --trace``).
+"""
+from .engine import Engine, PrefillJob
+from .scheduler import Request, run_trace, summarize
+from .step import fidelity_params, make_decode_step, make_prefill
+from .trace import synth_trace
+
+__all__ = [
+    "Engine",
+    "PrefillJob",
+    "Request",
+    "fidelity_params",
+    "make_decode_step",
+    "make_prefill",
+    "run_trace",
+    "summarize",
+    "synth_trace",
+]

@@ -1,0 +1,295 @@
+"""Continuous-batching serving engine over a fixed decode-slot grid.
+
+One :class:`Engine` owns ``n_slots`` decode slots backed by the paged cache
+trees of ``serve.kv_pages``. The serving loop is three primitives:
+
+* **prefill** — each request prefills *solo* at its exact prompt length
+  (``[1, L]``) through the stock ``lm.prefill``, so its cache bits are
+  identical to single-request serving; long prompts instead stream through
+  the chunked-prefill continuation (``lm.prefill(caches=..., start=...)``)
+  one fixed-size chunk per call, so decode slots never stall more than one
+  chunk. The finished caches are scattered into the slot's pages.
+* **decode round** — a jitted ``lax.scan`` of ``T`` single-token steps with
+  the cache trees donated (one resident cache buffer). All slots decode
+  together at their own positions (vector ``pos``); evicted slots run at the
+  sentinel position, where cache writes drop and outputs are discarded —
+  dead slots are inert by construction, no recompilation as the slot mix
+  changes. ``T`` is bucketed so only a handful of round shapes ever compile.
+* **evict** — release the slot's pages back to the pool free list.
+
+Every jitted entry point is AOT-compiled (``.lower().compile()``) the first
+time its shape appears and its steady-state cost calibrated (best of a few
+dummy executions) — the scheduler builds its virtual clock from these
+per-shape calibrated costs, so compile time never pollutes latency metrics
+and the clock is deterministic under interleaving-order wall noise.
+
+SLA tiers: an engine serves ONE params tree (e.g. a ``fidelity_params`` wrap
+at a given ADC resolution). The scheduler composes engines — premium/adc9
+and bulk/adc6 trees built over the SAME sliced planes — on one shared
+virtual clock (see ``serve.scheduler``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+from . import kv_pages
+from .step import _fid_scope
+
+
+@dataclasses.dataclass
+class PrefillJob:
+    """In-flight prompt prefill. ``caches`` holds the stacked-layout cache
+    tree being filled; chunked jobs advance ``done`` one chunk per step."""
+
+    tokens: np.ndarray  # [L] int32 prompt
+    chunked: bool
+    done: int = 0
+    caches: object = None
+    logits: object = None
+
+    @property
+    def length(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def finished(self) -> bool:
+        return self.done >= self.length
+
+
+class Engine:
+    """Fixed-slot continuous-batching engine over paged caches."""
+
+    def __init__(self, cfg, params, *, n_slots: int, max_seq: int, page: int = 16,
+                 num_pages: int | None = None, chunk_size: int | None = None,
+                 mesh=None, costs: dict | None = None, cost_scale: float = 1.0):
+        if cfg.input_mode != "tokens":
+            raise NotImplementedError(
+                "the serving engine feeds sampled token ids back; "
+                "embedding-front archs are not servable through it"
+            )
+        self.cfg, self.params, self.mesh = cfg, params, mesh
+        self.spec = kv_pages.pool_spec(n_slots, max_seq, page, num_pages)
+        self.alloc = kv_pages.PageAllocator(self.spec)
+        self.chunk_size = chunk_size
+
+        sharding_fn = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+
+            from repro.distributed import sharding as shd
+
+            def sharding_fn(lay, shape, dtype):
+                spec = shd.page_pool_spec(shape, mesh, n_leading=2 if lay.is_paged else 1)
+                return NamedSharding(mesh, spec)
+
+        self.caches = kv_pages.make_paged_caches(cfg, self.spec, sharding_fn)
+        self.tok = jnp.zeros((n_slots,), jnp.int32)
+        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        self.active = np.zeros((n_slots,), bool)
+        self.pos_host = np.zeros((n_slots,), np.int64)
+
+        # fidelity-wrapped leaves trace their reads inside the ShardCtx
+        self._scope = _fid_scope(mesh, n_slots)
+        self._scope1 = _fid_scope(mesh, 1)  # prefill runs at batch 1
+        self._prefill_jit = jax.jit(self._prefill_fn)
+        self._cont_jit = jax.jit(self._cont_fn, donate_argnums=(2,))
+        self._rounds: dict[int, object] = {}
+        self._compiled: dict[object, object] = {}
+        # pass one engine's table as ``costs`` to another so compared
+        # policies run on identical per-shape costs (no calibration noise);
+        # cost_scale prices analog readout speed (e.g. the ADC-resolution
+        # latency model a fidelity tier serves under) onto the virtual clock
+        self._costs: dict[object, float] = {} if costs is None else costs
+        self.cost_scale = float(cost_scale)
+        self._avals: dict[int, object] = {}
+
+    # ------------------------------ jitted fns ------------------------------
+
+    def _prefill_fn(self, params, x):
+        with self._scope1():
+            return lm.prefill(self.cfg, params, x)
+
+    def _cont_fn(self, params, x, caches, start):
+        with self._scope1():
+            return lm.prefill(self.cfg, params, x, caches=caches, start=start)
+
+    def _make_round(self, T: int):
+        cfg = self.cfg
+        sentinel = jnp.int32(self.spec.max_seq)
+
+        def round_fn(params, table, caches, tok, pos, active, steps_left):
+            caches = kv_pages.with_tables(caches, table)
+
+            def step(carry, i):
+                tok, pos, caches = carry
+                # a slot is live while the round index is under its per-slot
+                # budget; evicted slots and slots whose budget ran out decode
+                # at the sentinel position, where page lookups hit sentinel
+                # table entries so writes drop, and their (garbage) logits
+                # are discarded below — inert mid-round, no recompilation
+                live = active & (i < steps_left)
+                pos_eff = jnp.where(live, pos, sentinel)
+                with self._scope():
+                    logits, caches = lm.decode_step(cfg, params, tok, caches, pos_eff)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                nxt = jnp.where(live, nxt, tok)
+                return (nxt, pos + live.astype(jnp.int32), caches), nxt
+
+            (tok, pos, caches), toks = jax.lax.scan(
+                step, (tok, pos, caches), jnp.arange(T)
+            )
+            return kv_pages.strip_tables(caches), tok, pos, toks
+
+        return jax.jit(round_fn, donate_argnums=(2, 3, 4))
+
+    def _timed(self, key, jitted, args):
+        """AOT-compile on first sight of ``key`` and calibrate the shape's
+        steady-state cost (best of a few executions on dummy operands); every
+        execution charges that per-shape cost to the virtual clock. Compiles
+        never pollute latency metrics, and the clock is deterministic —
+        interleaving-order wall noise (cold caches, dispatch jitter) does not
+        leak into the policy comparison."""
+        c = self._compiled.get(key)
+        if c is None:
+            c = jitted.lower(*args).compile()
+            self._compiled[key] = c
+            if key not in self._costs:
+                self._costs[key] = self._calibrate(c, args)
+        out = c(*args)
+        jax.block_until_ready(out)
+        return out, self._costs[key] * self.cost_scale
+
+    def _calibrate(self, compiled, args, reps: int = 3) -> float:
+        best = float("inf")
+        for _ in range(reps):
+            # fresh zero operands each rep: donated buffers are consumed
+            dummies = jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), args)
+            t0 = time.perf_counter()
+            out = compiled(*dummies)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    # ------------------------------- prefill --------------------------------
+
+    def has_free_slot(self) -> bool:
+        return bool((~self.active).any())
+
+    def free_slot_count(self) -> int:
+        return int((~self.active).sum())
+
+    def will_chunk(self, L: int) -> bool:
+        """Whether a length-``L`` prompt prefills through the chunked
+        continuation (vs single-shot)."""
+        return bool(
+            self.chunk_size and L > self.chunk_size and lm.supports_chunked_prefill(self.cfg)
+        )
+
+    def start(self, tokens: np.ndarray) -> PrefillJob:
+        """Open a prefill job. Chunked when the prompt exceeds ``chunk_size``
+        and every block supports the continuation path; single-shot (the
+        bit-exact solo layout) otherwise."""
+        tokens = np.asarray(tokens, np.int32)
+        L = int(tokens.shape[0])
+        if L + 1 > self.spec.max_seq:
+            raise ValueError(f"prompt length {L} exceeds max_seq {self.spec.max_seq}")
+        chunked = self.will_chunk(L)
+        job = PrefillJob(tokens=tokens, chunked=chunked)
+        if chunked:
+            job.caches = jax.tree.map(
+                lambda a: jnp.zeros(a.shape, a.dtype), self._cache_avals(L)
+            )
+        return job
+
+    def _cache_avals(self, L: int):
+        avals = self._avals.get(L)
+        if avals is None:
+            x = jax.ShapeDtypeStruct((1, L), jnp.int32)
+            _, avals = jax.eval_shape(self._prefill_fn, self.params, x)
+            self._avals[L] = avals
+        return avals
+
+    def prefill_step(self, job: PrefillJob) -> float:
+        """Advance the job by one chunk (or the whole prompt when not
+        chunked). Returns the measured device seconds."""
+        L = job.length
+        if not job.chunked:
+            x = jnp.asarray(job.tokens)[None, :]
+            (logits, caches), dt = self._timed(
+                ("prefill", L), self._prefill_jit, (self.params, x)
+            )
+            job.logits, job.caches, job.done = logits, caches, L
+            return dt
+        C = min(self.chunk_size, L - job.done)
+        x = jnp.asarray(job.tokens[job.done : job.done + C])[None, :]
+        (logits, caches), dt = self._timed(
+            ("cont", C, L), self._cont_jit,
+            (self.params, x, job.caches, jnp.int32(job.done)),
+        )
+        job.logits, job.caches = logits, caches
+        job.done += C
+        return dt
+
+    def admit(self, job: PrefillJob) -> tuple[int, int]:
+        """Place a finished prefill into a free slot: allocate pages, scatter
+        the solo caches in, arm the slot. Returns (slot, first token)."""
+        assert job.finished
+        free = np.flatnonzero(~self.active)
+        if not len(free):
+            raise RuntimeError("no free decode slot")
+        slot = int(free[0])
+        L = job.length
+        self.alloc.ensure(slot, L)
+        solo = lm.unstack_caches(self.cfg, job.caches)
+        self.caches = kv_pages.admit_caches(
+            self.cfg, self.caches, self.spec, self.alloc.table[slot], slot, solo, L
+        )
+        first = int(jnp.argmax(job.logits[0]))
+        self.tok = self.tok.at[slot].set(first)
+        self.pos = self.pos.at[slot].set(L)
+        self.active[slot] = True
+        self.pos_host[slot] = L
+        return slot, first
+
+    # ------------------------------- decode ---------------------------------
+
+    def decode_round(self, T: int, steps=None) -> tuple[np.ndarray, float]:
+        """Run ``T`` scanned decode steps over all slots. ``steps`` (optional,
+        ``[n_slots]`` ints) caps each slot's live steps — a slot goes inert
+        mid-round once its budget is spent, so ``T`` can be sized for the
+        slot with the MOST remaining tokens without overrunning the others.
+        Returns the emitted tokens ``[T, n_slots]`` (garbage in dead columns
+        and past each slot's budget) and the measured device seconds."""
+        if steps is None:
+            steps = np.where(self.active, T, 0)
+        steps = np.minimum(np.asarray(steps, np.int64), T)
+        steps = np.where(self.active, steps, 0)
+        for s in np.flatnonzero(steps > 0):
+            self.alloc.ensure(int(s), int(self.pos_host[s]) + int(steps[s]))
+        table = self.alloc.device_table()
+        active = jnp.asarray(self.active)
+        steps_left = jnp.asarray(steps.astype(np.int32))
+        rf = self._rounds.get(T)
+        if rf is None:
+            rf = self._rounds[T] = self._make_round(T)
+        out, dt = self._timed(
+            ("round", T), rf,
+            (self.params, table, self.caches, self.tok, self.pos, active, steps_left),
+        )
+        self.caches, self.tok, self.pos, toks = out
+        self.pos_host += steps
+        return np.asarray(toks), dt
+
+    def evict(self, slot: int) -> None:
+        """Free a finished slot: pages return to the pool, the table row goes
+        all-sentinel (writes drop), the slot rejoins the free set."""
+        self.alloc.release(slot)
+        self.active[slot] = False
+        self.pos_host[slot] = 0

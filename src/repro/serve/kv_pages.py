@@ -1,0 +1,303 @@
+"""Paged KV-cache: page pools, slot page tables, and cache-layout discovery.
+
+The serving engine keeps every *sequence-axis* cache leaf (attention K/V,
+MLA c_kv/k_rope, zamba shared-attention K/V) in a fixed page pool
+``[P, page, *tail]`` shared by all decode slots, indexed through ONE page
+table ``table [n_slots, max_pages] int32`` common to every layer and leaf —
+a slot's logical cache structure is identical across layers, so one table
+row describes where all of its pages live. *State* leaves (mamba2 ssd/conv,
+xLSTM C/n/m, zamba per-unit mamba states) have no sequence axis; they are
+stored densely, one row per slot, and overwritten wholesale at admission.
+
+The sentinel value ``P`` (== number of physical pages) marks unallocated /
+evicted table entries: reads through it clip to an arbitrary finite page
+(masked by the per-slot position mask) and writes through it are dropped
+(``.at[...].set(mode="drop")``) — evicted slots are inert by construction,
+no branching in the decode step (see ``models.common`` paged primitives).
+
+Which leaf is which is *discovered*, not hard-coded: :func:`cache_layouts`
+runs ``jax.eval_shape`` over ``lm.prefill`` at two batch sizes and two
+prompt lengths and marks, per leaf, the axis that scales with each. This is
+also what fixes the old ``launch.serve`` cache-grow bug (it padded the first
+axis whose *size* happened to equal the prompt length — wrong whenever
+``batch == prompt_len``): :func:`grow_caches` pads the axis that provably
+scales with sequence length.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafLayout:
+    """Per-layer cache-leaf layout: which axes scale with batch / seq."""
+
+    batch_axis: int | None
+    seq_axis: int | None
+    shape: tuple  # per-layer shape at the probe (batch, seq) sizes
+    dtype: object
+
+    @property
+    def is_paged(self) -> bool:
+        return self.seq_axis is not None
+
+
+def _probe_caches(cfg, batch: int, seq: int):
+    """Per-layer cache avals out of ``lm.prefill`` (stacked count axis
+    dropped) — the layout single-shot prefill actually produces."""
+    if cfg.input_mode == "tokens":
+        x = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    else:
+        x = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.float32)
+    params = jax.eval_shape(lambda k: lm.init_params(cfg, k), jax.random.PRNGKey(0))
+    _, caches = jax.eval_shape(lambda p, xx: lm.prefill(cfg, p, xx), params, x)
+    out = []
+    for (name, count), cache in zip(cfg.pattern, caches):
+        if count > 1:  # drop the lax.scan layer-stack axis
+            cache = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), cache
+            )
+        out.append(cache)
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def cache_layouts(cfg):
+    """Per pattern group: a pytree of :class:`LeafLayout` (per-layer shapes).
+
+    Axes are identified by differencing ``jax.eval_shape`` probes at two
+    batch sizes and two prompt lengths — principled, no size-sniffing."""
+    B0, B1, S0, S1 = 2, 3, 8, 16
+    base = _probe_caches(cfg, B0, S0)
+    seq = _probe_caches(cfg, B0, S1)
+    bat = _probe_caches(cfg, B1, S0)
+
+    def one(a, a_s, a_b):
+        sax = [i for i, (x, y) in enumerate(zip(a.shape, a_s.shape)) if x != y]
+        bax = [i for i, (x, y) in enumerate(zip(a.shape, a_b.shape)) if x != y]
+        if len(sax) > 1 or len(bax) > 1:
+            raise ValueError(f"ambiguous cache leaf layout: {a.shape}")
+        return LeafLayout(
+            batch_axis=bax[0] if bax else None,
+            seq_axis=sax[0] if sax else None,
+            shape=a.shape,
+            dtype=a.dtype,
+        )
+
+    return [jax.tree.map(one, a, s, b) for a, s, b in zip(base, seq, bat)]
+
+
+def _map_layers(fn, cfg, layouts, caches, *rest):
+    """Map ``fn(layout, cache_leaf, *rest_leaves)`` over the decode 'list'
+    cache layout (count>1 groups are python lists of per-layer trees);
+    ``rest`` trees share that layout."""
+    out = []
+    for gi, ((name, count), lay, cache) in enumerate(zip(cfg.pattern, layouts, caches)):
+        r = [x[gi] for x in rest]
+        if count == 1:
+            out.append(jax.tree.map(fn, lay, cache, *r))
+        else:
+            out.append([
+                jax.tree.map(fn, lay, c, *[y[i] for y in r])
+                for i, c in enumerate(cache)
+            ])
+    return out
+
+
+def grow_caches(cfg, caches, to_len: int):
+    """Zero-pad every sequence axis of a decode-layout cache tree to
+    ``to_len`` (the spec-driven replacement for the old shape-sniffing
+    ``launch.serve`` grow)."""
+    layouts = cache_layouts(cfg)
+
+    def one(lay: LeafLayout, leaf):
+        if lay.seq_axis is None or leaf.shape[lay.seq_axis] >= to_len:
+            return leaf
+        pads = [(0, 0)] * leaf.ndim
+        pads[lay.seq_axis] = (0, to_len - leaf.shape[lay.seq_axis])
+        return jnp.pad(leaf, pads)
+
+    return _map_layers(one, cfg, layouts, caches)
+
+
+# ------------------------------ page pools ----------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """Geometry of the shared page pool."""
+
+    n_slots: int
+    page: int  # tokens per page
+    max_pages: int  # logical pages per slot (max_seq = page * max_pages)
+    num_pages: int  # physical pages in the pool (the sentinel value)
+
+    @property
+    def max_seq(self) -> int:
+        return self.page * self.max_pages
+
+
+def pool_spec(n_slots: int, max_seq: int, page: int = 16, num_pages: int | None = None) -> PoolSpec:
+    if max_seq % page:
+        raise ValueError(f"max_seq {max_seq} not a multiple of page {page}")
+    max_pages = max_seq // page
+    if num_pages is None:
+        num_pages = n_slots * max_pages  # fully backed
+    return PoolSpec(n_slots, page, max_pages, num_pages)
+
+
+def make_paged_caches(cfg, spec: PoolSpec, sharding_fn=None):
+    """Device cache trees in the decode list layout: paged leaves become
+    zeroed pools ``[P, page, *tail]``, state leaves ``n_slots`` dense rows.
+    ``sharding_fn(layout, shape, dtype) -> Sharding | None`` optionally
+    places each leaf (see ``distributed.sharding.page_pool_specs``)."""
+    layouts = cache_layouts(cfg)
+
+    def one(lay: LeafLayout):
+        if lay.is_paged:
+            if (lay.batch_axis, lay.seq_axis) != (0, 1):
+                raise NotImplementedError(
+                    f"paged leaves must be [B, S, ...]; got batch axis "
+                    f"{lay.batch_axis}, seq axis {lay.seq_axis} for {lay.shape}"
+                )
+            shape = (spec.num_pages, spec.page) + tuple(lay.shape[2:])
+        else:
+            shape = list(lay.shape)
+            shape[lay.batch_axis] = spec.n_slots
+            shape = tuple(shape)
+        z = jnp.zeros(shape, lay.dtype)
+        if sharding_fn is not None:
+            sh = sharding_fn(lay, shape, lay.dtype)
+            if sh is not None:
+                z = jax.device_put(z, sh)
+        return z
+
+    out = []
+    for (name, count), lay in zip(cfg.pattern, layouts):
+        if count == 1:
+            out.append(jax.tree.map(one, lay))
+        else:
+            out.append([jax.tree.map(one, lay) for _ in range(count)])
+    return out
+
+
+# The cache dicts blocks consume at decode time: the page table rides next to
+# the leaf entries of each attention "unit" dict ({"k","v"} for GQA-style
+# blocks including the zamba shared attention, {"c_kv","k_rope"} for MLA).
+_UNIT_KEYS = (frozenset({"k", "v"}), frozenset({"c_kv", "k_rope"}))
+
+
+def with_tables(cache, table):
+    """Inject the shared page table into every paged cache unit dict (the
+    blocks detect pagedness by the ``"table"`` key). Call INSIDE the jitted
+    round: the table is a separate (non-donated) argument, so the donated
+    cache buffers are never aliased against it."""
+    if isinstance(cache, dict):
+        if frozenset(cache) - {"table"} in _UNIT_KEYS:
+            return dict(cache, table=table)
+        return {k: with_tables(v, table) for k, v in cache.items()}
+    if isinstance(cache, (list, tuple)):
+        return type(cache)(with_tables(c, table) for c in cache)
+    return cache
+
+
+def strip_tables(cache):
+    """Drop injected page tables — restores the donatable cache tree."""
+    if isinstance(cache, dict):
+        return {k: strip_tables(v) for k, v in cache.items() if k != "table"}
+    if isinstance(cache, (list, tuple)):
+        return type(cache)(strip_tables(c) for c in cache)
+    return cache
+
+
+# ------------------------------ allocation ----------------------------------
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+class PageAllocator:
+    """Host-side page accounting: one shared table, a free list, pages
+    recycled on release. The device only ever sees :meth:`device_table`."""
+
+    def __init__(self, spec: PoolSpec):
+        self.spec = spec
+        self.sentinel = spec.num_pages
+        self.table = np.full((spec.n_slots, spec.max_pages), self.sentinel, np.int32)
+        self._free = list(range(spec.num_pages - 1, -1, -1))
+        self._used = [0] * spec.n_slots
+
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, length: int) -> int:
+        return -(-length // self.spec.page)
+
+    def ensure(self, slot: int, length: int) -> None:
+        """Allocate pages so positions ``[0, length)`` of ``slot`` are backed."""
+        need = self.pages_for(length)
+        if need > self.spec.max_pages:
+            raise ValueError(f"length {length} exceeds max_seq {self.spec.max_seq}")
+        while self._used[slot] < need:
+            if not self._free:
+                raise OutOfPages(f"page pool exhausted ({self.spec.num_pages} pages)")
+            self.table[slot, self._used[slot]] = self._free.pop()
+            self._used[slot] += 1
+
+    def release(self, slot: int) -> None:
+        """Recycle a finished slot's pages; its table row returns to the
+        all-sentinel state (writes through it drop — the slot is inert)."""
+        for j in range(self._used[slot]):
+            self._free.append(int(self.table[slot, j]))
+        self.table[slot, : self._used[slot]] = self.sentinel
+        self._used[slot] = 0
+
+    def device_table(self):
+        return jnp.asarray(self.table)
+
+
+# ----------------------------- admit scatter --------------------------------
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _set_pages(pool, rows, chunks):
+    return pool.at[rows].set(chunks)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("axis",))
+def _set_row(arr, idx, val, axis: int):
+    ix = (slice(None),) * axis + (idx,)
+    return arr.at[ix].set(val)
+
+
+def admit_caches(cfg, caches, spec: PoolSpec, table_row: np.ndarray, slot: int,
+                 solo_caches, length: int):
+    """Scatter a solo-prefilled request's caches (batch 1, seq ``length``,
+    decode list layout) into slot ``slot`` of the paged cache trees. Paged
+    leaves land on the pages ``table_row`` assigns; state leaves overwrite
+    the slot's dense row."""
+    layouts = cache_layouts(cfg)
+    npages = -(-length // spec.page)
+    rows = jnp.asarray(table_row[:npages].astype(np.int32))
+
+    def one(lay: LeafLayout, pool, solo):
+        if lay.is_paged:
+            pad = npages * spec.page - length
+            if pad:
+                pads = [(0, 0)] * solo.ndim
+                pads[1] = (0, pad)
+                solo = jnp.pad(solo, pads)
+            chunks = solo[0].reshape((npages, spec.page) + solo.shape[2:])
+            return _set_pages(pool, rows, chunks)
+        return _set_row(pool, slot, jnp.take(solo, 0, axis=lay.batch_axis),
+                        axis=lay.batch_axis)
+
+    return _map_layers(one, cfg, layouts, caches, solo_caches)

@@ -2,7 +2,17 @@
 
 Weights are served from the sliced crossbar state (dequantized once outside
 the step — inference reads the same cells training wrote). ``decode_step``
-is the unit the decode_32k / long_500k dry-run cells lower.
+is the unit the decode_32k / long_500k dry-run cells lower. These builders
+serve ONE request shape at a time; multi-request serving with mixed lengths
+is ``serve.engine`` + ``serve.scheduler`` (continuous batching over the
+``serve.kv_pages`` paged KV-cache), which drives the same underlying
+``lm.prefill`` / ``lm.decode_step`` so both paths produce identical tokens.
+
+SLA tiers ride :func:`fidelity_params`: call it several times with different
+ADC resolutions (e.g. adc9 premium / adc6 bulk) over the SAME ``sliced``
+plane tree and hand each wrapped tree to its own serving engine — the
+scheduler routes tier-tagged requests accordingly and the bench records the
+per-tier fidelity/throughput frontier (``launch.serve --trace``).
 
 Finite-ADC serving: pass a tree produced by :func:`fidelity_params` instead
 of the plain dequantized params and every operand-eligible linear reads the

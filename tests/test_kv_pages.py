@@ -1,0 +1,158 @@
+"""Unit tests for the paged KV-cache layer (serve.kv_pages).
+
+Covers layout discovery (which cache axes scale with batch/seq), the
+spec-driven ``grow_caches`` (including the batch == prompt_len aliasing case
+the old shape-sniffing grow corrupted), the paged gather/scatter primitives
+with sentinel drop semantics, and host-side page allocation/recycling.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import lm
+from repro.models.common import LMConfig, SSMCfg, paged_gather, paged_scatter
+from repro.serve import kv_pages
+
+
+def _mk_cfg(pattern, **kw):
+    base = dict(
+        arch_id="kv-test",
+        d_model=32,
+        n_layers=2,
+        vocab=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=8,
+        d_ff=64,
+        dtype=jnp.float32,
+        pattern=pattern,
+    )
+    base.update(kw)
+    return LMConfig(**base)
+
+
+def test_cache_layouts_attn():
+    cfg = _mk_cfg((("dense", 2),))
+    (layouts,) = kv_pages.cache_layouts(cfg)
+    for leaf in jax.tree.leaves(layouts):
+        assert leaf.batch_axis == 0
+        assert leaf.seq_axis == 1  # K/V caches are [B, S, KV, hd]
+
+
+def test_cache_layouts_mamba2_state_is_not_paged():
+    cfg = _mk_cfg(
+        (("mamba2", 2),),
+        ssm=SSMCfg(d_state=16, d_conv=4, expand=2, head_dim=8, chunk=8),
+    )
+    (layouts,) = kv_pages.cache_layouts(cfg)
+    for leaf in jax.tree.leaves(layouts):
+        assert leaf.seq_axis is None  # ssd/conv state has no sequence axis
+        assert leaf.batch_axis is not None
+
+
+def test_grow_caches_pads_seq_axis_only():
+    cfg = _mk_cfg((("dense", 2),))
+    B, L = 2, 8
+    x = jnp.zeros((B, L), jnp.int32)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    _, caches = jax.jit(lambda p, xx: lm.prefill(cfg, p, xx))(params, x)
+    caches = lm.unstack_caches(cfg, caches)
+    grown = kv_pages.grow_caches(cfg, caches, 32)
+    for leaf in jax.tree.leaves(grown):
+        assert leaf.shape[0] == B
+        assert leaf.shape[1] == 32
+
+
+def test_grow_caches_batch_equals_prompt_len():
+    """The regression the spec-driven grow exists for: with batch ==
+    prompt_len every axis *size-sniffs* as the sequence axis; the layout
+    probe must still pad axis 1 and leave the batch axis alone."""
+    cfg = _mk_cfg((("dense", 2),))
+    B = L = 4
+    x = jnp.arange(B * L, dtype=jnp.int32).reshape(B, L) % cfg.vocab
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    _, caches = jax.jit(lambda p, xx: lm.prefill(cfg, p, xx))(params, x)
+    caches = lm.unstack_caches(cfg, caches)
+    grown = kv_pages.grow_caches(cfg, caches, 16)
+    for ref, leaf in zip(jax.tree.leaves(caches), jax.tree.leaves(grown)):
+        assert leaf.shape[0] == B  # batch axis untouched
+        assert leaf.shape[1] == 16  # seq axis padded
+        np.testing.assert_array_equal(
+            np.asarray(leaf[:, :L]), np.asarray(ref)
+        )  # prefix preserved, not transposed into the pad
+
+
+def test_pool_spec_validation():
+    with pytest.raises(ValueError, match="multiple"):
+        kv_pages.pool_spec(2, 17, page=4)
+    spec = kv_pages.pool_spec(2, 16, page=4)
+    assert spec.max_pages == 4
+    assert spec.num_pages == 8  # fully backed by default
+    assert spec.max_seq == 16
+
+
+def test_paged_gather_scatter_roundtrip():
+    spec = kv_pages.pool_spec(2, 16, page=4)
+    alloc = kv_pages.PageAllocator(spec)
+    alloc.ensure(0, 6)
+    alloc.ensure(1, 3)
+    pool = jnp.zeros((spec.num_pages, spec.page, 3), jnp.float32)
+    table = alloc.device_table()
+    rng = np.random.default_rng(0)
+    writes = {0: list(range(6)), 1: list(range(3))}
+    want = np.zeros((2, spec.max_seq, 3), np.float32)
+    for pos in range(6):
+        new = jnp.asarray(rng.normal(size=(2, 1, 3)), jnp.float32)
+        p = jnp.asarray([pos, pos], jnp.int32)
+        pool = paged_scatter(pool, table, new, p)
+        for s in (0, 1):
+            if pos in writes[s]:
+                want[s, pos] = np.asarray(new[s, 0])
+    # slot 1 only has pages for 3 tokens: positions 4..5 resolved to the
+    # sentinel row and were dropped (not written anywhere)
+    got = np.asarray(paged_gather(pool, table))
+    np.testing.assert_array_equal(got[0, :6], want[0, :6])
+    np.testing.assert_array_equal(got[1, :3], want[1, :3])
+    np.testing.assert_array_equal(got[1, 4:6], 0.0)
+
+
+def test_paged_scatter_sentinel_row_drops():
+    spec = kv_pages.pool_spec(2, 8, page=4)
+    pool = jnp.zeros((spec.num_pages, spec.page, 2), jnp.float32)
+    table = jnp.full((2, 2), spec.num_pages, jnp.int32)  # all-sentinel: dead
+    new = jnp.ones((2, 1, 2), jnp.float32)
+    out = paged_scatter(pool, table, new, jnp.asarray([0, 5], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_allocator_recycles_and_exhausts():
+    spec = kv_pages.pool_spec(2, 16, page=4, num_pages=5)
+    alloc = kv_pages.PageAllocator(spec)
+    alloc.ensure(0, 16)  # 4 pages
+    assert alloc.free_pages() == 1
+    alloc.ensure(1, 4)  # the last page
+    assert alloc.free_pages() == 0
+    with pytest.raises(kv_pages.OutOfPages):
+        alloc.ensure(1, 8)
+    pages0 = set(alloc.table[0, :4].tolist())
+    alloc.release(0)
+    assert alloc.free_pages() == 4
+    assert (alloc.table[0] == alloc.sentinel).all()
+    alloc.ensure(1, 16)  # recycled pages back a different slot
+    assert set(alloc.table[1, 1:4].tolist()) <= pages0
+    # ensure() is idempotent at the current length
+    used_before = alloc.free_pages()
+    alloc.ensure(1, 16)
+    assert alloc.free_pages() == used_before
+
+
+def test_with_tables_strip_tables_roundtrip():
+    cache = [{"k": {"q": jnp.zeros((2, 2))}, "v": {"q": jnp.zeros((2, 2))}},
+             {"ssd": jnp.zeros((2, 3))}]
+    table = jnp.zeros((2, 4), jnp.int32)
+    tagged = kv_pages.with_tables(cache, table)
+    assert "table" in tagged[0]
+    assert "table" not in tagged[1]  # state dict is not a KV unit
+    stripped = kv_pages.strip_tables(tagged)
+    assert jax.tree.structure(stripped) == jax.tree.structure(cache)
