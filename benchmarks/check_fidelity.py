@@ -11,7 +11,12 @@ numerics* the fidelity engine produces. A fresh sweep fails the job when
    engine's correctness anchor (bit-identical in the f32-exact regime; at
    model scale only DAC rounding separates the runs, and its effect
    compounds at most linearly through the weight updates);
-3. (with ``--baseline``) a shared trajectory's overlapping step prefix
+3. the device-noise axis (``dev_*`` rows) is missing, non-finite, its
+   all-ideal-DeviceModel anchor drifts (``dev_ideal`` must equal
+   ``dev_wn0`` exactly — an ideal device compiles the exact ideal path), or
+   Tiki-Taka stops beating plain SGD at any noise level (the noise-aware
+   training-rule claim the sweep exists to demonstrate);
+4. (with ``--baseline``) a shared trajectory's overlapping step prefix
    drifts from the committed record beyond ``--drift-tol`` relative — the
    sweep is seeded/deterministic, so prefix drift means either an engine
    numerics change or unpinned jax/numpy drift (exactly what the weekly
@@ -25,23 +30,25 @@ Refreshing the baseline after an intended numerics change::
 from __future__ import annotations
 
 import argparse
-import json
 import math
 import sys
+
+from .gate_common import (finite, load_json, prefix_drift, refresh_hint,
+                          run_gate)
 
 IDEAL_KEY = "fwdideal_bwdideal"
 FLOAT_KEY = "float"
 
-REFRESH_HINT = (
-    "If this change is intended (an engine numerics change, a sweep-config "
-    "change), refresh the baseline:\n"
-    "    JAX_PLATFORMS=cpu python -m benchmarks.fig9_slice_crs --fidelity\n"
-    "    git add BENCH_fidelity.json\nand commit it with the change."
+REFRESH_HINT = refresh_hint(
+    "JAX_PLATFORMS=cpu python -m benchmarks.fig9_slice_crs --fidelity",
+    "BENCH_fidelity.json",
+    "this change (an engine numerics change, a sweep-config change)",
 )
 
 
 def _trajectories(rec: dict) -> dict:
-    return {k: v["losses"] for k, v in rec.items() if k != "_meta"}
+    return {k: v["losses"] for k, v in rec.items()
+            if k != "_meta" and "losses" in v}
 
 
 def check_fresh(fresh: dict, ideal_tol: float) -> list[str]:
@@ -78,7 +85,44 @@ def check_fresh(fresh: dict, ideal_tol: float) -> list[str]:
     return failures
 
 
+def check_device(fresh: dict) -> list[str]:
+    """The ``dev_*`` device-noise axis: presence, finiteness, the all-ideal
+    DeviceModel anchor, and the Tiki-Taka-beats-SGD claim."""
+    rows = {k: v for k, v in fresh.items() if k.startswith("dev_")}
+    if not rows:
+        return ["fresh record has no device-noise rows (dev_* keys) — the "
+                "fig9 DeviceModel axis silently dropped out of the sweep"]
+    failures = [f"{k}: final_loss is not finite — the noisy-device loop "
+                f"diverged or produced NaN"
+                for k, v in sorted(rows.items()) if not finite(v.get("final_loss"))]
+    ideal, wn0 = rows.get("dev_ideal"), rows.get("dev_wn0")
+    if not (ideal and wn0):
+        failures.append("device axis is missing its dev_ideal/dev_wn0 anchor "
+                        "pair — the ideal-DeviceModel identity is ungated")
+    elif finite(ideal["final_loss"]) and ideal["final_loss"] != wn0["final_loss"]:
+        failures.append(
+            f"dev_ideal ({ideal['final_loss']:.6f}) != dev_wn0 "
+            f"({wn0['final_loss']:.6f}) — an all-ideal DeviceModel() no "
+            f"longer compiles the exact device=None path"
+        )
+    for key in sorted(rows):
+        tt = rows.get(key + "_tt")
+        if tt is None or not (finite(rows[key].get("final_loss"))
+                              and finite(tt.get("final_loss"))):
+            continue
+        if tt["final_loss"] >= rows[key]["final_loss"]:
+            failures.append(
+                f"{key}_tt ({tt['final_loss']:.4f}) did not beat plain SGD "
+                f"({rows[key]['final_loss']:.4f}) — the Tiki-Taka "
+                f"momentum-on-device rule lost its noise advantage"
+            )
+    return failures
+
+
 def check_baseline(base: dict, fresh: dict, drift_tol: float) -> list[str]:
+    # no check_modes here, unlike the timing gates: the sweep is
+    # deterministic and smoke only shortens it, so a smoke run is a literal
+    # prefix of the full baseline and the overlap comparison stays valid
     failures: list[str] = []
     bt, ft = _trajectories(base), _trajectories(fresh)
     shared = sorted(set(bt) & set(ft))
@@ -95,17 +139,14 @@ def check_baseline(base: dict, fresh: dict, drift_tol: float) -> list[str]:
                 f"{meta_f.get(field)!r}) — trajectories are not comparable"
             ]
     for key in shared:
-        for i, (b, f) in enumerate(zip(bt[key], ft[key])):
-            if not (math.isfinite(b) and math.isfinite(f)):
-                continue  # finiteness is check_fresh's job
-            rel = abs(f - b) / (1 + abs(b))
-            if rel > drift_tol:
-                failures.append(
-                    f"{key}: step {i} loss {b:.6f} -> {f:.6f} "
-                    f"(rel drift {rel:.2e} > {drift_tol:.0e}) — deterministic "
-                    f"sweep prefix changed (engine regression or jax/numpy drift)"
-                )
-                break
+        hit = prefix_drift(bt[key], ft[key], drift_tol)
+        if hit is not None:
+            i, rel = hit
+            failures.append(
+                f"{key}: step {i} loss {bt[key][i]:.6f} -> {ft[key][i]:.6f} "
+                f"(rel drift {rel:.2e} > {drift_tol:.0e}) — deterministic "
+                f"sweep prefix changed (engine regression or jax/numpy drift)"
+            )
     return failures
 
 
@@ -118,27 +159,33 @@ def main(argv=None) -> int:
                     help="per-step |float - ideal| budget, scaled by (1 + step)")
     ap.add_argument("--drift-tol", type=float, default=1e-2,
                     help="max relative per-step drift vs the committed baseline")
+    ap.add_argument("--device-only", action="store_true",
+                    help="gate only the dev_* device-noise rows (the record "
+                    "from fig9_slice_crs --device has no ADC trajectories)")
     args = ap.parse_args(argv)
 
-    with open(args.fresh) as f:
-        fresh = json.load(f)
-    failures = check_fresh(fresh, args.ideal_tol)
+    fresh = load_json(args.fresh)
+    if args.device_only:
+        nd = len([k for k in fresh if k.startswith("dev_")])
+        return run_gate(
+            "DEVICE", check_device(fresh),
+            f"device gate OK: {nd} device rows finite, dev_ideal == dev_wn0 "
+            f"anchor exact, tiki-taka beats sgd at every noise level",
+            REFRESH_HINT,
+        )
+    failures = check_fresh(fresh, args.ideal_tol) + check_device(fresh)
     if args.baseline is not None:
-        with open(args.baseline) as f:
-            base = json.load(f)
-        failures += check_baseline(base, fresh, args.drift_tol)
+        failures += check_baseline(load_json(args.baseline), fresh, args.drift_tol)
 
-    if failures:
-        print("FIDELITY GATE FAILED:")
-        for line in failures:
-            print(f"  - {line}")
-        print(REFRESH_HINT)
-        return 1
     n = len(_trajectories(fresh))
-    print(f"fidelity gate OK: {n} trajectories finite, ideal-ADC anchor within "
-          f"{args.ideal_tol} * (1 + step)"
-          + ("" if args.baseline is None else ", no baseline prefix drift"))
-    return 0
+    nd = len([k for k in fresh if k.startswith("dev_")])
+    return run_gate(
+        "FIDELITY", failures,
+        f"fidelity gate OK: {n} trajectories finite, ideal-ADC anchor within "
+        f"{args.ideal_tol} * (1 + step), {nd} device rows (anchor + tiki-taka)"
+        + ("" if args.baseline is None else ", no baseline prefix drift"),
+        REFRESH_HINT,
+    )
 
 
 if __name__ == "__main__":

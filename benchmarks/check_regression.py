@@ -30,41 +30,24 @@ Refreshing the baseline after an intended schedule change::
 from __future__ import annotations
 
 import argparse
-import json
 import sys
+
+from .gate_common import check_modes, load_json, refresh_hint, run_gate
 
 PACKED_TIMING_KEYS = ("us_packed", "us_packed_ref", "us_fused_ref", "us_fused_kernel")
 MIN_SHARED_CASES = 3  # fewer ⇒ the baseline is stale and the gate vacuous
 
-REFRESH_HINT = (
-    "If this slowdown is intended (e.g. a schedule change), refresh the "
-    "baseline:\n    JAX_PLATFORMS=cpu BENCH_SMOKE=1 python -m benchmarks.kernels"
-    "\n    git add BENCH_kernels.json\nand commit it with the kernel change."
+REFRESH_HINT = refresh_hint(
+    "JAX_PLATFORMS=cpu BENCH_SMOKE=1 python -m benchmarks.kernels",
+    "BENCH_kernels.json", "this slowdown (e.g. a schedule change)",
 )
 
 
-def check_modes(base: dict, fresh: dict) -> list[str]:
-    """Refuse cross-mode comparisons (see module docstring)."""
-    bs = base.get("_meta", {}).get("smoke")
-    fs = fresh.get("_meta", {}).get("smoke")
-    if bs is True and fs is False:
-        return [
-            "the committed baseline is a SMOKE record (_meta.smoke=true) but "
-            "this is a non-smoke run — refusing to gate across modes. Refresh "
-            "the full baseline:\n    JAX_PLATFORMS=cpu python -m benchmarks.kernels"
-            "\n    git add BENCH_kernels.json"
-        ]
-    if bs != fs:
-        return [
-            f"_meta.smoke mismatch: baseline={bs} fresh={fs} — smoke and full "
-            "runs use different shapes/iters; gate like against like "
-            "(BENCH_kernels.smoke.json is the smoke baseline)"
-        ]
-    return []
-
-
 def compare(base: dict, fresh: dict, threshold: float) -> list[str]:
-    failures = check_modes(base, fresh)
+    failures = check_modes(
+        base, fresh, what="runs",
+        full_refresh="JAX_PLATFORMS=cpu python -m benchmarks.kernels"
+                     "\n    git add BENCH_kernels.json")
     if failures:
         return failures
     shared = [k for k in base if k != "_meta" and k in fresh]
@@ -124,22 +107,17 @@ def main(argv=None) -> int:
                     help="max machine-normalized slowdown (default 1.3)")
     args = ap.parse_args(argv)
 
-    with open(args.baseline) as f:
-        base = json.load(f)
-    with open(args.fresh) as f:
-        fresh = json.load(f)
+    base = load_json(args.baseline)
+    fresh = load_json(args.fresh)
 
     failures = compare(base, fresh, args.threshold)
-    if failures:
-        print("PERF REGRESSION GATE FAILED:")
-        for line in failures:
-            print(f"  - {line}")
-        print(REFRESH_HINT)
-        return 1
     n = len([k for k in base if k != '_meta' and k in fresh])
-    print(f"perf gate OK: {n} shared cases within {args.threshold}x "
-          f"(machine-normalized), no dots_per_tile growth")
-    return 0
+    return run_gate(
+        "PERF REGRESSION", failures,
+        f"perf gate OK: {n} shared cases within {args.threshold}x "
+        f"(machine-normalized), no dots_per_tile growth",
+        REFRESH_HINT,
+    )
 
 
 if __name__ == "__main__":

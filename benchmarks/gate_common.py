@@ -1,0 +1,79 @@
+"""Shared machinery for the CI bench gates (``check_regression`` /
+``check_fidelity`` / ``check_serve`` and the device gate).
+
+Every gate follows the same protocol: load one or two committed/fresh JSON
+records, refuse cross-mode (smoke vs full) comparisons, accumulate
+human-readable failure lines, and exit 1 with a refresh hint when any
+survive. This module is that protocol, so each ``check_*`` script carries
+only the record-specific checks.
+"""
+from __future__ import annotations
+
+import json
+import math
+
+
+def load_json(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def finite(v) -> bool:
+    """True when ``v`` is a real, finite number (bools excluded)."""
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and math.isfinite(v)
+
+
+def refresh_hint(cmd: str, artifact: str, reason: str = "this change") -> str:
+    """The standard trailer telling a developer how to bless an intended
+    numerics/schedule change: rerun the producer, commit the artifact."""
+    return (
+        f"If {reason} is intended, refresh the baseline:\n"
+        f"    {cmd}\n    git add {artifact}\nand commit it with the change."
+    )
+
+
+def check_modes(base: dict, fresh: dict, what: str = "runs",
+                full_refresh: str | None = None) -> list[str]:
+    """Refuse smoke-vs-full comparisons: smoke shrinks shapes/iters/traces,
+    so cross-mode ratios are meaningless and the gate would silently pass on
+    garbage. ``full_refresh`` (a command) upgrades the smoke-baseline-gating-
+    a-full-run case into an actionable message."""
+    bs = base.get("_meta", {}).get("smoke")
+    fs = fresh.get("_meta", {}).get("smoke")
+    if bs == fs:
+        return []
+    if bs is True and fs is False and full_refresh:
+        return [
+            "the committed baseline is a SMOKE record (_meta.smoke=true) but "
+            "this is a non-smoke run — refusing to gate across modes. Refresh "
+            f"the full baseline:\n    {full_refresh}"
+        ]
+    return [
+        f"_meta.smoke mismatch: baseline={bs} fresh={fs} — smoke and full "
+        f"{what} are not comparable; gate like against like"
+    ]
+
+
+def prefix_drift(base_traj: list, fresh_traj: list, drift_tol: float) -> tuple[int, float] | None:
+    """First step where a deterministic trajectory's overlapping prefix
+    drifts beyond ``drift_tol`` relative — ``(step, rel)`` or ``None``.
+    Non-finite entries are skipped (finiteness is a separate check)."""
+    for i, (b, f) in enumerate(zip(base_traj, fresh_traj)):
+        if not (finite(b) and finite(f)):
+            continue
+        rel = abs(f - b) / (1 + abs(b))
+        if rel > drift_tol:
+            return i, rel
+    return None
+
+
+def run_gate(name: str, failures: list[str], ok_msg: str, hint: str) -> int:
+    """Print the verdict, return the process exit code."""
+    if failures:
+        print(f"{name} GATE FAILED:")
+        for line in failures:
+            print(f"  - {line}")
+        print(hint)
+        return 1
+    print(ok_msg)
+    return 0

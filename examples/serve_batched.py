@@ -19,7 +19,7 @@ import argparse
 
 import jax
 
-from repro import configs
+from repro import configs, plan
 from repro.models import lm
 from repro.optim import PantherConfig, panther
 from repro.serve import Engine, fidelity_params, run_trace, summarize, synth_trace
@@ -56,7 +56,9 @@ def main():
     engines, trees = {}, {}
     for tier, adc in tier_defs.items():
         # both trees read the SAME sliced planes — only the ADC differs
-        trees[tier] = fidelity_params(params, sliced, fid=presets[adc])
+        tier_plan = plan.resolve_plan(
+            params, plan.default_rules(PantherConfig(), fidelity=presets[adc]))
+        trees[tier] = fidelity_params(params, sliced, plan=tier_plan)
         engines[tier] = Engine(
             cfg, trees[tier], n_slots=4, max_seq=48, page=16, costs=costs,
             cost_scale=adc_latency_factor(presets[adc].adc_bits_fwd),

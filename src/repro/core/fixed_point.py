@@ -7,6 +7,7 @@ constant through training.
 """
 from __future__ import annotations
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -105,6 +106,61 @@ def counter_u01(r: jax.Array, c: jax.Array, k0: jax.Array, k1: jax.Array) -> jax
     h = (r * jnp.int32(_GOLDEN)) ^ (c * jnp.int32(_FMIX_C2)) ^ k0
     h = _fmix32(h ^ k1)
     return jax.lax.shift_right_logical(h, 8).astype(jnp.float32) * jnp.float32(_U24)
+
+
+def counter_gauss(r: jax.Array, c: jax.Array, k0: jax.Array, k1: jax.Array) -> jax.Array:
+    """Standard-normal f32 noise for elements at (row ``r``, col ``c``) under
+    key words ``(k0, k1)`` — Box-Muller over two decorrelated counter-hash
+    U[0,1) draws. Same int32-only counter discipline as :func:`counter_u01`,
+    so a Pallas kernel body (iota coordinates) and the jnp reference
+    (meshgrid coordinates) produce bit-identical Gaussians for any blocking.
+    ``u1 <= 1 - 2^-24`` by construction, so ``log1p(-u1)`` stays finite."""
+    u1 = counter_u01(r, c, k0, k1)
+    # second independent stream: remix both key words through the finalizer
+    u2 = counter_u01(r, c, k0 ^ jnp.int32(_GOLDEN), _fmix32(k1 ^ jnp.int32(_FMIX_C1)))
+    rad = jnp.sqrt(-2.0 * jnp.log1p(-u1))
+    return rad * jnp.cos(jnp.float32(2.0 * jnp.pi) * u2)
+
+
+# fold_in tag separating the device write-noise key stream from the
+# stochastic-rounding stream (fig9 runs deterministic rounding, so the write
+# noise cannot piggyback the rounding draw): dkey = fold_in(key, this)
+WRITE_NOISE_FOLD = 0x57A9
+
+
+def device_pattern_words(seed: int, salt: int) -> tuple[int, int]:
+    """Two static int32 key words for a *frozen* device pattern (stuck-cell
+    masks, per-ADC-channel read offsets) from a Python-int seed and a site
+    salt, computed at trace time. Plain wrapping uint32 arithmetic so kernel
+    and reference agree for any blocking; the counter hash's fmix32
+    avalanche does the real mixing downstream."""
+    w0 = (seed * 0x9E3779B9 + salt * 0x85EBCA6B + 0xC2B2AE35) & 0xFFFFFFFF
+    w1 = (seed ^ (salt * 0x27D4EB2F) ^ 0x165667B1) & 0xFFFFFFFF
+    to_i32 = lambda w: int(np.array(w, np.uint32).astype(np.int32))
+    return to_i32(w0), to_i32(w1)
+
+
+def counter_gauss_array(key: jax.Array, shape: tuple) -> jax.Array:
+    """Counter-mode standard-normal array of ``shape`` — the Gaussian
+    analogue of :func:`counter_uniform` (same trailing-two-dims element grid,
+    same per-layer ``fold_in(key, l)`` derivation for leading stack dims), so
+    the jnp reference draws the same write-noise bits as the stacked fused
+    OPA kernel launch for a given leaf key."""
+    gs = shape[-2:] if len(shape) >= 2 else (1,) + tuple(shape)
+    r = jax.lax.broadcasted_iota(jnp.int32, gs, 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, gs, 1)
+    lead = shape[:-2] if len(shape) >= 2 else ()
+    L = 1
+    for d in lead:
+        L *= d
+    if not lead:
+        ks = counter_key_scalars(key)
+        return counter_gauss(r, c, ks[0], ks[1]).reshape(shape)
+    keys = jax.vmap(lambda l: counter_key_scalars(jax.random.fold_in(key, l)))(
+        jnp.arange(L)
+    )  # [L, 2]
+    g = jax.vmap(lambda ks: counter_gauss(r, c, ks[0], ks[1]))(keys)
+    return g.reshape(shape)
 
 
 def counter_uniform(key: jax.Array, shape: tuple) -> jax.Array:

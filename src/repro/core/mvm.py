@@ -141,6 +141,15 @@ def fidelity_read(
     the shard_map and the exponent enters replicated, so every shard
     quantizes against the same activation range and the sharded read equals
     the single-host one.
+
+    Device read non-ideality: when ``fid.device`` carries ``read_noise > 0``
+    the fused entries add the frozen per-(crossbar tile, slice, ADC channel)
+    current offsets between the analog column sum and the ADC (see
+    ``kernels.sliced_mvm`` — static pattern keyed by ``stuck_seed``, salted
+    per read direction; the forward sits inside a custom-vjp primal with no
+    RNG threading, so a frozen offset field is the honest model). With
+    ``fid.device`` ideal or ``None`` the dispatch is byte-identical to the
+    pre-DeviceModel path.
     """
     from repro.kernels.sliced_mvm import (  # lazy: kernels import core
         mvm_sliced_fused_batched,
@@ -148,6 +157,9 @@ def fidelity_read(
     )
 
     adc_bits = fid.adc_bits_bwd if transpose else fid.adc_bits_fwd
+    device = getattr(fid, "device", None)
+    if device is not None and not device.reads_nonideal():
+        device = None
     # clip_to_word=False: the DAC scale is a free power of two (the digital
     # shift-and-add tracks it), so small backward cotangents keep the full
     # io_bits of resolution instead of pinning at F = io_bits - 1
@@ -164,11 +176,13 @@ def fidelity_read(
             model_axis=ctx.model_axis, shard_dim=fid.shard_dim,
             io_bits=fid.io_bits, adc_bits=adc_bits, transpose=transpose,
             use_kernel=fid.use_kernel, interpret=fid.interpret, frac_bits=xf,
+            device=device,
         )
     else:
         acc = mvm_sliced_fused_batched(
             planes, x, xf, fid.spec, io_bits=fid.io_bits, adc_bits=adc_bits,
             transpose=transpose, use_kernel=fid.use_kernel, interpret=fid.interpret,
+            device=device,
         )
     return acc * exp2i(-(xf + jnp.asarray(frac_bits, jnp.int32)))
 

@@ -55,6 +55,21 @@ tests; both compute identical numbers (same per-tile body, same k order).
 This kernel is the fidelity path (and the Fig-9/10 engine); production
 training uses the lossless dequantize->MXU fast path, which equals this
 kernel at adc_bits=None (asserted in tests).
+
+Non-ideal device read noise (``dev``, a ``models.common.DeviceModel`` with
+``read_noise > 0``): the read-path non-ideality enters between the analog
+column current and the ADC — a **static** per-(crossbar tile, slice, output
+column) Gaussian offset with sigma ``read_noise`` relative to that slice's
+ADC full scale, modeling a per-sense-amp/ADC-channel offset (the forward
+read sits inside a custom-vjp primal with no RNG threading, so the pattern
+is frozen, keyed by ``stuck_seed`` like the stuck-cell mask; transpose reads
+salt the hash — a different ADC bank serves the MᵀVM direction). At finite
+ADC the offset adds to the raw currents before ``_adc``; the ideal-ADC
+branch folds the closed form — each of the ``io_bits-1`` bit cycles reads
+the same channel offset, so the streamed sum picks it up with weight
+``2^(io_bits-1) - 1``. Global (tile, column) coordinates come in through an
+SMEM offset pair so sharded lowerings reproduce the single-host pattern.
+``dev=None`` compiles the exact pre-DeviceModel kernel.
 """
 from __future__ import annotations
 
@@ -85,13 +100,42 @@ def _dac_block(x, frac_bits, io_bits: int):
     return jnp.clip(y, -lim, lim).astype(jnp.int32)
 
 
+# salts separating the frozen read-offset pattern streams (MVM vs MᵀVM ADC
+# banks) from the stuck-cell mask stream (salt = slice index, small ints)
+READ_SALT = 0x52D
+READ_SALT_T = 0x52E
+
+
+def read_offsets(dev, spec: SliceSpec, tile_idx, col0, bn: int, transpose: bool):
+    """Static per-(tile, slice, column) read-current offsets, already scaled
+    to current units: ``read_noise * full_scale_s * N(0,1)`` laid out
+    ``[1, S*bn]`` along the slice-stacked column blocks. Pure function of the
+    GLOBAL coordinates (``tile_idx`` crossbar-tile index, ``col0`` column
+    offset of this block) and ``(stuck_seed, transpose)`` — identical for
+    any blocking, any sharding, kernel or reference."""
+    from repro.core.fixed_point import counter_gauss, device_pattern_words
+
+    S = spec.n_slices
+    w0, w1 = device_pattern_words(dev.stuck_seed, READ_SALT_T if transpose else READ_SALT)
+    c = jnp.asarray(col0, jnp.int32) + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+    outs = []
+    for s in range(S):
+        r = (jnp.asarray(tile_idx, jnp.int32) * S + s).reshape(1, 1)
+        g = counter_gauss(r, c, jnp.int32(w0), jnp.int32(w1))
+        fs = float(XBAR_ROWS * spec.plane_max[s])
+        outs.append(g * jnp.float32(dev.read_noise * fs))
+    return jnp.concatenate(outs, axis=1)  # [1, S*bn]
+
+
 def _tile_compute(xq, w, *, spec: SliceSpec, io_bits: int, adc_bits: int | None,
-                  transpose: bool = False):
+                  transpose: bool = False, dev=None, tile_idx=None, col0=None):
     """Product-grid contribution of one crossbar tile (pure array -> array;
     shared by the Pallas kernel body and the jaxpr dot-count check).
 
     xq int32 [bb, 128] input block; w int8 [S, 128, bn] digit-plane block
-    ([S, bn, 128] when ``transpose``). Returns f32 [bb, bn].
+    ([S, bn, 128] when ``transpose``). Returns f32 [bb, bn]. ``dev`` with
+    ``read_noise > 0`` adds the frozen per-ADC-channel offsets (module
+    docstring) at global coordinates ``(tile_idx, col0)``.
     """
     S = spec.n_slices
     if transpose:
@@ -103,11 +147,17 @@ def _tile_compute(xq, w, *, spec: SliceSpec, io_bits: int, adc_bits: int | None,
         dims = (((1,), (0,)), ((), ()))  # [*, 128] x [128, S*bn] -> [*, S*bn]
         bn = w.shape[2]
 
+    noisy = dev is not None and dev.read_noise > 0.0
     if adc_bits is None:
         # ideal ADC: bit-streaming is exact -> contract the full input once
         z = jax.lax.dot_general(
             xq.astype(jnp.float32), w_cat, dims, preferred_element_type=jnp.float32
         )  # [bb, S*bn]
+        if noisy:
+            # each of the io_bits-1 bit cycles reads the same frozen channel
+            # offset: the streamed shift-and-add folds it with sum(2^t)
+            offs = read_offsets(dev, spec, tile_idx, col0, bn, transpose)
+            z = z + offs * float(2 ** (io_bits - 1) - 1)
     else:
         bb = xq.shape[0]
         mag_bits = io_bits - 1
@@ -120,6 +170,9 @@ def _tile_compute(xq, w, *, spec: SliceSpec, io_bits: int, adc_bits: int | None,
         y = jax.lax.dot_general(
             xp, w_cat, dims, preferred_element_type=jnp.float32
         )  # [(io_bits-1)*bb, S*bn] — every (bit, slice) column current at once
+        if noisy:
+            # per-ADC-channel offset on the raw column current, pre-ADC
+            y = y + read_offsets(dev, spec, tile_idx, col0, bn, transpose)
         # elementwise ADC (shared SAR model from core.mvm) with the per-slice
         # full scale laid out along the stacked column blocks
         fs = jnp.concatenate(
@@ -226,8 +279,14 @@ def mvm_sliced(
     )(x_q, planes)
 
 
-def _mvm_fused_kernel(f_ref, x_ref, planes_ref, out_ref, acc_ref, *, spec,
-                      io_bits, adc_bits, nk, transpose):
+def _mvm_fused_kernel(f_ref, x_ref, planes_ref, *rest, spec,
+                      io_bits, adc_bits, nk, transpose, dev=None):
+    rest = list(rest)
+    off_ref = None
+    if dev is not None and dev.read_noise > 0.0:
+        off_ref = rest.pop(0)
+    out_ref, acc_ref = rest
+    j = pl.program_id(1)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -240,6 +299,9 @@ def _mvm_fused_kernel(f_ref, x_ref, planes_ref, out_ref, acc_ref, *, spec,
     acc_ref[...] += _tile_compute(
         xq, planes_ref[...],
         spec=spec, io_bits=io_bits, adc_bits=adc_bits, transpose=transpose,
+        dev=dev,
+        tile_idx=None if off_ref is None else off_ref[0, 0] + k,
+        col0=None if off_ref is None else off_ref[0, 1] + j * acc_ref.shape[1],
     )
 
     @pl.when(k == nk - 1)
@@ -247,12 +309,17 @@ def _mvm_fused_kernel(f_ref, x_ref, planes_ref, out_ref, acc_ref, *, spec,
         out_ref[...] = acc_ref[...]
 
 
-def _mvm_fused_db_kernel(f_ref, x_ref, planes_ref, out_ref, wtile_ref, sem,
-                         *, spec, io_bits, adc_bits, nk, bn, transpose):
+def _mvm_fused_db_kernel(f_ref, x_ref, planes_ref, *rest,
+                         spec, io_bits, adc_bits, nk, bn, transpose, dev=None):
     """Double-buffered lowering: 2-D grid (batch, out) — the crossbar-tile
     loop runs *inside* the kernel over the full input strip, with the next
     tile's digit planes DMA'd from HBM/ANY into the spare VMEM slot while the
     MXU contracts the current one."""
+    rest = list(rest)
+    off_ref = None
+    if dev is not None and dev.read_noise > 0.0:
+        off_ref = rest.pop(0)
+    out_ref, wtile_ref, sem = rest
     j = pl.program_id(1)  # program ids must be read at kernel top level
     # whole strip quantized once per block (bb x contract int32 in VMEM)
     xq = _dac_block(x_ref[...], f_ref[0, 0], io_bits)
@@ -280,6 +347,9 @@ def _mvm_fused_db_kernel(f_ref, x_ref, planes_ref, out_ref, wtile_ref, sem,
         return acc + _tile_compute(
             xq_k, wtile_ref[slot],
             spec=spec, io_bits=io_bits, adc_bits=adc_bits, transpose=transpose,
+            dev=dev,
+            tile_idx=None if off_ref is None else off_ref[0, 0] + k,
+            col0=None if off_ref is None else off_ref[0, 1] + j * bn,
         )
 
     out_ref[...] = jax.lax.fori_loop(
@@ -291,7 +361,7 @@ def _mvm_fused_db_kernel(f_ref, x_ref, planes_ref, out_ref, wtile_ref, sem,
     jax.jit,
     static_argnames=(
         "spec", "io_bits", "adc_bits", "bb", "bn", "interpret", "transpose",
-        "double_buffer",
+        "double_buffer", "dev",
     ),
 )
 def mvm_sliced_fused(
@@ -307,6 +377,9 @@ def mvm_sliced_fused(
     interpret: bool = False,
     transpose: bool = False,
     double_buffer: bool = True,
+    dev=None,
+    tile0=None,
+    col0=None,
 ) -> jax.Array:
     """Quantize-fused sliced MVM: planes int8 [S,M,N]; x FLOAT [B,M]
     ([B,N] when ``transpose``); frac_bits int32 scalar DAC exponent ->
@@ -319,6 +392,13 @@ def mvm_sliced_fused(
     loop with 2-slot DMA prefetch of the digit planes; ``False`` keeps the
     3-D grid of ``mvm_sliced`` (used for equivalence testing and as the
     conservative fallback).
+
+    ``dev`` (static, a ``models.common.DeviceModel`` with ``read_noise > 0``)
+    enables the frozen per-ADC-channel read offsets (module docstring);
+    ``tile0``/``col0`` are the GLOBAL crossbar-tile / output-column offsets of
+    this shard (int32 scalars, default 0) so sharded lowerings reproduce the
+    single-host pattern. With ``dev=None`` no extra input exists and the
+    compiled kernel is byte-identical to the pre-DeviceModel one.
     """
     S, M, N = planes.shape
     B = x.shape[0]
@@ -329,11 +409,25 @@ def mvm_sliced_fused(
     )
     bb, bn = pick_block(B, bb, granule=8), pick_block(out_dim, bn)
     nk = contract // XBAR_ROWS
+    noisy = dev is not None and dev.read_noise > 0.0
     f_spec = pl.BlockSpec(
         (1, 1), (lambda i, j: (0, 0)) if double_buffer else (lambda i, j, k: (0, 0)),
         memory_space=pltpu.SMEM,
     )
     f_arg = jnp.asarray(frac_bits, jnp.int32).reshape(1, 1)
+    extra_specs, extra_args = [], []
+    if noisy:
+        off_spec = pl.BlockSpec(
+            (1, 2), (lambda i, j: (0, 0)) if double_buffer else (lambda i, j, k: (0, 0)),
+            memory_space=pltpu.SMEM,
+        )
+        extra_specs = [off_spec]
+        extra_args = [
+            jnp.stack([
+                jnp.asarray(0 if tile0 is None else tile0, jnp.int32),
+                jnp.asarray(0 if col0 is None else col0, jnp.int32),
+            ]).reshape(1, 2)
+        ]
     name = "panther_mvm_fused_t" if transpose else "panther_mvm_fused"
 
     if double_buffer:
@@ -342,12 +436,14 @@ def mvm_sliced_fused(
             functools.partial(
                 _mvm_fused_db_kernel, spec=spec, io_bits=io_bits,
                 adc_bits=adc_bits, nk=nk, bn=bn, transpose=transpose,
+                dev=dev if noisy else None,
             ),
             grid=(B // bb, out_dim // bn),
             in_specs=[
                 f_spec,
                 pl.BlockSpec((bb, contract), lambda i, j: (i, 0)),
                 pl.BlockSpec(memory_space=pltpu.ANY),  # full planes, DMA'd per tile
+                *extra_specs,
             ],
             out_specs=pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
             scratch_shapes=[
@@ -360,7 +456,7 @@ def mvm_sliced_fused(
             ),
             interpret=interpret,
             name=name + "_db",
-        )(f_arg, x.astype(jnp.float32), planes)
+        )(f_arg, x.astype(jnp.float32), planes, *extra_args)
 
     if transpose:
         plane_spec = pl.BlockSpec((S, bn, XBAR_ROWS), lambda i, j, k: (0, j, k))
@@ -369,13 +465,14 @@ def mvm_sliced_fused(
     return pl.pallas_call(
         functools.partial(
             _mvm_fused_kernel, spec=spec, io_bits=io_bits, adc_bits=adc_bits,
-            nk=nk, transpose=transpose,
+            nk=nk, transpose=transpose, dev=dev if noisy else None,
         ),
         grid=(B // bb, out_dim // bn, nk),
         in_specs=[
             f_spec,
             pl.BlockSpec((bb, XBAR_ROWS), lambda i, j, k: (i, k)),
             plane_spec,
+            *extra_specs,
         ],
         out_specs=pl.BlockSpec((bb, bn), lambda i, j, k: (i, j)),
         scratch_shapes=[pltpu.VMEM((bb, bn), jnp.float32)],
@@ -385,4 +482,4 @@ def mvm_sliced_fused(
         ),
         interpret=interpret,
         name=name,
-    )(f_arg, x.astype(jnp.float32), planes)
+    )(f_arg, x.astype(jnp.float32), planes, *extra_args)

@@ -50,6 +50,14 @@ from . import ref as _ref
 BATCH_GRANULE = 8
 
 
+def _normalize_read_device(device):
+    """None unless the read path is non-ideal (an ideal or write-only
+    DeviceModel must compile the exact ideal read kernel)."""
+    if device is None or not device.reads_nonideal():
+        return None
+    return device
+
+
 def mvm_sliced(
     planes,
     x_q,
@@ -89,6 +97,9 @@ def mvm_sliced_fused(
     use_kernel: bool | None = None,
     interpret: bool | None = None,
     double_buffer: bool | None = None,
+    device=None,
+    tile0=None,
+    col0=None,
 ):
     """Quantize-fused vector entry: ``x`` FLOAT [B, M] ([B, N] when
     ``transpose``) plus the int32 DAC exponent ``frac_bits`` -> f32 on the
@@ -96,23 +107,30 @@ def mvm_sliced_fused(
     happen inside the kernel (or inside the fused reference) — callers never
     materialise the integer operand. ``double_buffer`` picks the in-kernel
     crossbar-tile loop with 2-slot DMA prefetch (default on the kernel path);
-    ``False`` keeps the 3-D grid for equivalence testing.
+    ``False`` keeps the 3-D grid for equivalence testing. ``device`` (a
+    ``models.common.DeviceModel`` with ``read_noise > 0``) injects the frozen
+    per-ADC-channel read offsets; ``tile0``/``col0`` are the global crossbar-
+    tile / output-column offsets of a shard (default 0).
     """
     on_tpu = jax.default_backend() == "tpu"
     if use_kernel is None:
         use_kernel = on_tpu
     if interpret is None:
         interpret = not on_tpu
+    device = _normalize_read_device(device)
     contract = planes.shape[2] if transpose else planes.shape[1]
     if not use_kernel or contract % _k.XBAR_ROWS != 0:
         return _ref.mvm_sliced_fused_ref(
             planes, x, jnp.asarray(frac_bits, jnp.int32), spec, io_bits,
-            adc_bits, transpose=transpose,
+            adc_bits, transpose=transpose, device=device,
+            tile0=0 if tile0 is None else tile0,
+            col0=0 if col0 is None else col0,
         )
     return _k.mvm_sliced_fused(
         planes, x, frac_bits, spec=spec, io_bits=io_bits, adc_bits=adc_bits,
         interpret=interpret, transpose=transpose,
         double_buffer=True if double_buffer is None else double_buffer,
+        dev=device, tile0=tile0, col0=col0,
     )
 
 
@@ -128,11 +146,16 @@ def mvm_sliced_fused_batched(
     use_kernel: bool | None = None,
     interpret: bool | None = None,
     double_buffer: bool | None = None,
+    device=None,
+    tile0=None,
+    col0=None,
 ):
     """Token-batched quantize-fused read: FLOAT ``x`` [..., M] ([..., N] when
     ``transpose``), arbitrary leading dims flattened into one token axis (see
     ``mvm_sliced_batched``). Zero padding rows quantize to zero (round(0)=0)
-    ⇒ all-zero bit planes, so padding stays value-inert on the fused path too.
+    ⇒ all-zero bit planes, so padding stays value-inert on the fused path too
+    (the device read offsets are per output column — identical on every
+    token row, padding included).
     """
     contract = planes.shape[2] if transpose else planes.shape[1]
     lead = x.shape[:-1]
@@ -145,7 +168,7 @@ def mvm_sliced_fused_batched(
     out = mvm_sliced_fused(
         planes, x2, frac_bits, spec, io_bits=io_bits, adc_bits=adc_bits,
         transpose=transpose, use_kernel=use_kernel, interpret=interpret,
-        double_buffer=double_buffer,
+        double_buffer=double_buffer, device=device, tile0=tile0, col0=col0,
     )
     if pad:
         out = out[:t]
@@ -208,6 +231,7 @@ def mvm_sliced_sharded(
     use_kernel: bool | None = None,
     interpret: bool | None = None,
     frac_bits=None,
+    device=None,
 ):
     """Mesh-sharded token-batched sliced MVM / MᵀVM (module docstring).
 
@@ -232,11 +256,19 @@ def mvm_sliced_sharded(
     sharded *output* dim must divide evenly. Unmet guards drop the model-
     axis sharding for this read (tokens stay sharded) rather than change
     numerics — equivalence to the single-host schedule is the contract.
+
+    ``device`` (read-noisy ``DeviceModel``, fused entry only) reproduces the
+    single-host frozen ADC-channel offsets: each shard derives its global
+    crossbar-tile / output-column offsets from ``axis_index(model_axis)``.
+    Because the offsets are a function of the 128-row tile index, a read-
+    noisy sharded *contraction* must split into whole tiles even at
+    ``adc_bits=None`` — the granule guard tightens accordingly.
     """
     contract = planes.shape[2] if transpose else planes.shape[1]
     out_dim = planes.shape[1] if transpose else planes.shape[2]
     lead = x_q.shape[:-1]
     assert planes.ndim == 3 and x_q.shape[-1] == contract, (planes.shape, x_q.shape)
+    device = _normalize_read_device(device)
 
     dp = tuple(a for a in data_axes if a in mesh.axis_names and mesh.shape[a] > 1)
     dsize = 1
@@ -248,7 +280,10 @@ def mvm_sliced_sharded(
     sd = shard_dim if maxis is not None else None
     if sd is not None:
         if sd == (1 if transpose else 0):  # contraction side sharded
-            granule = msize if adc_bits is None else msize * _k.XBAR_ROWS
+            granule = (
+                msize if adc_bits is None and device is None
+                else msize * _k.XBAR_ROWS
+            )
             if contract % granule != 0:
                 sd = None
         elif out_dim % msize != 0:  # output side sharded
@@ -259,6 +294,7 @@ def mvm_sliced_sharded(
             return mvm_sliced_fused_batched(
                 planes, x_q, frac_bits, spec, io_bits=io_bits, adc_bits=adc_bits,
                 transpose=transpose, use_kernel=use_kernel, interpret=interpret,
+                device=device,
             )
         return mvm_sliced_batched(
             planes, x_q, spec, io_bits=io_bits, adc_bits=adc_bits,
@@ -287,10 +323,20 @@ def mvm_sliced_sharded(
         w_spec[1 + sd] = maxis
 
     def local(planes_l, x_l, f_l):
+        tile0 = col0 = None
+        if device is not None and maxis is not None and sd is not None:
+            # global coordinates of this shard's tiles/columns, so the frozen
+            # read-offset pattern matches the single-host schedule exactly
+            idx = jax.lax.axis_index(maxis)
+            if contract_sharded:
+                tile0 = idx * ((contract // msize) // _k.XBAR_ROWS)
+            elif out_sharded:
+                col0 = idx * (out_dim // msize)
         if frac_bits is not None:
             acc = mvm_sliced_fused(
                 planes_l, x_l, f_l, spec, io_bits=io_bits, adc_bits=adc_bits,
                 transpose=transpose, use_kernel=use_kernel, interpret=interpret,
+                device=device, tile0=tile0, col0=col0,
             )
         else:
             acc = mvm_sliced(

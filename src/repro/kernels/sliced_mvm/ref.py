@@ -40,16 +40,50 @@ Three implementations:
 
 ``transpose=True`` selects the MᵀVM (layer-gradient) read: the same crossbar
 driven from the columns, contracting over 128-column tiles.
+
+``device`` (a ``models.common.DeviceModel`` with ``read_noise > 0``) mirrors
+the kernel's frozen per-(crossbar tile, slice, output column) ADC-channel
+offsets bit-for-bit at the ideal-ADC branch (same counter-hash Gaussian at
+the same global coordinates, same closed-form ``2^(io_bits-1)-1`` fold) and
+analytically exactly at finite ADC (the restructured 1/step prescale turns
+the current-unit offset into ``read_noise·2^(adc_bits-1)`` code units).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.fixed_point import exp2i
 from repro.core.mvm import _adc, bit_planes, shift_add_scales
 from repro.core.slicing import LOGICAL_BITS, SliceSpec
+from repro.kernels.sliced_mvm.kernel import READ_SALT, READ_SALT_T
 
 XBAR_ROWS = 128
+
+
+def read_offsets_ref(device, spec: SliceSpec, gtile, col0, n_cols: int,
+                     transpose: bool):
+    """Frozen per-(tile, slice, column) read offsets in current units,
+    ``[S, n_cols]`` at GLOBAL coordinates (crossbar tile ``gtile``, columns
+    ``col0 + arange(n_cols)``) — the reference half of
+    ``kernel.read_offsets`` (identical hash, identical float ops, different
+    layout: per-slice rows instead of slice-stacked columns)."""
+    from repro.core.fixed_point import counter_gauss, device_pattern_words
+
+    S = spec.n_slices
+    w0, w1 = device_pattern_words(
+        device.stuck_seed, READ_SALT_T if transpose else READ_SALT
+    )
+    c = jnp.asarray(col0, jnp.int32) + jax.lax.broadcasted_iota(
+        jnp.int32, (1, n_cols), 1
+    )
+    rows = []
+    for s in range(S):
+        r = (jnp.asarray(gtile, jnp.int32) * S + s).reshape(1, 1)
+        g = counter_gauss(r, c, jnp.int32(w0), jnp.int32(w1))
+        fs = float(XBAR_ROWS * spec.plane_max[s])
+        rows.append(g * jnp.float32(device.read_noise * fs))
+    return jnp.concatenate(rows, axis=0)  # [S, n_cols]
 
 
 def dac_quantize(x, frac_bits, io_bits: int):
@@ -115,6 +149,9 @@ def mvm_sliced_fused_ref(
     adc_bits: int | None = None,
     xbar_rows: int = XBAR_ROWS,
     transpose: bool = False,
+    device=None,
+    tile0=0,
+    col0=0,
 ):
     """Quantize-fused packed MVM: planes int8 [S,M,N]; x FLOAT [B,M] ([B,N]
     when ``transpose``); frac_bits int32 scalar DAC exponent -> f32 [B,N]
@@ -124,7 +161,10 @@ def mvm_sliced_fused_ref(
     operand or its bit planes. At ``adc_bits=None`` the value is
     bit-identical to ``mvm_sliced_ref(planes, dac_quantize(x, ...))``; at
     finite ADC the restructured fold reassociates f32 sums (same analog
-    model, values within the kernel-vs-ref tolerance).
+    model, values within the kernel-vs-ref tolerance). ``device`` with
+    ``read_noise > 0`` injects the frozen ADC-channel offsets (module
+    docstring); ``tile0``/``col0`` are the global tile/column offsets of a
+    shard (int32, default 0).
     """
     w = planes.astype(jnp.float32)
     if transpose:
@@ -135,16 +175,26 @@ def mvm_sliced_fused_ref(
     x_q = dac_quantize(x, frac_bits, io_bits)
     n_tiles = -(-M // xbar_rows)
     out = jnp.zeros((B, N), jnp.float32)
+    noisy = device is not None and device.read_noise > 0.0
+
+    def offs(tile):
+        return read_offsets_ref(
+            device, spec, jnp.asarray(tile0, jnp.int32) + tile, col0, N, transpose
+        )
 
     if adc_bits is None:
         # Kept verbatim from mvm_sliced_ref's ideal branch: fused and
-        # unfused entries are bit-identical here (property-tested).
+        # unfused entries are bit-identical here (property-tested). The
+        # noisy add mirrors the kernel's closed form exactly: each of the
+        # io_bits-1 bit cycles reads the same frozen channel offset.
         xf = x_q.astype(jnp.float32)
         s_scale = jnp.exp2(LOGICAL_BITS * jnp.arange(S, dtype=jnp.float32))
         for tile in range(n_tiles):
             lo, hi = tile * xbar_rows, min((tile + 1) * xbar_rows, M)
             y = jnp.einsum("bm,smn->bsn", xf[:, lo:hi], w[:, lo:hi],
                            preferred_element_type=jnp.float32)
+            if noisy:
+                y = y + offs(tile)[None] * float(2 ** (io_bits - 1) - 1)
             out = out + jnp.einsum("bsn,s->bn", y, s_scale)
         return out
 
@@ -158,10 +208,14 @@ def mvm_sliced_fused_ref(
     w2 = w * (1.0 / step)[:, None, None]
     tw = jnp.exp2(jnp.arange(T, dtype=jnp.float32))
     sw = step * jnp.exp2(LOGICAL_BITS * jnp.arange(S, dtype=jnp.float32))
+    inv_step = (1.0 / step)[:, None]  # current units -> ADC code units
     for tile in range(n_tiles):
         lo, hi = tile * xbar_rows, min((tile + 1) * xbar_rows, M)
         y = jnp.einsum("tbm,smn->tbsn", bp[:, :, lo:hi], w2[:, lo:hi],
                        preferred_element_type=jnp.float32)
+        if noisy:
+            # channel offset on the raw current, pre-round (prescaled grid)
+            y = y + (offs(tile) * inv_step)[None, None]
         q = jnp.clip(jnp.round(y), -half, half)  # integer ADC codes
         z = jnp.tensordot(tw, q, axes=([0], [0]))  # bit fold -> [B, S, n]
         out = out + jnp.einsum("bsn,s->bn", z, sw)  # slice fold (step folded)

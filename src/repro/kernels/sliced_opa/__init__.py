@@ -1,3 +1,3 @@
-from .ops import opa_deposit, opa_fused, opa_fused_update
+from .ops import opa_deposit, opa_device_update, opa_fused, opa_fused_update
 
-__all__ = ["opa_deposit", "opa_fused", "opa_fused_update"]
+__all__ = ["opa_deposit", "opa_device_update", "opa_fused", "opa_fused_update"]

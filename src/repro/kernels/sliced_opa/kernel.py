@@ -34,6 +34,18 @@ bm/bn default to 128/256: int8 native tile is (32, 128); f32 accumulate tile
 (8, 128); the MXU contraction dim inside ``opa_fused`` is ``bt=512``.
 VMEM budget at defaults: planes 8·128·256 int8 = 256 KiB + acc f32 128 KiB +
 x/dh blocks 512·(128+256)·4 B = 768 KiB ≈ 1.2 MiB « 16 MiB VMEM.
+
+Non-ideal device physics (``dev``, a ``models.common.DeviceModel``): the
+fused deposit is where conductance writes happen, so the write-path
+non-idealities enter ``opa_fused``'s finalize, in physical order — update
+asymmetry (``asym_up``/``asym_down`` gains applied to the signed analog
+increment), Gaussian conductance write noise (``write_noise`` sigma in
+weight-grid LSBs, drawn in-kernel by the same counter-hash discipline as
+stochastic rounding but from an independent key stream — no noise grid
+crosses HBM), then the grid rounding, then the digit deposit, and finally
+the static stuck-cell mask (``stuck_frac``/``stuck_seed``): stuck cells keep
+their pre-update digit, so subsequent reads of the same planes see the fault
+consistently. ``dev=None`` compiles the exact pre-DeviceModel kernel.
 """
 from __future__ import annotations
 
@@ -135,15 +147,47 @@ def _block_noise(rng: str, k0, k1, i, j, tid, block_shape):
     return jax.lax.shift_right_logical(bits, 8).astype(jnp.float32) * jnp.float32(_U24)
 
 
+def _global_coords(i, j, block_shape):
+    """Global (row, col) iota grids for the (i, j) tile of a blocked array —
+    the coordinate frame every counter-hash draw is keyed on."""
+    bm, bn = block_shape
+    r = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+    c = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    return r, c
+
+
+def _stuck_masks(dev, spec, i, j, block_shape):
+    """Static per-slice stuck-cell masks [S, bm, bn] at global coordinates.
+
+    Keyed only by ``(stuck_seed, slice)`` — a compile-time pattern
+    (fabrication defects don't move between steps, and the jnp reference
+    reproduces it exactly). The pattern is shared across lax.scan layer
+    stacks (one trace serves every layer); per-layer fault maps need
+    per-leaf seeds."""
+    from repro.core.fixed_point import counter_u01, device_pattern_words
+
+    r, c = _global_coords(i, j, block_shape)
+    frac = jnp.float32(dev.stuck_frac)
+    masks = []
+    for s in range(spec.n_slices):
+        w0, w1 = device_pattern_words(dev.stuck_seed, s)
+        masks.append(counter_u01(r, c, jnp.int32(w0), jnp.int32(w1)) < frac)
+    return jnp.stack(masks, axis=0)
+
+
 def _opa_fused_kernel(
-    scale_ref, x_ref, dh_ref, planes_ref, *rest, spec: SliceSpec, nk: int, rng: str | None
+    scale_ref, x_ref, dh_ref, planes_ref, *rest,
+    spec: SliceSpec, nk: int, rng: str | None, dev=None,
 ):
+    rest = list(rest)
+    noise_ref = key_ref = dkey_ref = None
     if rng == "grid":
-        noise_ref, out_ref, acc_ref = rest
+        noise_ref = rest.pop(0)
     elif rng is not None:
-        key_ref, out_ref, acc_ref = rest
-    else:
-        out_ref, acc_ref = rest
+        key_ref = rest.pop(0)
+    if dev is not None and dev.write_noise > 0.0:
+        dkey_ref = rest.pop(0)
+    out_ref, acc_ref = rest
     # program ids are read at top level (the interpret-mode evaluator only
     # substitutes them outside sub-jaxprs) and closed over by _finalize
     i = pl.program_id(0)
@@ -167,6 +211,22 @@ def _opa_fused_kernel(
     def _finalize():
         lim = float(2**31 - 1)
         y = acc_ref[...] * scale_ref[0, 0]
+        if dev is not None and (dev.asym_up != 1.0 or dev.asym_down != 1.0):
+            # asymmetric potentiation/depression: gain depends on the sign of
+            # the analog increment, before it quantizes to the grid
+            y = jnp.where(
+                y >= 0.0, y * jnp.float32(dev.asym_up), y * jnp.float32(dev.asym_down)
+            )
+        if dkey_ref is not None:
+            # conductance write noise, generated in-kernel at global element
+            # coordinates from its own prefetched key words (independent of
+            # the rounding stream) — no noise grid crosses HBM
+            from repro.core.fixed_point import counter_gauss
+
+            r, c = _global_coords(i, j, acc_ref.shape)
+            y = y + jnp.float32(dev.write_noise) * counter_gauss(
+                r, c, dkey_ref[0, 0], dkey_ref[0, 1]
+            )
         if rng == "grid":
             # legacy escape hatch: U[0, 1) fed as a grid-shaped HBM input
             # (the PR 1-5 draw — kept so old checkpoints replay bit-exactly)
@@ -180,11 +240,17 @@ def _opa_fused_kernel(
         else:
             y = jnp.round(y)
         p_q = jnp.clip(y, -lim, lim).astype(jnp.int32)
-        out_ref[...] = _deposit(planes_ref[...].astype(jnp.int32), p_q, spec)
+        new = _deposit(planes_ref[...].astype(jnp.int32), p_q, spec)
+        if dev is not None and dev.stuck_frac > 0.0:
+            # stuck cells keep their pre-update digit (reads stay consistent:
+            # the planes remain the single physical truth)
+            new = jnp.where(_stuck_masks(dev, spec, i, j, acc_ref.shape),
+                            planes_ref[...], new)
+        out_ref[...] = new
 
 
 @functools.partial(
-    jax.jit, static_argnames=("spec", "bm", "bn", "bt", "interpret", "rng_impl")
+    jax.jit, static_argnames=("spec", "bm", "bn", "bt", "interpret", "rng_impl", "dev")
 )
 def opa_fused(
     planes: jax.Array,
@@ -200,6 +266,8 @@ def opa_fused(
     noise: jax.Array | None = None,
     rkey: jax.Array | None = None,
     rng_impl: str = "counter",
+    dev=None,
+    dkey: jax.Array | None = None,
 ) -> jax.Array:
     """Fused ``planes <- deposit(planes, q(X^T dH * scale))``.
 
@@ -213,6 +281,13 @@ def opa_fused(
       touches HBM.
     * ``noise`` f32 [M,N] in [0, 1) — legacy grid input (``rng_mode="grid"``
       upstream), kept for bit-exact replay of PR 1-5 checkpoints.
+
+    ``dev`` (a jit-static ``models.common.DeviceModel``) turns on the
+    write-path non-idealities in the finalize (see module docstring);
+    ``dkey`` int32 ``[2]`` supplies the write-noise key words through a
+    second SMEM prefetch when ``dev.write_noise > 0``. ``dev=None`` is
+    bit-identical to the pre-DeviceModel kernel (no extra inputs, no extra
+    ops).
     """
     S, M, N = planes.shape
     T = x.shape[0]
@@ -246,8 +321,14 @@ def opa_fused(
             pl.BlockSpec((1, 2), lambda i, j, k: (0, 0), memory_space=pltpu.SMEM)
         )
         args.append(jnp.asarray(rkey, jnp.int32).reshape(1, 2))
+    if dev is not None and dev.write_noise > 0.0:
+        assert dkey is not None, "dev.write_noise > 0 requires write-noise key words"
+        in_specs.append(
+            pl.BlockSpec((1, 2), lambda i, j, k: (0, 0), memory_space=pltpu.SMEM)
+        )
+        args.append(jnp.asarray(dkey, jnp.int32).reshape(1, 2))
     return pl.pallas_call(
-        functools.partial(_opa_fused_kernel, spec=spec, nk=nk, rng=rng),
+        functools.partial(_opa_fused_kernel, spec=spec, nk=nk, rng=rng, dev=dev),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((S, bm, bn), lambda i, j, k: (0, i, j)),

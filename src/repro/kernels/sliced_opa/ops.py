@@ -45,12 +45,50 @@ def opa_deposit(planes, p_q, spec: SliceSpec, *, use_kernel: bool | None = None,
     return _k.opa_deposit(planes, p_q, spec=spec, interpret=interpret)
 
 
-def opa_fused(planes, x, dh, scale, spec: SliceSpec, *, use_kernel: bool | None = None, interpret: bool | None = None):
-    """Fused X^T@dH -> quantize -> deposit (gradient never hits HBM)."""
+def _normalize_device(device):
+    """None unless some write-path field is non-ideal (an all-ideal
+    DeviceModel must compile the exact ideal kernel)."""
+    if device is None or not device.writes_nonideal():
+        return None
+    return device
+
+
+def opa_device_update(planes, g, lr, frac_bits, spec: SliceSpec, *, device,
+                      stochastic: bool = False, key=None, rng_mode: str = "counter",
+                      use_kernel: bool | None = None, interpret: bool | None = None):
+    """Dense-gradient crossbar update under a write-nonideal ``DeviceModel``:
+    the same physics pipeline as the operand path's ``opa_fused_update``
+    (asymmetry -> write noise -> rounding -> deposit -> stuck mask), applied
+    to an already-materialized ``[*stack, M, N]`` gradient — so a plan leaf
+    whose gradient is dense (embeddings, momentum/Tiki-Taka buffers) writes
+    through the identical device model. ``device`` must already be
+    write-nonideal (callers branch on ``writes_nonideal()``; the ideal path
+    is the verbatim quantize + ``opa_deposit`` composition)."""
+    from repro.core.fixed_point import exp2i
+
+    if device.write_noise > 0.0 and key is None:
+        raise ValueError("DeviceModel.write_noise requires a PRNG key")
+    scale = -jnp.asarray(lr, jnp.float32) * exp2i(frac_bits)
+    upd = _ref.write_device(g.astype(jnp.float32) * scale, device,
+                            key=key, stochastic=stochastic, rng_mode=rng_mode)
+    new = opa_deposit(planes, upd, spec, use_kernel=use_kernel, interpret=interpret)
+    if device.stuck_frac > 0.0:
+        new = jnp.where(_ref.stuck_mask_ref(device, spec, planes.shape), planes, new)
+    return new
+
+
+def opa_fused(planes, x, dh, scale, spec: SliceSpec, *, use_kernel: bool | None = None,
+              interpret: bool | None = None, device=None, dkey=None):
+    """Fused X^T@dH -> quantize -> deposit (gradient never hits HBM).
+
+    ``device``/``dkey`` expose the write-path ``DeviceModel`` on the raw
+    entry (``dkey`` int32 [2] key words when ``device.write_noise > 0``)."""
     use_kernel, interpret = _resolve(use_kernel, interpret)
+    device = _normalize_device(device)
     if not use_kernel:
-        return _ref.opa_fused_ref(planes, x, dh, scale, spec)
-    return _k.opa_fused(planes, x, dh, scale, spec=spec, interpret=interpret)
+        return _ref.opa_fused_ref(planes, x, dh, scale, spec, device=device, dkey=dkey)
+    return _k.opa_fused(planes, x, dh, scale, spec=spec, interpret=interpret,
+                        dev=device, dkey=dkey)
 
 
 def opa_fused_update(
@@ -66,6 +104,7 @@ def opa_fused_update(
     rng_mode: str = "counter",
     use_kernel: bool | None = None,
     interpret: bool | None = None,
+    device=None,
 ):
     """The full PANTHER weight update from gradient *operands*.
 
@@ -95,10 +134,20 @@ def opa_fused_update(
     ``fold_in(key, l)`` — the same per-layer derivation
     ``core.fixed_point.counter_uniform`` applies on the dense path, so both
     pipelines consume identical noise for a given leaf key.
+
+    ``device`` (a ``models.common.DeviceModel``) turns on the write-path
+    non-idealities at the deposit — see ``kernel.opa_fused``. The write-noise
+    key stream is ``fold_in(key, WRITE_NOISE_FOLD)`` (independent of the
+    rounding stream; fig9 runs deterministic rounding, so it cannot
+    piggyback), with the same per-layer ``fold_in(·, l)`` derivation for
+    stacked leaves on both the kernel and reference paths.
     """
     use_kernel, interpret = _resolve(use_kernel, interpret)
     if stochastic and key is None:
         raise ValueError("stochastic rounding requires a PRNG key")
+    device = _normalize_device(device)
+    if device is not None and device.write_noise > 0.0 and key is None:
+        raise ValueError("DeviceModel.write_noise requires a PRNG key")
     if not use_kernel:
         if stochastic and rng_mode == "hw":
             raise ValueError(
@@ -107,12 +156,12 @@ def opa_fused_update(
             )
         return _ref.opa_fused_update_ref(
             planes, x, dh, lr, frac_bits, spec,
-            stochastic=stochastic, key=key, rng_mode=rng_mode,
+            stochastic=stochastic, key=key, rng_mode=rng_mode, device=device,
         )
 
     # exp2i: the 2^F grid scale must be the exact power of two the dense
     # pipeline's quantize() uses, or the fused/dense bit-compat breaks
-    from repro.core.fixed_point import counter_key_scalars, exp2i
+    from repro.core.fixed_point import WRITE_NOISE_FOLD, counter_key_scalars, exp2i
 
     scale = -jnp.asarray(lr, jnp.float32) * exp2i(frac_bits)
     noise = rkey = None
@@ -120,11 +169,16 @@ def opa_fused_update(
         noise = jax.random.uniform(key, planes.shape[1:], jnp.float32)
     elif stochastic:
         rkey = counter_key_scalars(key)
+    dk_base = None
+    if device is not None and device.write_noise > 0.0:
+        dk_base = jax.random.fold_in(key, WRITE_NOISE_FOLD)
+    rng_impl = rng_mode if stochastic else "counter"
 
     if planes.ndim == 3:
         return _k.opa_fused(
             planes, x, dh, scale, spec=spec, interpret=interpret,
-            noise=noise, rkey=rkey, rng_impl=rng_mode if stochastic else "counter",
+            noise=noise, rkey=rkey, rng_impl=rng_impl, dev=device,
+            dkey=None if dk_base is None else counter_key_scalars(dk_base),
         )
 
     # stacked leaf [S, *stack, M, N]: one kernel launch per stacked layer
@@ -134,39 +188,30 @@ def opa_fused_update(
     for d in planes.shape[1:-2]:
         L *= d
     T = x.shape[-2]
-    p_l = jnp.moveaxis(planes.reshape(S, L, M, N), 1, 0)  # [L, S, M, N]
-    x_l = x.reshape(L, T, M)
-    dh_l = dh.reshape(L, T, N)
-
-    if noise is None and rkey is None:
-
-        def body(_, args):
-            p_i, x_i, dh_i = args
-            return None, _k.opa_fused(p_i, x_i, dh_i, scale, spec=spec, interpret=interpret)
-
-        _, out = jax.lax.scan(body, None, (p_l, x_l, dh_l))
-    elif noise is not None:
-        n_l = noise.reshape(L, M, N)
-
-        def body_n(_, args):
-            p_i, x_i, dh_i, n_i = args
-            return None, _k.opa_fused(
-                p_i, x_i, dh_i, scale, spec=spec, interpret=interpret, noise=n_i
-            )
-
-        _, out = jax.lax.scan(body_n, None, (p_l, x_l, dh_l, n_l))
-    else:
+    xs = {
+        "p": jnp.moveaxis(planes.reshape(S, L, M, N), 1, 0),  # [L, S, M, N]
+        "x": x.reshape(L, T, M),
+        "dh": dh.reshape(L, T, N),
+    }
+    if noise is not None:
+        xs["n"] = noise.reshape(L, M, N)
+    elif rkey is not None:
         # per-layer key words [L, 2]: fold_in(key, l), as on the dense path
-        k_l = jax.vmap(
+        xs["k"] = jax.vmap(
             lambda l: counter_key_scalars(jax.random.fold_in(key, l))
         )(jnp.arange(L))
+    if dk_base is not None:
+        # write-noise stream, same per-layer derivation (counter_gauss_array)
+        xs["dk"] = jax.vmap(
+            lambda l: counter_key_scalars(jax.random.fold_in(dk_base, l))
+        )(jnp.arange(L))
 
-        def body_k(_, args):
-            p_i, x_i, dh_i, k_i = args
-            return None, _k.opa_fused(
-                p_i, x_i, dh_i, scale, spec=spec, interpret=interpret,
-                rkey=k_i, rng_impl=rng_mode,
-            )
+    def body(_, a):
+        return None, _k.opa_fused(
+            a["p"], a["x"], a["dh"], scale, spec=spec, interpret=interpret,
+            noise=a.get("n"), rkey=a.get("k"), rng_impl=rng_impl,
+            dev=device, dkey=a.get("dk"),
+        )
 
-        _, out = jax.lax.scan(body_k, None, (p_l, x_l, dh_l, k_l))
+    _, out = jax.lax.scan(body, None, xs)
     return jnp.moveaxis(out, 0, 1).reshape(planes.shape)

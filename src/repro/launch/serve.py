@@ -45,6 +45,7 @@ def run_trace_bench(args):
     import jax
 
     from repro import configs
+    from repro import plan as planlib
     from repro.models import lm
     from repro.optim import PantherConfig, panther
     from repro.serve import scheduler as sch
@@ -111,7 +112,9 @@ def run_trace_bench(args):
     lossless_loss = float(lm.loss_fn(cfg, params, batch))
     engines, trees = {}, {}
     for tier, adc in tier_defs.items():
-        trees[tier] = fidelity_params(params, sliced, fid=presets[adc])
+        tier_plan = planlib.resolve_plan(
+            params, planlib.default_rules(opt_cfg, fidelity=presets[adc]))
+        trees[tier] = fidelity_params(params, sliced, plan=tier_plan)
         bits = presets[adc].adc_bits_fwd
         engines[tier] = Engine(
             cfg, trees[tier], n_slots=4, max_seq=48, page=16,

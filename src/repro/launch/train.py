@@ -63,17 +63,21 @@ def main():
 
         mesh = make_debug_mesh()
 
-    fid = None
+    rules = None
     if args.fidelity != "none":
         import dataclasses
+
+        from repro import plan as planlib
 
         # the engine must read the planes the optimizer writes
         fid = dataclasses.replace(configs.fidelity_presets()[args.fidelity],
                                   spec=opt_cfg.spec)
+        rules = planlib.default_rules(opt_cfg, fidelity=fid)
 
     ds = SyntheticLMDataset(cfg.vocab, args.seq, args.batch)
     step_fn = make_train_step(cfg, opt_cfg, sched, mesh=mesh,
-                              global_batch=args.batch if mesh else None, fidelity=fid)
+                              global_batch=args.batch if mesh else None,
+                              plan_rules=rules)
     state = train_state_init(cfg, opt_cfg, jax.random.PRNGKey(0))
 
     ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every) if args.ckpt_dir else None

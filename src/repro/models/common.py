@@ -122,6 +122,66 @@ def is_outer_product_grad(x) -> bool:
 
 
 @dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """Non-ideal ReRAM device physics, applied wherever code touches crossbar
+    state: the fused OPA deposit (write path) and the packed MVM/MᵀVM read.
+
+    Frozen, hashable, all plain floats/ints: it rides ``FidelityConfig`` (and
+    therefore ``XbarWeight`` aux_data) as jit-static hardware configuration —
+    changing a sigma recompiles, as re-taping a different device would.
+
+    Write path (``kernels.sliced_opa.opa_fused`` finalize, in order):
+
+    * ``asym_up`` / ``asym_down`` — multiplicative gain on positive /
+      negative update increments (Gokmen et al. 1705.08014: real devices
+      potentiate and depress with different slopes; 1.0/1.0 = symmetric).
+    * ``write_noise`` — sigma of Gaussian conductance write noise in
+      weight-grid LSB units, drawn per (row, col) from the counter-hash RNG
+      (independent key stream from stochastic rounding), added before the
+      deposit rounds to the grid.
+    * ``stuck_frac`` / ``stuck_seed`` — fraction of cells stuck at their
+      current value. The mask is a static per-slice pattern keyed by
+      ``stuck_seed`` (fabrication defects don't move between steps): a stuck
+      cell's digit plane keeps its pre-update value, and because reads go
+      through the same planes, reads see the stuck value consistently.
+
+    Read path (``kernels.sliced_mvm``):
+
+    * ``read_noise`` — sigma of read-current noise relative to the per-slice
+      ADC full scale, modeled as a static per-(tile, slice, column) offset
+      pattern keyed by ``stuck_seed`` (a per-sense-amp/ADC-channel offset —
+      the forward read is a custom-vjp primal with no RNG threading, so the
+      pattern is frozen like the stuck mask; transpose reads salt the hash,
+      they use a different ADC bank). Added to raw column currents before
+      the ADC transfer function.
+
+    ``DeviceModel()`` defaults are all-ideal; ``device=None`` on
+    ``FidelityConfig`` skips every injection site bit-identically.
+    """
+
+    write_noise: float = 0.0
+    asym_up: float = 1.0
+    asym_down: float = 1.0
+    stuck_frac: float = 0.0
+    stuck_seed: int = 0
+    read_noise: float = 0.0
+
+    def writes_nonideal(self) -> bool:
+        """True when the write path deviates from the ideal deposit (the
+        fields that gate checkpoint-restore compatibility: planes trained
+        under these are physically different cells)."""
+        return (
+            self.write_noise > 0.0
+            or self.asym_up != 1.0
+            or self.asym_down != 1.0
+            or self.stuck_frac > 0.0
+        )
+
+    def reads_nonideal(self) -> bool:
+        return self.read_noise > 0.0
+
+
+@dataclasses.dataclass(frozen=True)
 class FidelityConfig:
     """Crossbar-in-the-loop training/serving configuration.
 
@@ -164,6 +224,9 @@ class FidelityConfig:
     use_kernel: bool | None = None
     interpret: bool | None = None
     shard_dim: int | None = None  # mesh tile-shard hint (0=M, 1=N, None=replicated)
+    # non-ideal ReRAM physics at the deposit/read sites (None = ideal device;
+    # bit-identical to the pre-DeviceModel code paths)
+    device: DeviceModel | None = None
 
 
 @jax.tree_util.register_pytree_node_class
@@ -245,16 +308,6 @@ def path_str(path) -> str:
 OPERAND_LINEAR_KEYS = frozenset(
     {"wqkv", "wq_dkv", "wo", "wi_gate", "wi_up", "w_uk", "w_uv"}
 )
-
-
-def is_operand_path(path_str: str) -> bool:
-    """Compatibility shim: the canonical operand-eligibility predicate now
-    lives in ``repro.plan.operand_eligible_path`` (the default-rule set of
-    the declarative mapping plan), fed by :data:`OPERAND_LINEAR_KEYS` above.
-    Kept so existing callers and tests keep one import site."""
-    from repro.plan import operand_eligible_path  # lazy: plan imports this module
-
-    return operand_eligible_path(path_str)
 
 
 @jax.custom_vjp

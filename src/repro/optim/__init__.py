@@ -1,4 +1,5 @@
 from . import baselines, panther, schedules
-from .panther import PantherConfig, PantherState, SlicedTensor
+from .panther import PantherConfig, PantherState, SlicedTensor, tiki_taka
 
-__all__ = ["baselines", "panther", "schedules", "PantherConfig", "PantherState", "SlicedTensor"]
+__all__ = ["baselines", "panther", "schedules", "PantherConfig", "PantherState",
+           "SlicedTensor", "tiki_taka"]

@@ -38,7 +38,7 @@ from repro.core import (
 )
 from repro.core.fixed_point import quantize
 from repro.kernels.crs import crs as crs_op
-from repro.kernels.sliced_opa import opa_deposit, opa_fused_update
+from repro.kernels.sliced_opa import opa_deposit, opa_device_update, opa_fused_update
 from repro.models.common import (
     OuterProductGrad,
     XbarWeight,
@@ -84,6 +84,31 @@ class PantherState(NamedTuple):
     step: jax.Array
     sliced: Any  # pytree: SlicedTensor | None per param leaf
     momentum: Any  # pytree: float buffer | None  (digital VFU)
+
+
+def _leaf_device(pl):
+    """The write-path ``DeviceModel`` a plan leaf carries (None when the leaf
+    has no fidelity, no device, or an ideal write path)."""
+    if pl is None or pl.fidelity is None or pl.fidelity.device is None:
+        return None
+    dev = pl.fidelity.device
+    return dev if dev.writes_nonideal() else None
+
+
+def tiki_taka(cfg: PantherConfig = PantherConfig(), beta: float = 0.875) -> PantherConfig:
+    """Tiki-Taka-style noise-resilient training config (Gokmen & Haensch,
+    analog RPU line): gradients accumulate in a digital buffer and the
+    *averaged* update is what gets written to the noisy device, so the i.i.d.
+    per-step write noise averages down by ~sqrt(1/(1-beta)) while the signal
+    accumulates — the momentum-on-device rule the device sweep in
+    ``benchmarks/fig9_slice_crs.py`` benchmarks against plain sliced SGD at
+    matched ``DeviceModel`` noise. Rides ``PantherConfig.momentum`` (the
+    digital-VFU buffer), so it composes with any ``repro.plan`` rule set —
+    ``default_rules(tiki_taka(cfg), fidelity=fid_with_device)`` is the whole
+    recipe. Operand-form gradients materialize into the buffer (momentum is
+    dense by nature); the deposit still applies the full device write
+    physics."""
+    return dataclasses.replace(cfg, momentum=beta, variant="tiki-taka")
 
 
 def _crs_dispatch(planes, spec):
@@ -315,11 +340,22 @@ def update(
             new_m.append(m)
             continue
         key = jax.random.fold_in(base_key, i)
+        dev = _leaf_device(pl)
         if is_outer_product_grad(g_eff):
             # operand path: X^T@dH -> quantize -> deposit in one fused pass
             planes = opa_fused_update(
                 s.planes, g_eff.x, g_eff.dh, lr, s.frac_bits, spec,
                 stochastic=cfg.stochastic_round, key=key, rng_mode=cfg.rng_mode,
+                use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
+                device=dev,
+            )
+        elif dev is not None:
+            # dense gradient onto a write-nonideal device: same physics
+            # pipeline as the fused path, on the materialized gradient
+            planes = opa_device_update(
+                s.planes, g_eff, lr, s.frac_bits, spec, device=dev,
+                stochastic=cfg.stochastic_round, key=key,
+                rng_mode=cfg.rng_mode if cfg.rng_mode != "hw" else "counter",
                 use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
             )
         else:
@@ -430,10 +466,19 @@ def update_split(grads, digital, sliced, step, lr, cfg: PantherConfig = PantherC
             continue
         spec = pl.spec if pl is not None else cfg.spec
         key = jax.random.fold_in(base_key, i)
+        dev = _leaf_device(pl)
         if is_outer_product_grad(g):
             planes = opa_fused_update(
                 s.planes, g.x, g.dh, lr, s.frac_bits, spec,
                 stochastic=cfg.stochastic_round, key=key, rng_mode=cfg.rng_mode,
+                use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
+                device=dev,
+            )
+        elif dev is not None:
+            planes = opa_device_update(
+                s.planes, g, lr, s.frac_bits, spec, device=dev,
+                stochastic=cfg.stochastic_round, key=key,
+                rng_mode=cfg.rng_mode if cfg.rng_mode != "hw" else "counter",
                 use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
             )
         else:

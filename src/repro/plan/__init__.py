@@ -89,7 +89,12 @@ from typing import Any, Callable, NamedTuple
 import jax
 
 from repro.core.slicing import DEFAULT_SPEC, SliceSpec
-from repro.models.common import OPERAND_LINEAR_KEYS, FidelityConfig, path_str
+from repro.models.common import (
+    OPERAND_LINEAR_KEYS,
+    DeviceModel,
+    FidelityConfig,
+    path_str,
+)
 
 
 class _Unset:
@@ -256,10 +261,15 @@ def default_rules(cfg=None, fidelity: FidelityConfig | None = None,
 
 def _normalize(plan: LeafPlan) -> LeafPlan:
     # the finite-ADC engine rides the operand (xbar_linear) sites only; a
-    # fidelity config on any other leaf is inert — drop it so plans compare
-    # cleanly. An attached fid's spec must equal the leaf's plane layout.
+    # read-only fidelity config on any other leaf is inert — drop it so plans
+    # compare cleanly. A DeviceModel, though, applies at EVERY mapped leaf's
+    # deposit (dense-gradient leaves write through opa_device_update), so a
+    # device-bearing fidelity survives on mapped non-operand leaves with its
+    # read-side ADC fields intact-but-inert. An attached fid's spec must
+    # equal the leaf's plane layout.
     if plan.fidelity is not None:
-        if plan.grad != "operand" or not plan.mapped:
+        if not plan.mapped or (plan.grad != "operand"
+                               and plan.fidelity.device is None):
             return dataclasses.replace(plan, fidelity=None)
         if plan.fidelity.spec != plan.spec:
             return dataclasses.replace(
@@ -395,6 +405,9 @@ def _fidelity_to_dict(fid: FidelityConfig) -> dict:
 def _fidelity_from_dict(d: dict) -> FidelityConfig:
     d = dict(d)
     d["spec"] = SliceSpec(tuple(int(c) for c in d["spec"]))
+    # dataclasses.asdict nests DeviceModel as a plain dict — rebuild it
+    if d.get("device") is not None:
+        d["device"] = DeviceModel(**d["device"])
     return FidelityConfig(**d)
 
 
@@ -427,11 +440,39 @@ def plan_manifest(plan_tree) -> dict:
     return {p: leaf_plan_to_dict(pl) for p, pl in plan_by_path(plan_tree).items()}
 
 
+# DeviceModel fields that make stored planes *physically* device-specific:
+# planes deposited under write noise / asymmetry / stuck cells are not the
+# planes an ideal deposit would have produced, so restoring them into a plan
+# with different write physics silently changes what the checkpoint means.
+# Read-path fields (read_noise) and ADC settings stay runtime-free.
+_DEVICE_WRITE_FIELDS = ("write_noise", "asym_up", "asym_down", "stuck_frac", "stuck_seed")
+_DEVICE_WRITE_IDEAL = {"write_noise": 0.0, "asym_up": 1.0, "asym_down": 1.0,
+                       "stuck_frac": 0.0, "stuck_seed": 0}
+
+
+def _device_write_sig(fid) -> tuple:
+    """The write-physics signature of a fidelity entry (dataclass or manifest
+    dict, either may be None). Ideal device == absent device."""
+    dev = None
+    if isinstance(fid, dict):
+        dev = fid.get("device")
+        if isinstance(dev, dict):
+            return tuple(dev.get(f, _DEVICE_WRITE_IDEAL[f]) for f in _DEVICE_WRITE_FIELDS)
+    elif fid is not None:
+        dev = fid.device
+        if dev is not None:
+            return tuple(getattr(dev, f) for f in _DEVICE_WRITE_FIELDS)
+    return tuple(_DEVICE_WRITE_IDEAL[f] for f in _DEVICE_WRITE_FIELDS)
+
+
 def check_plan_compat(saved: dict, plan_tree, context: str = "checkpoint") -> None:
     """Raise ``ValueError`` when a persisted plan manifest and the current
-    plan disagree on *storage layout* (mapped / slice spec) for any shared
-    path. ``grad``/``fidelity``/``shard`` are runtime choices and may differ
-    freely; layout mismatches would silently misinterpret stored planes.
+    plan disagree on *storage layout* (mapped / slice spec) or on *write
+    physics* (``DeviceModel`` write-path fields) for any shared path.
+    ``grad``/``shard``/ADC/read-noise settings are runtime choices and may
+    differ freely; layout mismatches would silently misinterpret stored
+    planes, and a checkpoint trained under write noise must not silently
+    restore into an ideal-device plan (or vice versa).
     """
     errors = []
     for path, pl in plan_by_path(plan_tree).items():
@@ -446,6 +487,15 @@ def check_plan_compat(saved: dict, plan_tree, context: str = "checkpoint") -> No
             errors.append(
                 f"  {path}: saved spec={meta['spec']} vs current spec={pl.spec.name()}"
             )
+        elif pl.mapped:
+            ssig = _device_write_sig(meta.get("fidelity"))
+            csig = _device_write_sig(pl.fidelity)
+            if ssig != csig:
+                errors.append(
+                    f"  {path}: saved device write physics "
+                    f"{dict(zip(_DEVICE_WRITE_FIELDS, ssig))} vs current "
+                    f"{dict(zip(_DEVICE_WRITE_FIELDS, csig))}"
+                )
     if errors:
         raise ValueError(
             f"{context} plan is layout-incompatible with the current plan "
@@ -457,6 +507,7 @@ def check_plan_compat(saved: dict, plan_tree, context: str = "checkpoint") -> No
 
 __all__ = [
     "UNSET",
+    "DeviceModel",
     "LeafInfo",
     "LeafPlan",
     "PlanRule",

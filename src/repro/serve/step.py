@@ -59,15 +59,23 @@ def fidelity_params(params, sliced, fid=None, plan=None, mesh=None):
     own hints. Serve through fns built with the same ``mesh`` so the reads
     actually trace inside the ShardCtx.
     """
-    if mesh is not None:
-        from repro import plan as planlib
+    from repro import plan as planlib
 
-        if plan is None and fid is not None:
-            duck = types.SimpleNamespace(spec=fid.spec)  # min_ndim/min_dim default
-            plan = planlib.resolve_plan(params, planlib.default_rules(duck, fidelity=fid))
-            fid = None
-        if plan is not None:
-            plan = planlib.attach_fidelity_shard_dims(plan, mesh, params)
+    if plan is None and fid is not None:
+        # legacy uniform-fid spelling rides the equivalent default rule set
+        # (per-leaf plan is the single source of truth now)
+        import warnings
+
+        warnings.warn(
+            "fidelity_params(fid=...) is deprecated; pass a resolved plan= "
+            "built from repro.plan.default_rules(cfg, fidelity=...)",
+            DeprecationWarning, stacklevel=2,
+        )
+        duck = types.SimpleNamespace(spec=fid.spec)  # min_ndim/min_dim default
+        plan = planlib.resolve_plan(params, planlib.default_rules(duck, fidelity=fid))
+        fid = None
+    if mesh is not None and plan is not None:
+        plan = planlib.attach_fidelity_shard_dims(plan, mesh, params)
     return panther.fidelitize(params, sliced, fid, plan=plan)
 
 

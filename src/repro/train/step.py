@@ -222,12 +222,23 @@ def make_train_step(
     ``repro.plan.operand_stash_rule`` to the default rules: leaves whose
     operand stash would outweigh the dense gradient fall back to the
     (bit-compatible) dense deposit path."""
+    explicit_fid = fidelity is not None
     fidelity = fidelity if fidelity is not None else cfg.fidelity
     if (plan is not None or plan_rules is not None) and fidelity is not None:
         raise ValueError("with an explicit plan, attach fidelity per-leaf via "
                          "PlanRule(fidelity=...) instead of the fidelity arg")
     if plan is not None and plan_rules is not None:
         raise ValueError("pass either a resolved plan or plan_rules, not both")
+    if explicit_fid:
+        import warnings
+
+        warnings.warn(
+            "make_train_step(fidelity=...) is deprecated; pass plan_rules="
+            "repro.plan.default_rules(opt_cfg, fidelity=...) (or a resolved "
+            "plan=) — the declarative plan is the single source of truth for "
+            "per-leaf fidelity",
+            DeprecationWarning, stacklevel=2,
+        )
     if stash_fallback and (plan is not None or plan_rules is not None):
         # an explicit plan/rule list owns its rule set: appending behind the
         # caller's back would reorder overrides — append operand_stash_rule()
@@ -256,8 +267,12 @@ def make_train_step(
     # specs. Rules re-resolve at trace time with the real token count so
     # token-dependent rules (operand-stash fallback) can flip leaves.
     rules = tuple(plan_rules) if plan_rules is not None else None
-    if rules is None and plan is None and stash_fallback:
-        rules = planlib.default_rules(opt_cfg, fidelity=fidelity, stash_fallback=True)
+    if rules is None and plan is None and (stash_fallback or fidelity is not None):
+        # the legacy fidelity= spelling (and cfg.fidelity) rides the
+        # equivalent default rule set — byte-identical to the old direct
+        # path (tested: test_uniform_plan_fidelity_matches_legacy_arg)
+        rules = planlib.default_rules(opt_cfg, fidelity=fidelity,
+                                      stash_fallback=stash_fallback)
         fidelity = None  # rides the plan from here on
     plan0 = plan
     if plan0 is None and rules is not None:

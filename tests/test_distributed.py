@@ -76,6 +76,7 @@ def test_train_step_runs_on_mesh():
         from repro.configs import get_smoke
         from repro.optim import PantherConfig
         from repro.optim.schedules import constant
+        from repro.plan import default_rules
         from repro.train.step import (batch_specs, make_train_step,
                                       train_state_init, train_state_specs)
         mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -181,13 +182,15 @@ def test_fidelity_mesh_step_builds():
     from repro.configs import fidelity_presets, get_smoke
     from repro.optim import PantherConfig
     from repro.optim.schedules import constant
+    from repro.plan import default_rules
     from repro.train.step import make_train_step
 
     cfg = dataclasses.replace(get_smoke("gemma_2b"), dtype=jnp.float32)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    step = make_train_step(cfg, PantherConfig(stochastic_round=False), constant(0.1),
-                           mesh=mesh, global_batch=4,
-                           fidelity=fidelity_presets()["adc9"])
+    opt = PantherConfig(stochastic_round=False)
+    step = make_train_step(cfg, opt, constant(0.1), mesh=mesh, global_batch=4,
+                           plan_rules=default_rules(
+                               opt, fidelity=fidelity_presets()["adc9"]))
     assert callable(step)
 
 
@@ -238,6 +241,7 @@ def test_sharded_fidelity_train_step_matches_single_host():
         from repro.configs import fidelity_presets, get_smoke
         from repro.optim import PantherConfig
         from repro.optim.schedules import constant
+        from repro.plan import default_rules
         from repro.train.step import (batch_specs, make_train_step,
                                       train_state_init, train_state_specs)
         cfg = dataclasses.replace(get_smoke("gemma_2b"), dtype=jnp.float32)
@@ -247,7 +251,8 @@ def test_sharded_fidelity_train_step_matches_single_host():
                  "labels": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)}
         fid = fidelity_presets()["ideal"]
         s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
-        step1 = jax.jit(make_train_step(cfg, opt, constant(0.3), fidelity=fid))
+        step1 = jax.jit(make_train_step(cfg, opt, constant(0.3),
+                                         plan_rules=default_rules(opt, fidelity=fid)))
         s1, ma = step1(s0, batch)
         s1, mb = step1(s1, batch)
         mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -257,7 +262,7 @@ def test_sharded_fidelity_train_step_matches_single_host():
             st = train_state_init(cfg, opt, jax.random.PRNGKey(0))
             jitted = jax.jit(
                 make_train_step(cfg, opt, constant(0.3), mesh=mesh, global_batch=B,
-                                fidelity=fid),
+                                plan_rules=default_rules(opt, fidelity=fid)),
                 in_shardings=(named(train_state_specs(cfg, opt, mesh)),
                               named(batch_specs(cfg, mesh, B))))
             st, na = jitted(st, batch)
@@ -270,7 +275,8 @@ def test_sharded_fidelity_train_step_matches_single_host():
             st = train_state_init(cfg, opt, jax.random.PRNGKey(0))
             jitted6 = jax.jit(
                 make_train_step(cfg, opt, constant(0.3), mesh=mesh, global_batch=B,
-                                fidelity=fidelity_presets()["adc6"]),
+                                plan_rules=default_rules(
+                                    opt, fidelity=fidelity_presets()["adc6"])),
                 in_shardings=(named(train_state_specs(cfg, opt, mesh)),
                               named(batch_specs(cfg, mesh, B))))
             st6, m6 = jitted6(st, batch)

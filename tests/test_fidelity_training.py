@@ -32,6 +32,7 @@ from repro.kernels.sliced_mvm import mvm_sliced, mvm_sliced_batched
 from repro.models.common import FidelityConfig, OuterProductGrad, XbarWeight, xbar_linear
 from repro.optim import PantherConfig, panther
 from repro.optim.schedules import constant
+from repro.plan import default_rules, resolve_plan
 from repro.serve.step import fidelity_params
 from repro.train.step import make_train_step, train_state_init
 
@@ -295,7 +296,7 @@ def test_fidelity_step_disabled_paths_bit_identical_to_plain():
     s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
     sa, ma = jax.jit(make_train_step(cfg, opt, constant(0.5)))(s0, batch)
     s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
-    sb, mb = jax.jit(make_train_step(cfg, opt, constant(0.5), fidelity=fid))(s0, batch)
+    sb, mb = jax.jit(make_train_step(cfg, opt, constant(0.5), plan_rules=default_rules(opt, fidelity=fid)))(s0, batch)
 
     assert float(ma["loss"]) == float(mb["loss"])
     for a, b in zip(jax.tree.leaves(sa.sliced), jax.tree.leaves(sb.sliced)):
@@ -313,8 +314,9 @@ def test_fidelity_step_ideal_adc_tracks_float_step():
     sf = train_state_init(cfg, opt, jax.random.PRNGKey(0))
     stepf = jax.jit(make_train_step(cfg, opt, constant(0.3)))
     si = train_state_init(cfg, opt, jax.random.PRNGKey(0))
-    stepi = jax.jit(make_train_step(cfg, opt, constant(0.3),
-                                    fidelity=fidelity_presets()["ideal"]))
+    stepi = jax.jit(make_train_step(
+        cfg, opt, constant(0.3),
+        plan_rules=default_rules(opt, fidelity=fidelity_presets()["ideal"])))
     for i in range(3):
         sf, mf = stepf(sf, ds.batch(i))
         si, mi = stepi(si, ds.batch(i))
@@ -353,11 +355,13 @@ def test_fidelity_bwd_only_keeps_forward_loss():
     batch = _batch(cfg)
     presets = fidelity_presets()
     s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
-    _, m_ideal = jax.jit(make_train_step(cfg, opt, constant(0.3),
-                                         fidelity=presets["ideal"]))(s0, batch)
+    _, m_ideal = jax.jit(make_train_step(
+        cfg, opt, constant(0.3),
+        plan_rules=default_rules(opt, fidelity=presets["ideal"])))(s0, batch)
     s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
-    _, m_bwd = jax.jit(make_train_step(cfg, opt, constant(0.3),
-                                       fidelity=presets["adc6_bwd"]))(s0, batch)
+    _, m_bwd = jax.jit(make_train_step(
+        cfg, opt, constant(0.3),
+        plan_rules=default_rules(opt, fidelity=presets["adc6_bwd"])))(s0, batch)
     assert float(m_ideal["loss"]) == float(m_bwd["loss"])
     assert float(m_ideal["grad_norm"]) != float(m_bwd["grad_norm"])
 
@@ -367,8 +371,9 @@ def test_fidelity_step_microbatched_runs():
     opt = PantherConfig(stochastic_round=False, crs_every=1000)
     batch = _batch(cfg, B=8, S=16)
     mb = jax.tree.map(lambda x: x.reshape(4, 2, *x.shape[1:]), batch)
-    step = jax.jit(make_train_step(cfg, opt, constant(0.3), microbatches=4,
-                                   fidelity=fidelity_presets()["adc9"]))
+    step = jax.jit(make_train_step(
+        cfg, opt, constant(0.3), microbatches=4,
+        plan_rules=default_rules(opt, fidelity=fidelity_presets()["adc9"])))
     s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
     _, m = step(s0, mb)
     assert np.isfinite(float(m["loss"]))
@@ -379,8 +384,9 @@ def test_fidelity_step_mla_arch_runs():
     all read planes at finite ADC)."""
     cfg = _f32_cfg("deepseek_v2_lite_16b")
     opt = PantherConfig(stochastic_round=False, crs_every=1000)
-    step = jax.jit(make_train_step(cfg, opt, constant(0.1),
-                                   fidelity=fidelity_presets()["adc9"]))
+    step = jax.jit(make_train_step(
+        cfg, opt, constant(0.1),
+        plan_rules=default_rules(opt, fidelity=fidelity_presets()["adc9"])))
     s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
     _, m = step(s0, _batch(cfg))
     assert np.isfinite(float(m["loss"]))
@@ -389,7 +395,7 @@ def test_fidelity_step_mla_arch_runs():
 def test_fidelity_requires_operand_pipeline():
     cfg = _f32_cfg()
     opt = PantherConfig()
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError), pytest.warns(DeprecationWarning):
         make_train_step(cfg, opt, constant(0.1), operand_grads=False,
                         fidelity=FidelityConfig())
 
@@ -409,12 +415,14 @@ def test_fidelity_serving_prefill_tracks_dense():
     inputs = _batch(cfg)["inputs"]
 
     logits_d, _ = jax.jit(lambda p, x: lm.prefill(cfg, p, x))(params, inputs)
-    p_fid = fidelity_params(params, state.sliced, FidelityConfig())
+    p_fid = fidelity_params(params, state.sliced, plan=resolve_plan(
+        params, default_rules(opt, fidelity=FidelityConfig())))
     logits_i, _ = jax.jit(lambda p, x: lm.prefill(cfg, p, x))(p_fid, inputs)
     np.testing.assert_allclose(
         np.asarray(logits_i), np.asarray(logits_d), rtol=2e-3, atol=2e-3
     )
-    p6 = fidelity_params(params, state.sliced, FidelityConfig(adc_bits_fwd=6))
+    p6 = fidelity_params(params, state.sliced, plan=resolve_plan(
+        params, default_rules(opt, fidelity=FidelityConfig(adc_bits_fwd=6))))
     logits_6, _ = jax.jit(lambda p, x: lm.prefill(cfg, p, x))(p6, inputs)
     assert np.isfinite(np.asarray(logits_6)).all()
     assert (np.asarray(logits_6) != np.asarray(logits_d)).any()

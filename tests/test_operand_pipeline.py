@@ -17,7 +17,8 @@ from repro.configs import get_smoke
 from repro.core import DEFAULT_SPEC, dequantize_planes, slice_weights
 from repro.core.fixed_point import quantize
 from repro.kernels.sliced_opa import opa_deposit, opa_fused_update
-from repro.models.common import OuterProductGrad, XbarWeight, is_operand_path, xbar_linear
+from repro.models.common import OuterProductGrad, XbarWeight, xbar_linear
+from repro.plan import operand_eligible_path
 from repro.optim import PantherConfig, panther
 from repro.optim.schedules import constant
 from repro.train.step import make_train_step, train_state_init
@@ -88,22 +89,22 @@ def test_grad_norm_chunked_matches_direct(t, monkeypatch):
 
 
 def test_operand_path_selector():
-    assert is_operand_path("groups/0/attn/wqkv")
-    assert is_operand_path("groups/0/attn/wq_dkv")  # fused MLA q + dkv
-    assert is_operand_path("groups/1/mlp/wi_gate")
-    assert is_operand_path("groups/2/attn/w_uk")
-    assert is_operand_path("groups/0/local/attn/wo")  # gemma2 pair
-    assert not is_operand_path("embed")
-    assert not is_operand_path("lm_head")
-    assert not is_operand_path("shared/wq")  # multi-invocation zamba block
-    assert not is_operand_path("groups/1/moe/shared/wo")  # dense-run experts
-    assert not is_operand_path("groups/0/moe/experts_gate")
+    assert operand_eligible_path("groups/0/attn/wqkv")
+    assert operand_eligible_path("groups/0/attn/wq_dkv")  # fused MLA q + dkv
+    assert operand_eligible_path("groups/1/mlp/wi_gate")
+    assert operand_eligible_path("groups/2/attn/w_uk")
+    assert operand_eligible_path("groups/0/local/attn/wo")  # gemma2 pair
+    assert not operand_eligible_path("embed")
+    assert not operand_eligible_path("lm_head")
+    assert not operand_eligible_path("shared/wq")  # multi-invocation zamba block
+    assert not operand_eligible_path("groups/1/moe/shared/wo")  # dense-run experts
+    assert not operand_eligible_path("groups/0/moe/experts_gate")
     # xlstm mlstm blocks name their projections wq/wk/wv, but consume them
     # via plain matmuls — no attn/mlp segment, and the keys left the operand
     # set with the MLA fusion; they must stay dense either way
-    assert not is_operand_path("groups/0/wq")
-    assert not is_operand_path("groups/0/attn/wq")  # pre-fusion key, retired
-    assert not is_operand_path("groups/2/wk")
+    assert not operand_eligible_path("groups/0/wq")
+    assert not operand_eligible_path("groups/0/attn/wq")  # pre-fusion key, retired
+    assert not operand_eligible_path("groups/2/wk")
 
 
 @pytest.mark.parametrize("arch", ["xlstm_125m", "zamba2_1p2b", "granite_moe_1b_a400m"])
@@ -248,7 +249,7 @@ def test_fused_step_microbatch_matches_full_batch():
     )
     assert diffs
     for ps, (d, ulp) in diffs.items():
-        if is_operand_path(ps):
+        if operand_eligible_path(ps):
             # operand leaves: identical token set, one contraction — exact to
             # a single weight-grid ulp (reassociated token sum)
             assert d <= ulp + 1e-12, (ps, d, ulp)
@@ -294,7 +295,7 @@ def test_fused_step_jaxpr_has_no_dense_weight_grad():
 
     def collect(path, s):
         ps = "/".join(str(getattr(k, "key", getattr(k, "idx", "?"))) for k in path)
-        if s is not None and is_operand_path(ps):
+        if s is not None and operand_eligible_path(ps):
             opshapes.add(tuple(s.planes.shape[1:]))
             opshapes.add(tuple(s.planes.shape[-2:]))
 

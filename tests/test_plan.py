@@ -25,7 +25,8 @@ from repro.checkpoint import CheckpointManager, restore_latest, save_checkpoint
 from repro.configs import ARCH_IDS, get, get_smoke
 from repro.core import SliceSpec
 from repro.models import lm
-from repro.models.common import OPERAND_LINEAR_KEYS, FidelityConfig, path_str
+from repro.models.common import (OPERAND_LINEAR_KEYS, DeviceModel,
+                                 FidelityConfig, path_str)
 from repro.optim import PantherConfig, panther
 from repro.optim.schedules import constant
 from repro.plan import (
@@ -63,7 +64,7 @@ GOLDEN_PARTITION = {
 
 def _legacy_category(ps: str, shape, dtype, cfg: PantherConfig) -> str:
     """Independent reimplementation of the pre-plan dispatch: the
-    ``_is_crossbar_mapped`` shape heuristic + the ``is_operand_path`` name
+    ``_is_crossbar_mapped`` shape heuristic + the ``operand_eligible_path`` name
     rule, written out literally so the golden test cannot drift with the
     implementation it checks."""
     mapped = (
@@ -269,7 +270,9 @@ def test_uniform_plan_fidelity_matches_legacy_arg():
         "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0, cfg.vocab),
     }
     s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
-    sa, ma = jax.jit(make_train_step(cfg, opt, constant(0.3), fidelity=fid))(s0, batch)
+    with pytest.warns(DeprecationWarning, match="plan_rules"):
+        legacy = make_train_step(cfg, opt, constant(0.3), fidelity=fid)
+    sa, ma = jax.jit(legacy)(s0, batch)
     rules = default_rules(opt, fidelity=fid)
     sb, mb = jax.jit(make_train_step(cfg, opt, constant(0.3), plan_rules=rules))(s0, batch)
     assert float(ma["loss"]) == float(mb["loss"])
@@ -324,6 +327,12 @@ def test_leaf_plan_dict_round_trip():
         LeafPlan(mapped=True, spec=SliceSpec.uniform(6), grad="operand",
                  fidelity=FidelityConfig(adc_bits_fwd=9, adc_bits_bwd=6,
                                          spec=SliceSpec.uniform(6))),
+        LeafPlan(mapped=True, spec=SliceSpec.uniform(5), grad="operand",
+                 fidelity=FidelityConfig(
+                     adc_bits_fwd=9, spec=SliceSpec.uniform(5),
+                     device=DeviceModel(write_noise=0.5, asym_up=1.2,
+                                        asym_down=0.8, stuck_frac=0.01,
+                                        stuck_seed=7, read_noise=0.02))),
         LeafPlan(mapped=True, grad="dense", shard=(None, "model")),
         LeafPlan(mapped=True, shard=(("pod", "data"), None)),
     ]
@@ -391,3 +400,51 @@ def test_plan_compat_ignores_runtime_fields():
         PlanRule("*", grad="operand", shard=(None, "model")),
     ))
     check_plan_compat(plan_manifest(a), b)  # no raise
+
+
+def test_plan_compat_gates_device_write_physics(tmp_path):
+    """A checkpoint trained under write-nonideal device physics must not
+    silently restore into an ideal-device plan (or under different write
+    physics) — planes written through noise/asymmetry are different cells.
+    Read-side fields (ADC bits, read_noise) stay runtime-free."""
+    cfg = dataclasses.replace(get_smoke("gemma_2b"), dtype=jnp.float32)
+    opt = PantherConfig()
+    shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+
+    def dev_plan(device):
+        fid = FidelityConfig(spec=opt.spec, device=device)
+        return resolve_plan(shapes, default_rules(opt, fidelity=fid))
+
+    noisy = dev_plan(DeviceModel(write_noise=0.5, asym_up=1.2, asym_down=0.8))
+    ideal = resolve_plan(shapes, default_rules(opt))
+
+    # manifest-level: write-physics mismatch raises both ways
+    with pytest.raises(ValueError, match="write physics"):
+        check_plan_compat(plan_manifest(noisy), ideal)
+    with pytest.raises(ValueError, match="write physics"):
+        check_plan_compat(plan_manifest(ideal), noisy)
+    with pytest.raises(ValueError, match="write physics"):
+        check_plan_compat(plan_manifest(noisy),
+                          dev_plan(DeviceModel(write_noise=0.25)))
+    # same write physics: compatible with itself, and an all-ideal
+    # DeviceModel() equals no device at all
+    check_plan_compat(plan_manifest(noisy), dev_plan(
+        DeviceModel(write_noise=0.5, asym_up=1.2, asym_down=0.8)))
+    check_plan_compat(plan_manifest(ideal), dev_plan(DeviceModel()))
+    # read-side-only fields are runtime choices — no raise
+    check_plan_compat(plan_manifest(ideal),
+                      dev_plan(DeviceModel(read_noise=0.05)))
+
+    # end to end through restore_latest: the manifest json round-trips the
+    # nested DeviceModel and still gates the restore
+    state = train_state_init(cfg, opt, jax.random.PRNGKey(0), plan=noisy)
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 2, state, plan=noisy)
+    restored, step = restore_latest(d, state, plan=dev_plan(
+        DeviceModel(write_noise=0.5, asym_up=1.2, asym_down=0.8)))
+    assert step == 2
+    with pytest.raises(ValueError, match="layout-incompatible"):
+        restore_latest(d, state, plan=ideal)
+    with pytest.raises(ValueError, match="layout-incompatible"):
+        restore_latest(d, state, plan=dev_plan(
+            DeviceModel(write_noise=0.5, asym_up=1.5, asym_down=0.8)))
