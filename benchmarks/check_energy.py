@@ -1,0 +1,250 @@
+"""CI gate over ``BENCH_energy.json`` (the energy-smoke artifact).
+
+The companion of ``check_fidelity.py`` for the plan-compiled energy stack:
+where that script gates training *numerics*, this one gates the *priced
+schedules* — the paper's §7.3/§7.4 energy claims re-derived from the packed
+per-leaf programs ``repro.isa.plan_compile`` emits. A fresh record fails
+the job when
+
+1. any number anywhere in the record is non-finite — a NaN ratio means the
+   pricing walk divided by a zero baseline or a cost table went bad;
+2. the §7.3 calibration anchors moved: ``_meta.anchors`` must carry the
+   paper constants exactly (ReRAM MVM 35.10 nJ, ReRAM OPA 11.37 nJ, CMOS
+   OPA 37.28 nJ) and ``_meta.adc_tax`` the §6.3 tax 1.175 — these pin
+   ``EnergyModel`` to the paper and every ratio hangs off them;
+3. the MLP (the paper's fig11-14 workload) leaves its bands: at tokens=1
+   PANTHER-vs-digital in [6, 9] (paper 7.01-8.02x) and
+   PANTHER-vs-serial-write in [25, 60] (paper 31.03-54.21x); at minibatch
+   the serial-write advantage must amortize into [1.0, 3.0] (§7.4:
+   1.18-2.16x) — OPA fusion only wins big when updates dominate;
+4. any config at any token count prices PANTHER at or above a baseline it
+   should beat (``vs_digital``/``vs_serial_write`` <= 1), or the
+   serial-write ratio fails to shrink as tokens grow (amortization is the
+   §7.4 mechanism, not an accident of one point);
+5. the heterogeneous fig10 plan shows no measurable energy delta against
+   the homogeneous adc9 plan (|delta_frac| <= 1e-3): the whole point of
+   per-leaf fidelity is that the plan edit reaches the joules;
+6. the ``tiki_taka`` record shows no extra memory traffic, or no per-leaf
+   attribution — the momentum buffer's read-modify-write joules must be
+   visible per leaf, not smeared into a total;
+7. (with ``--baseline``) a shared ratio drifts beyond ``--drift-tol``
+   relative from the committed record, or the modes differ (the pricing is
+   analytic and deterministic; any drift is a schedule or cost change that
+   needs a blessed baseline).
+
+Refreshing the baseline after an intended pricing/schedule change::
+
+    JAX_PLATFORMS=cpu python -m benchmarks.isa_energy
+    git add BENCH_energy.json   # commit alongside the pricing change
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .gate_common import (check_modes, finite, load_json, refresh_hint,
+                          run_gate)
+
+ANCHORS = {"e_mvm_reram": 35.10, "e_opa_reram": 11.37, "e_opa_cmos": 37.28}
+ADC_TAX = 1.175
+
+MLP_T1_DIGITAL = (6.0, 9.0)
+MLP_T1_SERIAL = (25.0, 60.0)
+MINIBATCH_SERIAL = (1.0, 3.0)
+
+REFRESH_HINT = refresh_hint(
+    "JAX_PLATFORMS=cpu python -m benchmarks.isa_energy",
+    "BENCH_energy.json",
+    "this change (a pricing change, a schedule change, a plan-rule change)",
+)
+
+
+def _walk_finite(node, path: str, failures: list[str]) -> None:
+    if isinstance(node, dict):
+        for k, v in sorted(node.items()):
+            _walk_finite(v, f"{path}.{k}", failures)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _walk_finite(v, f"{path}[{i}]", failures)
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        if not finite(node):
+            failures.append(f"{path} = {node!r} — non-finite number in the record")
+
+
+def check_anchors(fresh: dict) -> list[str]:
+    failures = []
+    anchors = fresh.get("_meta", {}).get("anchors")
+    if not isinstance(anchors, dict):
+        return ["_meta.anchors missing — the record no longer declares the "
+                "§7.3 constants it was priced with"]
+    for key, want in sorted(ANCHORS.items()):
+        got = anchors.get(key)
+        if got != want:
+            failures.append(
+                f"§7.3 anchor drift: {key} = {got!r}, paper value {want} — "
+                f"EnergyModel came unpinned from Table 5"
+            )
+    tax = fresh.get("_meta", {}).get("adc_tax")
+    if tax != ADC_TAX:
+        failures.append(
+            f"§6.3 ADC tax drift: _meta.adc_tax = {tax!r}, paper value "
+            f"{ADC_TAX} — the packed-MVM reference pricing moved"
+        )
+    return failures
+
+
+def check_ratios(fresh: dict) -> list[str]:
+    failures: list[str] = []
+    configs = fresh.get("configs", {})
+    if len(configs) < 2:
+        return [f"only {len(configs)} config(s) in the record — the gate "
+                f"needs the MLP and a transformer"]
+    for name, rec in sorted(configs.items()):
+        rows = rec.get("tokens", {})
+        by_tok = sorted(((int(t), row) for t, row in rows.items()))
+        if len(by_tok) < 2:
+            failures.append(f"configs.{name}: fewer than two token points — "
+                            f"the amortization axis is gone")
+            continue
+        for tok, row in by_tok:
+            for ratio in ("vs_digital", "vs_serial_write"):
+                v = row.get(ratio)
+                if not finite(v) or v <= 1.0:
+                    failures.append(
+                        f"configs.{name} tokens={tok}: {ratio} = {v!r} — "
+                        f"PANTHER no longer beats this baseline"
+                    )
+        serial = [row.get("vs_serial_write") for _, row in by_tok]
+        if all(finite(v) for v in serial) and serial[-1] >= serial[0]:
+            failures.append(
+                f"configs.{name}: vs_serial_write did not shrink with tokens "
+                f"({serial[0]:.2f} -> {serial[-1]:.2f}) — the serial-write "
+                f"cost stopped amortizing over the minibatch (§7.4)"
+            )
+        mb = by_tok[-1][1].get("vs_serial_write")
+        if finite(mb) and not (MINIBATCH_SERIAL[0] < mb < MINIBATCH_SERIAL[1]):
+            failures.append(
+                f"configs.{name} minibatch vs_serial_write = {mb:.2f} outside "
+                f"({MINIBATCH_SERIAL[0]}, {MINIBATCH_SERIAL[1]}) — §7.4 puts "
+                f"the amortized advantage at 1.18-2.16x"
+            )
+    mlp = configs.get("mlp", {}).get("tokens", {}).get("1")
+    if mlp is None:
+        failures.append("configs.mlp.tokens.1 missing — the paper-workload "
+                        "SGD point is the gate's main §7.3 check")
+    else:
+        for ratio, (lo, hi) in (("vs_digital", MLP_T1_DIGITAL),
+                                ("vs_serial_write", MLP_T1_SERIAL)):
+            v = mlp.get(ratio)
+            if not finite(v) or not (lo < v < hi):
+                failures.append(
+                    f"MLP tokens=1 {ratio} = {v!r} outside ({lo}, {hi}) — "
+                    f"the §7.3 band re-derived from the packed schedule"
+                )
+    return failures
+
+
+def check_hetero(fresh: dict) -> list[str]:
+    het = fresh.get("hetero", {})
+    delta = het.get("delta_frac")
+    if not finite(delta):
+        return [f"hetero.delta_frac = {delta!r} — the fig10 hetero-vs-"
+                f"homogeneous comparison is missing or non-finite"]
+    if abs(delta) <= 1e-3:
+        return [
+            f"hetero.delta_frac = {delta:.2e}: the heterogeneous fig10 plan "
+            f"prices within 0.1% of the homogeneous adc9 plan — per-leaf "
+            f"fidelity no longer reaches the energy model"
+        ]
+    return []
+
+
+def check_tiki(fresh: dict) -> list[str]:
+    tt = fresh.get("tiki_taka", {})
+    failures = []
+    extra = tt.get("extra_mem_nj")
+    if not finite(extra) or extra <= 0:
+        failures.append(
+            f"tiki_taka.extra_mem_nj = {extra!r} — the momentum buffer's "
+            f"extra write traffic is no longer priced"
+        )
+    per_leaf = tt.get("per_leaf_extra_nj", {})
+    if not per_leaf or not all(finite(v) and v > 0 for v in per_leaf.values()):
+        failures.append(
+            "tiki_taka.per_leaf_extra_nj is empty or non-positive — the "
+            "extra traffic must be attributable per leaf"
+        )
+    return failures
+
+
+def check_baseline(base: dict, fresh: dict, drift_tol: float) -> list[str]:
+    failures = check_modes(
+        base, fresh, what="energy records",
+        full_refresh="JAX_PLATFORMS=cpu python -m benchmarks.isa_energy "
+                     "&& git add BENCH_energy.json",
+    )
+    if failures:
+        return failures
+
+    def rows(rec):
+        out = {}
+        for name, c in rec.get("configs", {}).items():
+            for tok, row in c.get("tokens", {}).items():
+                for ratio in ("vs_digital", "vs_serial_write", "panther_nj"):
+                    out[f"{name}/t{tok}/{ratio}"] = row.get(ratio)
+        out["hetero/delta_frac"] = rec.get("hetero", {}).get("delta_frac")
+        out["tiki_taka/extra_mem_nj"] = rec.get("tiki_taka", {}).get("extra_mem_nj")
+        return out
+
+    b, f = rows(base), rows(fresh)
+    shared = sorted(set(b) & set(f))
+    if len(shared) < 4:
+        return [f"only {len(shared)} priced quantities shared with the "
+                f"baseline — the committed record is stale and the gate vacuous"]
+    for key in shared:
+        bv, fv = b[key], f[key]
+        if not (finite(bv) and finite(fv)):
+            continue
+        rel = abs(fv - bv) / (1 + abs(bv))
+        if rel > drift_tol:
+            failures.append(
+                f"{key}: {bv:.6g} -> {fv:.6g} (rel drift {rel:.2e} > "
+                f"{drift_tol:.0e}) — the pricing is deterministic, so this is "
+                f"a schedule or cost-model change that needs a blessed baseline"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True, help="freshly produced energy JSON")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON (default: skip drift check)")
+    ap.add_argument("--drift-tol", type=float, default=1e-6,
+                    help="max relative drift vs the committed baseline "
+                    "(the pricing is analytic — near-exact is the bar)")
+    args = ap.parse_args(argv)
+
+    fresh = load_json(args.fresh)
+    failures: list[str] = []
+    _walk_finite(fresh, "record", failures)
+    failures += check_anchors(fresh)
+    failures += check_ratios(fresh)
+    failures += check_hetero(fresh)
+    failures += check_tiki(fresh)
+    if args.baseline is not None:
+        failures += check_baseline(load_json(args.baseline), fresh, args.drift_tol)
+
+    n_cfg = len(fresh.get("configs", {}))
+    return run_gate(
+        "ENERGY", failures,
+        f"energy gate OK: {n_cfg} configs in the §7.3/§7.4 bands, anchors "
+        f"exact (35.10/11.37/37.28 nJ, tax {ADC_TAX}), hetero plan delta "
+        f"measurable, tiki-taka traffic attributed"
+        + ("" if args.baseline is None else ", no drift vs baseline"),
+        REFRESH_HINT,
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,10 @@ Pareto-dominate uniform ones; any config with a 3-bit slice degrades (paper:
 "Any configuration using 3 bit slices leads to significant accuracy
 degradation").
 
+Part 1b (``io_sweep``): the IO/DAC-width axis at the paper spec — serving
+loss vs the packed-MVM energy/latency of each width (the loss companion to
+``BENCH_energy.json``'s ``io_points``).
+
 Part 2 (``hetero_plan_demo``): what the paper's *programmability* headline
 actually buys — ONE model whose layer groups run different crossbar
 configurations simultaneously. A three-line ``PlanRule`` list gives the
@@ -103,6 +107,48 @@ def spec_sweep(steps: int = 400, lr: float = 0.03):
     emit("fig10/paper_claims", 0.0,
          f"paper_pick_loss={paper_pick:.4f};3bit_always_worst={best_3bit > worst_non3};"
          f"hetero_beats_uniform4={paper_pick < results['44444444']['loss']}")
+    return results
+
+
+def io_sweep(steps: int = 400, lr: float = 0.03):
+    """The fig10 IO-resolution axis: train once at the paper's 44466555
+    spec, then read the trained planes back at DAC/IO widths 8/12/16 and
+    price each width's *packed* MVM round
+    (``repro.isa.energy.EnergyModel.mvm_packed`` — energy and latency scale
+    with the ``io_bits - 1`` bit-plane rounds the plan compiler schedules).
+    The (loss, energy, latency) triples are the loss companion to the
+    energy bench's ``io_points`` section in ``BENCH_energy.json``."""
+    from repro.isa.energy import DEFAULT_ENERGY, PAPER_BITS
+
+    from .fig9_slice_crs import _fwd_fidelity
+
+    key = jax.random.PRNGKey(0)
+    params0 = _mlp(jax.random.fold_in(key, 1))
+    teacher = _mlp(jax.random.fold_in(key, 2))
+    x = jax.random.normal(jax.random.fold_in(key, 3), (512, 64), jnp.float32)
+    batch = (x, _fwd(teacher, x))
+
+    spec = SliceSpec(tuple(int(c) for c in "44466555"))
+    cfg = PantherConfig(spec=spec, crs_every=1024, stochastic_round=False)
+    state = panther.init(params0, cfg)
+    p = panther.materialize(params0, state, cfg)
+    step = jax.jit(
+        lambda p, s: panther.update(jax.grad(_loss)(p, batch), s, p, jnp.float32(lr), cfg)
+    )
+    for _ in range(steps):
+        p, state = step(p, state)
+
+    results = {}
+    for io in (8, 12, 16):
+        loss = float(jnp.mean(
+            (_fwd_fidelity(p, state, cfg, x, adc_bits=9, io_bits=io) - batch[1]) ** 2))
+        e_nj, lat_ns = DEFAULT_ENERGY.mvm_packed(PAPER_BITS, io, 9)
+        results[f"io{io}"] = {
+            "io_bits": io, "adc_bits": 9, "loss": loss,
+            "mvm_tile_nj": e_nj, "mvm_tile_ns": lat_ns,
+        }
+        emit(f"fig10/io{io}", 0.0,
+             f"loss={loss:.4f};mvm_tile_nj={e_nj:.2f};mvm_tile_ns={lat_ns:.2f}")
     return results
 
 
@@ -204,6 +250,7 @@ def main():
     # smoke keeps CI fast: the tensor-granularity sweep trains 9 configs x
     # 400 steps — full runs only outside BENCH_SMOKE
     results["spec_sweep"] = spec_sweep(steps=3 if SMOKE else 400)
+    results["io_sweep"] = io_sweep(steps=3 if SMOKE else 400)
     with open(FIG10_JSON, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     emit("fig10/json", 0.0, f"wrote={FIG10_JSON}")

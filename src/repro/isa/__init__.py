@@ -1,3 +1,33 @@
-from . import compiler, energy, graph, isa, simulator
+"""The PANTHER hardware model: ISA, compiler, simulator, energy.
 
-__all__ = ["compiler", "energy", "graph", "isa", "simulator"]
+The spine is the *plan-compile pipeline* — the co-design loop between the
+declarative mapping plan and the accelerator:
+
+    repro.plan (LeafPlan tree)  +  model shapes
+        └─ plan_compile.compile_plan ─> per-leaf tile schedules (Program)
+              └─ simulator.simulate_plan / plan_compile.report
+                    └─ joules + nanoseconds per leaf, PANTHER vs baselines
+
+Modules:
+
+* ``isa`` — the PUMA ISA extended with the masked ``mcu`` instruction plus
+  serial crossbar access (XREAD/XWRITE);
+* ``plan_compile`` — lowers a resolved ``CrossbarPlan`` to packed bit-plane
+  tile schedules (per-slice ADC pricing, MᵀVM reads, fused-OPA vs
+  serial-write updates, DeviceModel write physics, shard-hint placement);
+* ``compiler`` — shared placement/fusion stages and the deprecated seed-era
+  ``compile_model`` entry;
+* ``simulator`` — prices compiled programs under PANTHER and the
+  digital/serial-write baselines; also the analytic fig11-15 layer model;
+* ``energy`` — the §7.3-anchored constants and the packed-schedule pricing
+  (``EnergyModel.mvm_packed`` / ``opa_panther``);
+* ``graph`` — the legacy layer-list workloads (MLP_L4, VGG16).
+
+``benchmarks/isa_energy.py`` drives this into ``BENCH_energy.json`` (gated
+in CI by ``benchmarks/check_energy.py``), and ``serve.scheduler.IsaClock``
+closes the loop the other way: the serving engine's virtual clock priced in
+compiled crossbar cycles.
+"""
+from . import compiler, energy, graph, isa, plan_compile, simulator
+
+__all__ = ["compiler", "energy", "graph", "isa", "plan_compile", "simulator"]

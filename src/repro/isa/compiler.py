@@ -1,10 +1,25 @@
 """PANTHER compiler (§5.3): partition -> place -> schedule (variant-aware)
 -> fuse -> codegen.
 
+Two entry points share these stages:
+
+* :func:`repro.isa.plan_compile.compile_plan` — the modern pipeline: a
+  resolved per-leaf ``CrossbarPlan`` + captured model shapes lower to
+  per-leaf tile schedules (packed bit-plane MVM rounds, MᵀVM transpose
+  reads, fused-OPA vs serial read/write updates), using this module's
+  placement (:func:`place_tiles`) and fusion (:func:`fuse`).
+* :func:`compile_model` — the seed-era looped-schedule entry over
+  ``FCLayer``/``ConvLayer`` lists. **Deprecated**: it prices every MVM as
+  one opaque 16-bit tile-op and knows nothing about plans, bit-plane
+  packing, or sharding.
+
 Pipeline stages mirroring the paper's PUMA extension:
-  1. *Partition*: every TrainingMatrix is cut into 128x128 tiles.
-  2. *Placement*: tiles round-robin onto MCUs (2/core, 8 cores/tile,
-     138 tiles/node — Table 3).
+  1. *Partition*: every weight matrix is cut into 128x128 tiles.
+  2. *Placement*: contiguous MCU runs per matrix (2 MCUs/core, 8 cores/tile,
+     138 tiles/node — Table 3). A plan shard hint splits the matrix's tile
+     grid along its sharded dim into per-shard groups, each aligned to a
+     Table-3 tile boundary, so one mesh shard's crossbars are co-resident
+     and its partial-sum reduction crosses the NoC once per shard.
   3. *Schedule*: the variant dataflow — V1 serializes MVM/MTVM/OPA on one
      crossbar (Table 1); V2 runs MVM ∥ MTVM on two copies, defers OPA to
      batch end (Table 2 steps 9-12); V3 adds an eager-OPA third copy and
@@ -17,6 +32,7 @@ Pipeline stages mirroring the paper's PUMA extension:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import defaultdict
 
 from .graph import Graph, Node
@@ -39,31 +55,80 @@ class Hierarchy:  # Table 3
     def n_mcus(self):
         return self.n_cores * self.mcus_per_core
 
+    @property
+    def mcus_per_tile(self):
+        return self.cores_per_tile * self.mcus_per_core
+
 
 @dataclasses.dataclass
 class TilePlacement:
     matrix: str
     tile_rc: tuple
     mcu: int
+    shard: int = 0  # mesh shard group this tile belongs to (plan hints)
 
     @property
     def core(self):
         return self.mcu // 2
 
 
-def partition_and_place(g: Graph, hw: Hierarchy) -> dict:
-    """matrix name -> [TilePlacement]; round-robin across MCUs."""
-    placements = {}
+def place_tiles(grids: dict, hw: Hierarchy, hints: dict | None = None,
+                n_shards: int = 1) -> dict:
+    """Place tile grids onto MCUs: ``{name: (stack, tile_rows, tile_cols)}``
+    -> ``{name: [TilePlacement]}``.
+
+    Unhinted matrices get a contiguous MCU run (tiles of one matrix operate
+    in parallel on distinct MCUs while capacity lasts). A shard hint
+    (``hints[name] = 0`` for row-sharded, ``1`` for column-sharded, from the
+    plan's ``shard``/``shard_dim``) with ``n_shards > 1`` splits that
+    matrix's tile grid along the hinted dim into ``n_shards`` contiguous
+    groups, each starting on a fresh Table-3 tile boundary — the placement
+    then matches the mesh layout the engine actually runs, instead of
+    round-robining tiles across shard boundaries."""
+    hints = hints or {}
+    placements: dict = {}
     next_mcu = 0
-    for name, m in g.matrices.items():
-        tr, tc = m.tiles(XBAR)
+
+    def take(n):
+        nonlocal next_mcu
+        start = next_mcu
+        next_mcu += n
+        return start
+
+    for name, (stack, tr, tc) in grids.items():
+        dim = hints.get(name)
         tiles = []
-        for r in range(tr):
-            for c in range(tc):
-                tiles.append(TilePlacement(name, (r, c), next_mcu % hw.n_mcus))
-                next_mcu += 1
+        if dim is not None and n_shards > 1:
+            span = tr if dim == 0 else tc
+            bounds = [span * s // n_shards for s in range(n_shards + 1)]
+            for shard in range(n_shards):
+                # each shard group opens on a Table-3 tile boundary
+                next_mcu = -(-next_mcu // hw.mcus_per_tile) * hw.mcus_per_tile
+                lo, hi = bounds[shard], bounds[shard + 1]
+                for k in range(stack):
+                    for r in range(tr) if dim else range(lo, hi):
+                        for c in range(lo, hi) if dim else range(tc):
+                            tiles.append(TilePlacement(
+                                name, (k, r, c), take(1) % hw.n_mcus, shard))
+        else:
+            for k in range(stack):
+                for r in range(tr):
+                    for c in range(tc):
+                        tiles.append(TilePlacement(name, (k, r, c), take(1) % hw.n_mcus))
         placements[name] = tiles
     return placements
+
+
+def partition_and_place(g: Graph, hw: Hierarchy, hints: dict | None = None,
+                        n_shards: int = 1) -> dict:
+    """matrix name -> [TilePlacement] via :func:`place_tiles` (legacy graph
+    front end; tile_rc stays 2-D for the seed-era scheduler)."""
+    grids = {name: (1, *m.tiles(XBAR)) for name, m in g.matrices.items()}
+    placements = place_tiles(grids, hw, hints=hints, n_shards=n_shards)
+    return {
+        name: [dataclasses.replace(t, tile_rc=t.tile_rc[1:]) for t in tiles]
+        for name, tiles in placements.items()
+    }
 
 
 def schedule(g: Graph, placements: dict, variant: str = "v2", hw: Hierarchy = Hierarchy()) -> Program:
@@ -142,9 +207,11 @@ def _can_fuse(a: Instr, b: Instr, variant: str) -> bool:
     return True
 
 
-def fuse(prog: Program, variant: str, hw: Hierarchy) -> Program:
+def fuse(prog: Program, variant: str, hw: Hierarchy, no_dep=None) -> Program:
     """Iterative fusion (§5.3): greedily merge adjacent independent MCU
-    instructions per core until fixpoint."""
+    instructions per core until fixpoint. ``no_dep`` overrides the
+    dependence test (the plan pipeline keys lineage on leaf paths)."""
+    no_dep = no_dep or _no_dep
     out_cores = {}
     for core, instrs in prog.cores.items():
         changed = True
@@ -153,7 +220,7 @@ def fuse(prog: Program, variant: str, hw: Hierarchy) -> Program:
             changed = False
             nxt: list = []
             for ins in cur:
-                if nxt and _can_fuse(nxt[-1], ins, variant) and _no_dep(nxt[-1], ins):
+                if nxt and _can_fuse(nxt[-1], ins, variant) and no_dep(nxt[-1], ins):
                     prev = nxt[-1]
                     nxt[-1] = Instr(
                         Opcode.MCU,
@@ -177,6 +244,20 @@ def _no_dep(a: Instr, b: Instr) -> bool:
 
 
 def compile_model(layers, batch: int = 1, variant: str = "v2", hw: Hierarchy = Hierarchy()):
+    """Seed-era looped-schedule entry. Deprecated: use
+    :func:`repro.isa.plan_compile.compile_plan`, which lowers a resolved
+    per-leaf plan (packed bit-plane rounds, per-slice ADC pricing, OPA vs
+    serial-write selection) instead of opaque 16-bit tile-ops."""
+    warnings.warn(
+        "repro.isa.compiler.compile_model prices the seed-era looped "
+        "schedule; use repro.isa.plan_compile.compile_plan to lower a "
+        "resolved CrossbarPlan to the packed per-leaf schedule instead",
+        DeprecationWarning, stacklevel=2,
+    )
+    return _compile_layers(layers, batch=batch, variant=variant, hw=hw)
+
+
+def _compile_layers(layers, batch: int = 1, variant: str = "v2", hw: Hierarchy = Hierarchy()):
     from .graph import build_training_graph
 
     g = build_training_graph(layers, batch=batch)

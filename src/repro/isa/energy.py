@@ -1,5 +1,19 @@
 """Energy/latency model for the PANTHER accelerator and its baselines.
 
+Two pricing granularities share one set of anchors:
+
+* the seed-era opaque tile-op costs (``mvm_panther``/``mvm_base``) — one
+  constant per 16-bit MVM regardless of slicing, still used by the analytic
+  fig11-14 layer model;
+* the plan-aware *packed-schedule* costs (``mvm_packed``/``opa_panther``) —
+  priced per ``LeafPlan``: one packed bit-plane MVM round per tile covering
+  all (bit, slice) columns, with each slice's ADC conversion priced at its
+  own effective resolution (Murmann-survey trend, ~2x energy per +2 bits)
+  and the round count scaling with ``io_bits``. This is what
+  ``repro.isa.plan_compile`` / ``simulate_plan`` charge, and it reduces to
+  the §6.3-taxed anchor exactly at the paper's default configuration
+  (44466555 slices, 16-bit IO, lossless ADC).
+
 All per-op constants are for one 128x128 crossbar tile processing 16-bit
 streamed inputs. Disclosed anchors from the paper:
 
@@ -29,6 +43,19 @@ import dataclasses
 XBAR = 128  # crossbar rows/cols
 CELLS = XBAR * XBAR
 
+PAPER_BITS = (4, 4, 4, 6, 6, 5, 5, 5)  # §3.3 heterogeneous pick ("44466555")
+ROW_BITS = 7  # log2(128 rows): partial-sum growth a lossless ADC must cover
+IO_CYCLES_REF = 15  # bit cycles of the 16-bit anchor stream (io_bits - 1)
+
+
+def adc_eff_bits(slice_bits: int, adc_bits: int | None = None) -> int:
+    """Effective ADC resolution reading one slice's column: a lossless read
+    needs ``log2(rows) + slice_bits``; a programmed per-path ``adc_bits``
+    (FidelityConfig) caps it — an ADC never burns more bits than its slice
+    can produce."""
+    full = ROW_BITS + slice_bits
+    return full if adc_bits is None else min(adc_bits, full)
+
 
 @dataclasses.dataclass(frozen=True)
 class EnergyModel:
@@ -44,6 +71,12 @@ class EnergyModel:
     e_vfu_elem: float = 0.0004
     # shared-memory / NoC movement per byte (nJ)
     e_mem_byte: float = 0.0009
+    # ADC sample-energy exponent: ~2x per +2 bits at 6-13 bit resolutions
+    # (Murmann survey trend — the same slope fig10/launch.serve price with)
+    adc_sample_exp: float = 0.5
+    # program-verify overhead on a writes-nonideal DeviceModel: extra verify
+    # reads interleaved with the OPA pulse train (Fig 1 [9])
+    verify_frac: float = 0.25
 
     # --- latency per tile-op (ns) ---
     # ReRAM MVM: 16 bit-serial cycles at ~6.4ns effective (ADC-limited), ~100ns.
@@ -62,6 +95,41 @@ class EnergyModel:
 
     def mvm_base(self):  # Base_mvm / Base_opa-mvm crossbars (2-bit slices)
         return self.e_mvm_reram, self.l_mvm_reram
+
+    # ---------------- plan-aware packed-schedule pricing ----------------
+
+    def _adc_weight(self, bits: tuple, io_bits: int, adc_bits: int | None) -> float:
+        """Relative ADC cost of one packed round: (io_bits - 1) bit cycles,
+        each converting every slice's column block once, per-slice sample
+        energy ~ 2^(eff_bits * adc_sample_exp)."""
+        return (io_bits - 1) * sum(
+            2.0 ** (adc_eff_bits(b, adc_bits) * self.adc_sample_exp) for b in bits
+        )
+
+    def mvm_packed(self, bits: tuple = PAPER_BITS, io_bits: int = 16,
+                   adc_bits: int | None = None) -> tuple:
+        """(energy nJ, latency ns) of ONE packed bit-plane MVM/MᵀVM round on
+        one 128x128 tile under a leaf's plan: all S slices x (io_bits - 1)
+        bit planes convert in one ``dot_general``-shaped round (the PR 2
+        engine), instead of the seed schedule's S*(io_bits-1) serial ops.
+
+        Calibration: the cost is the §7.3 anchor times the ADC weight of the
+        leaf's configuration relative to the paper's default (44466555
+        slices, 16-bit IO, lossless ADC), so the default reproduces
+        ``e_mvm_reram * adc_tax_panther`` exactly and a coarser ADC or a
+        shorter IO stream prices below it."""
+        ref = self._adc_weight(PAPER_BITS, 16, None)
+        e = self.e_mvm_reram * self.adc_tax_panther * (
+            self._adc_weight(tuple(bits), io_bits, adc_bits) / ref)
+        lat = self.l_mvm_reram * (io_bits - 1) / IO_CYCLES_REF
+        return e, lat
+
+    def opa_panther(self, nonideal_write: bool = False) -> tuple:
+        """(energy nJ, latency ns) of one in-crossbar OPA pulse train per
+        tile; a writes-nonideal DeviceModel pays ``verify_frac`` extra in
+        program-verify reads."""
+        f = 1.0 + self.verify_frac if nonideal_write else 1.0
+        return self.e_opa_reram * f, self.l_opa_reram * f
 
 
 DEFAULT_ENERGY = EnergyModel()

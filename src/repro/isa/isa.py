@@ -24,6 +24,8 @@ class Opcode(enum.Enum):
     STORE = "store"  # registers (XBarOut) -> shared memory
     SEND = "send"  # to another core/tile
     RECV = "recv"
+    XREAD = "xread"  # serial row-by-row crossbar tile read (CRS, commits)
+    XWRITE = "xwrite"  # serial program-verify crossbar tile write
     HALT = "halt"  # end of kernel; commit deferred OPA
 
 

@@ -1,19 +1,33 @@
 """Cycle-level energy/latency simulator for PANTHER and its baselines.
 
-Walks the compiled per-core instruction streams, modeling:
-  * MCU instructions: tile-level crossbar ops; fused masks execute
-    concurrently (latency = max over sub-ops; energy = sum);
+Two pricers over compiled per-core instruction streams:
+
+* :func:`simulate_plan` — the plan-aware pricer for programs from
+  ``repro.isa.plan_compile``: every MCU sub-op is a ``TileOp`` carrying its
+  leaf's resolved slicing/IO/ADC/device attributes, and a packed bit-plane
+  MVM round is priced as ONE ``dot_general``-shaped round per tile
+  (``EnergyModel.mvm_packed``, per-slice ADC cost) instead of the seed
+  schedule's S*(io_bits-1) serial ops. Serial crossbar traffic (dense-grad
+  updates, V3 commits) arrives as explicit XREAD/XWRITE instructions.
+  Energy is keyed per *leaf path* — the joules/step table of
+  ``plan_compile.report``.
+* :func:`simulate` — the seed-era pricer (opaque 16-bit tile-ops) kept for
+  the deprecated ``compile_model`` path and the analytic fig11-14 layer
+  model below.
+
+Shared mechanics:
+  * fused MCU masks execute concurrently (latency = max over sub-ops;
+    energy = sum);
   * cores progress independently (spatial architecture) with the makespan
     taken over cores — the coarse pipeline model behind Tables 1-2;
   * deferred-OPA traffic (V1/V2 shared-memory saves) and V3's serial-write
-    commit at ``halt``;
-  * per-layer energy breakdown {mvm, mtvm, opa, read, write, vfu, mem} — the
-    stacked bars of Figs 11/12.
+    commit at ``halt``.
 
 Baselines share the instruction stream but re-cost it:
-  * Base_digital: every crossbar op at CMOS cost (weight-stationary SRAM);
-  * Base_mvm: ReRAM MVM/MTVM; OPA = digital VFU compute + serial ReRAM
-    read+write per touched tile, once per weight update (batch);
+  * Base_digital: every crossbar op at CMOS cost (weight-stationary SRAM —
+    serial crossbar R/W folds into E_MVM_CMOS and prices as SRAM latency);
+  * Base_mvm: ReRAM MVM/MTVM; no in-crossbar OPA, so every weight commit =
+    digital compute + serial ReRAM read+write of the touched tile;
   * Base_opa-mvm (PipeLayer, conv layers): OPA realized as ReRAM MVMs, but
     the convolution kernel (dH) is *non-stationary* -> serial writes every
     iteration (§5.4.3), plus the update read/write.
@@ -70,6 +84,84 @@ def simulate(prog, em: EnergyModel = DEFAULT_ENERGY, system: str = "panther") ->
                 t += ins.n_elems * 0.004  # 256 B/ns shared memory
             elif ins.op in (Opcode.SEND, Opcode.RECV):
                 energy[layer]["mem"] += em.e_mem_byte * ins.n_elems * 2
+                t += ins.n_elems * 0.008
+            elif ins.op is Opcode.HALT:
+                pass
+        core_t[core] = t
+    return SimResult(energy_nj={k: dict(v) for k, v in energy.items()},
+                     time_ns=max(core_t.values()) if core_t else 0.0,
+                     per_core_ns=core_t)
+
+
+# ---------------------- plan-aware pricing (TileOps) ------------------------
+
+
+def _plan_op_cost(op, em: EnergyModel, system: str) -> tuple:
+    """``({category: nJ}, ns)`` of one TileOp (reps included) under
+    ``system``. The OPA-vs-serial-write selection lives here: Base_mvm has
+    no in-crossbar OPA, so an operand leaf's fused deposit re-costs as
+    digital compute + a serial read+write of the tile per weight commit."""
+    if op.kind in ("mvm", "mtvm"):
+        if system == "base_digital":
+            return {op.kind: em.e_mvm_cmos * op.reps}, em.l_mvm_cmos * op.reps
+        if system == "base_mvm":
+            return {op.kind: em.e_mvm_reram * op.reps}, em.l_mvm_reram * op.reps
+        e, lat = em.mvm_packed(op.bits, op.io_bits, op.adc_bits)
+        return {op.kind: e * op.reps}, lat * op.reps
+    if op.kind == "wgrad_d" or system == "base_digital":
+        # dense-grad digital compute (all systems), or any update on the
+        # weight-stationary digital baseline
+        return {"opa": em.e_opa_cmos * op.reps}, em.l_opa_cmos * op.reps
+    if system == "base_mvm":
+        return (
+            {"opa": em.e_opa_cmos * op.reps, "read": em.e_read_reram,
+             "write": em.e_write_reram},
+            em.l_opa_cmos * op.reps + em.l_read_reram + em.l_write_reram,
+        )
+    e, lat = em.opa_panther(op.nonideal_write)
+    return {"opa": e * op.reps}, lat * op.reps
+
+
+def simulate_plan(prog, em: EnergyModel = DEFAULT_ENERGY,
+                  system: str = "panther") -> SimResult:
+    """Price a plan-compiled program (``plan_compile.compile_plan``) under
+    ``system`` (panther | base_digital | base_mvm). Energy is keyed by leaf
+    path (the tag prefix before ':')."""
+    energy: dict = defaultdict(lambda: defaultdict(float))
+    core_t: dict = {}
+    serial_e = {"panther": (1.0, 1.0), "base_mvm": (1.0, 1.0)}
+    for core, instrs in prog.cores.items():
+        t = 0.0
+        for ins in instrs:
+            leaf = ins.tag.split(":")[0]
+            if ins.op is Opcode.MCU:
+                lat = 0.0
+                for op in ins.mcu_ops:
+                    cats, l_op = _plan_op_cost(op, em, system)
+                    for cat, e in cats.items():
+                        energy[op.leaf][cat] += e
+                    lat = max(lat, l_op)
+                t += lat
+            elif ins.op is Opcode.XREAD:
+                if system in serial_e:
+                    energy[leaf]["read"] += em.e_read_reram * ins.n_elems
+                    t += em.l_read_reram * ins.n_elems
+                else:  # digital baseline: SRAM, energy folded into E_MVM_CMOS
+                    t += em.l_read_sram * ins.n_elems
+            elif ins.op is Opcode.XWRITE:
+                if system in serial_e:
+                    energy[leaf]["write"] += em.e_write_reram * ins.n_elems
+                    t += em.l_write_reram * ins.n_elems
+                else:
+                    t += em.l_write_sram * ins.n_elems
+            elif ins.op is Opcode.VFU:
+                energy[leaf]["vfu"] += em.e_vfu_elem * ins.n_elems
+                t += ins.n_elems * 0.01  # 100-lane VFU at 1 GHz
+            elif ins.op in (Opcode.LOAD, Opcode.STORE):
+                energy[leaf]["mem"] += em.e_mem_byte * ins.n_elems
+                t += ins.n_elems * 0.004  # 256 B/ns shared memory
+            elif ins.op in (Opcode.SEND, Opcode.RECV):
+                energy[leaf]["mem"] += em.e_mem_byte * ins.n_elems * 2
                 t += ins.n_elems * 0.008
             elif ins.op is Opcode.HALT:
                 pass

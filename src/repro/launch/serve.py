@@ -81,7 +81,13 @@ def run_trace_bench(args):
 
     # ---- headline: static barrier vs continuous batching, lossless params.
     # One shared cost table: both policies run on identical per-shape costs.
-    costs: dict = {}
+    # --isa-clock swaps host calibration for the plan-compiled crossbar
+    # clock (repro.isa.plan_compile): rounds priced in crossbar cycles.
+    serve_plan = planlib.resolve_plan(params, planlib.default_rules(opt_cfg))
+    if args.isa_clock:
+        costs: dict = sch.IsaClock.from_plan(params, serve_plan, n_slots=n_slots)
+    else:
+        costs = {}
     results = {}
     for policy in ("continuous", "static"):
         eng = Engine(cfg, params, n_slots=n_slots, max_seq=max_seq, page=page,
@@ -116,9 +122,11 @@ def run_trace_bench(args):
             params, planlib.default_rules(opt_cfg, fidelity=presets[adc]))
         trees[tier] = fidelity_params(params, sliced, plan=tier_plan)
         bits = presets[adc].adc_bits_fwd
+        tier_costs = (sch.IsaClock.from_plan(params, tier_plan, n_slots=4)
+                      if args.isa_clock else None)
         engines[tier] = Engine(
             cfg, trees[tier], n_slots=4, max_seq=48, page=16,
-            cost_scale=_adc_latency_factor(bits),
+            costs=tier_costs, cost_scale=_adc_latency_factor(bits),
         )
     t0 = time.time()
     tier_res = sch.run_trace(engines, tier_trace, policy="continuous")
@@ -150,8 +158,12 @@ def run_trace_bench(args):
             "page": page,
             "chunk": chunk,
             "max_seq": max_seq,
-            "note": ("virtual clock from per-shape calibrated device costs; "
-                     "tier latency priced by ADC resolution"),
+            "isa_clock": bool(args.isa_clock),
+            "note": (("virtual clock priced in compiled crossbar cycles "
+                      "(repro.isa.plan_compile); tier latency scaled by ADC "
+                      "resolution") if args.isa_clock else
+                     ("virtual clock from per-shape calibrated device costs; "
+                      "tier latency priced by ADC resolution")),
         },
         "static": results["static"],
         "continuous": results["continuous"],
@@ -224,6 +236,10 @@ def main(argv=None):
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--trace", action="store_true",
                     help="run the continuous-batching trace bench")
+    ap.add_argument("--isa-clock", action="store_true",
+                    help="price the virtual clock in compiled crossbar "
+                    "cycles (repro.isa.plan_compile) instead of host "
+                    "calibration")
     ap.add_argument("--requests", type=int, default=0,
                     help="trace length (0 = mode default)")
     ap.add_argument("--rate", type=float, default=1e4,

@@ -27,6 +27,11 @@ SLA tiers: pass several engines keyed by tier name (e.g. ``premium`` serving
 an adc9 ``fidelity_params`` tree, ``bulk`` adc6, both over the same sliced
 planes); requests carry a ``tier`` tag and are routed to their tier's
 engine, all engines sharing the one virtual clock (the device is serial).
+
+Opt-in, the clock can be priced in *compiled crossbar cycles* instead of
+calibrated host wall time: pass an :class:`IsaClock` as ``Engine(costs=...)``
+and every prefill chunk / decode round costs its token count times the
+plan-compiled per-token crossbar latency (``repro.isa.plan_compile``).
 """
 from __future__ import annotations
 
@@ -34,6 +39,50 @@ import dataclasses
 from collections import deque
 
 import numpy as np
+
+
+class IsaClock(dict):
+    """ISA-priced virtual clock: a drop-in for ``Engine``'s ``costs=`` table
+    that prices known cost-key shapes from the compiled crossbar schedule
+    rather than host calibration (ROADMAP serving item (c) — the engine
+    never calibrates a key the clock can price, because ``key in clock``
+    answers True for them).
+
+    Keys priced: ``("prefill", L)`` and ``("cont", C, L)`` cost their token
+    count (L or C) times ``s_per_token``; ``("round", T)`` costs T decode
+    steps over the full ``n_slots`` grid (the crossbar streams slot vectors
+    serially through the tiles). Unknown key shapes fall through to plain
+    dict entries, so pre-seeded host costs still compose."""
+
+    def __init__(self, s_per_token: float, n_slots: int):
+        super().__init__()
+        self.s_per_token = float(s_per_token)
+        self.n_slots = int(n_slots)
+
+    def _price(self, key):
+        if isinstance(key, tuple) and len(key) >= 2 and key[0] in ("prefill", "cont", "round"):
+            tokens = key[1] * (self.n_slots if key[0] == "round" else 1)
+            return tokens * self.s_per_token
+        return None
+
+    def __contains__(self, key):
+        return self._price(key) is not None or dict.__contains__(self, key)
+
+    def __getitem__(self, key):
+        p = self._price(key)
+        return dict.__getitem__(self, key) if p is None else p
+
+    @classmethod
+    def from_plan(cls, params, plan, n_slots: int, em=None, scale: float = 1.0):
+        """Build the clock from a resolved plan over ``params``: per-token
+        seconds = the plan-compiled forward crossbar latency (packed
+        bit-plane rounds, depth-serial leaves) times ``scale`` (SLA-tier
+        ADC factors compose here or via ``Engine(cost_scale=...)``)."""
+        from repro.isa.energy import DEFAULT_ENERGY
+        from repro.isa.plan_compile import token_latency_ns
+
+        ns = token_latency_ns(params, plan, em or DEFAULT_ENERGY)
+        return cls(ns * 1e-9 * scale, n_slots)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -38,8 +38,20 @@ def test_placement_round_robin():
     assert max(mcus) < hw.n_mcus
 
 
+def _legacy_compile(*args, **kw):
+    """compile_model is deprecated in favor of plan_compile.compile_plan;
+    these tests cover the legacy pipeline on purpose, and assert the
+    pointer-to-the-plan-path warning while they're at it."""
+    with pytest.warns(DeprecationWarning, match="plan_compile.compile_plan"):
+        return compile_model(*args, **kw)
+
+
+def test_compile_model_warns_deprecated():
+    _legacy_compile(MLP_L4, batch=1, variant="v2")
+
+
 def test_compile_fuses_mcu_ops():
-    g, pl, prog = compile_model(MLP_L4, batch=1, variant="v2")
+    g, pl, prog = _legacy_compile(MLP_L4, batch=1, variant="v2")
     mcu_instrs = [i for instrs in prog.cores.values() for i in instrs if i.op is Opcode.MCU]
     # fusion must pack some multi-op instructions
     assert any(len(i.mcu_ops) > 1 for i in mcu_instrs)
@@ -50,7 +62,7 @@ def test_compile_fuses_mcu_ops():
 
 def test_deferred_opa_semantics_v2():
     """V1/V2: OPA operands stored to shared memory, applied at halt (§5.2)."""
-    g, pl, prog = compile_model(MLP_L4, batch=1, variant="v2")
+    g, pl, prog = _legacy_compile(MLP_L4, batch=1, variant="v2")
     all_instrs = [i for instrs in prog.cores.values() for i in instrs]
     stores = [i for i in all_instrs if i.op is Opcode.STORE and "save" in i.tag]
     halts_opa = [i for i in all_instrs if i.op is Opcode.MCU and "halt" in i.tag]
@@ -58,13 +70,13 @@ def test_deferred_opa_semantics_v2():
 
 
 def test_v3_no_deferred_stores():
-    g, pl, prog = compile_model(MLP_L4, batch=1, variant="v3")
+    g, pl, prog = _legacy_compile(MLP_L4, batch=1, variant="v3")
     all_instrs = [i for instrs in prog.cores.values() for i in instrs]
     assert not any(i.op is Opcode.STORE and "save" in i.tag for i in all_instrs)
 
 
 def test_simulator_energy_positive_and_decomposed():
-    _, _, prog = compile_model(MLP_L4, batch=1)
+    _, _, prog = _legacy_compile(MLP_L4, batch=1)
     r = simulate(prog)
     cats = r.energy_by_category()
     assert cats["mvm"] > 0 and cats["mtvm"] > 0 and cats["opa"] > 0

@@ -1,0 +1,287 @@
+"""Plan-compile pipeline tests: golden instruction streams, packed-schedule
+pricing anchors, shard-hint placement, tiki-taka traffic, the ISA serving
+clock — the plan-aware half of the ISA stack (``test_isa.py`` keeps the
+legacy layer-list pipeline and the analytic paper-ratio gates)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.isa import plan_compile as pc
+from repro.isa.compiler import Hierarchy, place_tiles
+from repro.isa.energy import DEFAULT_ENERGY, PAPER_BITS, adc_eff_bits
+from repro.isa.isa import Opcode
+from repro.models.common import FidelityConfig
+from repro.optim import PantherConfig, tiki_taka
+from repro.plan import PlanRule, resolve_plan
+
+SMALL_HW = Hierarchy(tiles_per_node=2, cores_per_tile=2, mcus_per_core=2)
+
+
+def _two_leaf():
+    """The golden fixture: one hetero-ADC operand leaf (2 tiles) + one
+    dense-grad leaf (1 tile)."""
+    params = {"a": {"w": jax.ShapeDtypeStruct((256, 128), jnp.float32)},
+              "b": {"w": jax.ShapeDtypeStruct((128, 128), jnp.float32)}}
+    rules = (
+        PlanRule("a/*", mapped=True, grad="operand",
+                 fidelity=FidelityConfig(adc_bits_fwd=6, adc_bits_bwd=9)),
+        PlanRule("b/*", mapped=True, grad="dense"),
+    )
+    return params, resolve_plan(params, rules)
+
+
+def _stream(prog):
+    return {core: [repr(i) for i in instrs] for core, instrs in prog.cores.items()}
+
+
+def test_golden_two_leaf_stream():
+    """The fused per-core instruction streams, pinned: a spec/placement/
+    fusion change that reshapes the schedule must show up here."""
+    params, plan = _two_leaf()
+    prog = pc.compile_plan(params, plan, tokens=2, hw=SMALL_HW)
+    assert _stream(prog) == {
+        0: [  # a/w: both tiles on core 0 (MCUs 0-1), fused per phase
+            "mcu[100,100] a/w:fwd",
+            "mcu[010,010] a/w:bwd",
+            "store(1024) a/w:save",
+            "store(1024) a/w:save",
+            "mcu[001,001] a/w:wgrad",
+            "halt(0) halt",
+        ],
+        1: [  # b/w: dense grad — digital wgrad + serial read-modify-write
+            "mcu[100,000] b/w:fwd",
+            "mcu[010,000] b/w:bwd",
+            "mcu[001,000] b/w:wgrad",
+            "xread(1) b/w:update",
+            "xwrite(1) b/w:update",
+            "halt(0) halt",
+        ],
+    }
+    # the TileOps carry the plan's pricing attributes (per-phase ADC; the
+    # dense leaf's fidelity was dropped at resolution -> lossless reads)
+    ops = {f"{c}/{i.tag}": [repr(op) for op in i.mcu_ops]
+           for c, instrs in prog.cores.items()
+           for i in instrs if i.op is Opcode.MCU}
+    assert ops["0/a/w:fwd"] == ["mvm[a/w@(0, 0, 0)]x2(44466555,io16,adc6)",
+                                "mvm[a/w@(0, 1, 0)]x2(44466555,io16,adc6)"]
+    assert ops["0/a/w:bwd"] == ["mtvm[a/w@(0, 0, 0)]x2(44466555,io16,adc9)",
+                                "mtvm[a/w@(0, 1, 0)]x2(44466555,io16,adc9)"]
+    assert ops["0/a/w:wgrad"] == ["opa[a/w@(0, 0, 0)]x2(44466555,io16,adcideal)",
+                                  "opa[a/w@(0, 1, 0)]x2(44466555,io16,adcideal)"]
+    assert ops["1/b/w:wgrad"] == ["wgrad_d[b/w@(0, 0, 0)]x2(44466555,io16,adcideal)"]
+    assert prog.meta["leaves"]["a/w"]["category"] == "operand"
+    assert prog.meta["leaves"]["b/w"]["category"] == "dense"
+
+
+def test_compile_deterministic_and_fuse_fixpoint():
+    """Compiling twice gives byte-identical streams, and re-fusing a fused
+    program is the identity (the fusion pass is a fixpoint)."""
+    from repro.isa.compiler import fuse
+
+    params, plan = _two_leaf()
+    p1 = pc.compile_plan(params, plan, tokens=2, hw=SMALL_HW)
+    p2 = pc.compile_plan(params, plan, tokens=2, hw=SMALL_HW)
+    assert _stream(p1) == _stream(p2)
+    refused = fuse(p1, "v2", SMALL_HW, no_dep=pc._plan_no_dep)
+    assert _stream(refused) == _stream(p1)
+
+
+def test_v3_variant_commits_serially():
+    params, plan = _two_leaf()
+    prog = pc.compile_plan(params, plan, tokens=2, hw=SMALL_HW, variant="v3")
+    instrs = [i for s in prog.cores.values() for i in s]
+    assert not any(i.op is Opcode.STORE and "save" in i.tag for i in instrs)
+    assert any(i.op is Opcode.XWRITE and "commit" in i.tag for i in instrs)
+
+
+# --------------------------- §7.3 pricing anchors ---------------------------
+
+
+def test_paper_energy_anchors_exact():
+    """The Table-5 constants the whole energy stack hangs off — moving one
+    of these reprices every figure and must be deliberate."""
+    em = DEFAULT_ENERGY
+    assert em.e_mvm_reram == 35.10
+    assert em.e_opa_reram == 11.37
+    assert em.e_opa_cmos == 37.28
+    assert em.adc_tax_panther == 1.175
+
+
+def test_mvm_packed_default_is_taxed_anchor():
+    """Paper-default packed round == the §6.3-taxed §7.3 MVM anchor,
+    exactly: 35.10 nJ x 1.175."""
+    e, lat = DEFAULT_ENERGY.mvm_packed()
+    assert e == pytest.approx(35.10 * 1.175, rel=1e-12)
+    assert lat == pytest.approx(DEFAULT_ENERGY.l_mvm_reram)
+
+
+def test_mvm_packed_coarser_adc_and_narrower_io_price_below():
+    em = DEFAULT_ENERGY
+    e_ref, lat_ref = em.mvm_packed(PAPER_BITS, 16, None)
+    e_adc9, _ = em.mvm_packed(PAPER_BITS, 16, 9)
+    e_adc6, _ = em.mvm_packed(PAPER_BITS, 16, 6)
+    e_io8, lat_io8 = em.mvm_packed(PAPER_BITS, 8, None)
+    assert e_adc6 < e_adc9 < e_ref
+    assert e_io8 < e_ref and lat_io8 < lat_ref
+    # io scaling is exactly the (io_bits - 1) bit-plane round count
+    assert e_io8 == pytest.approx(e_ref * 7 / 15)
+
+
+def test_adc_eff_bits_saturates_at_full_resolution():
+    assert adc_eff_bits(5, None) == 12  # 7 row bits + 5 slice bits
+    assert adc_eff_bits(5, 9) == 9
+    assert adc_eff_bits(2, 12) == 9  # can't read finer than the column sum
+
+
+def test_opa_panther_verify_overhead():
+    em = DEFAULT_ENERGY
+    e0, l0 = em.opa_panther(nonideal_write=False)
+    e1, l1 = em.opa_panther(nonideal_write=True)
+    assert e0 == em.e_opa_reram
+    assert e1 == pytest.approx(e0 * 1.25) and l1 > l0
+
+
+# ------------------------- placement / shard hints --------------------------
+
+
+def test_place_tiles_shard_hint_aligns_tile_boundaries():
+    """A 'model'-sharded leaf splits its hinted dim into n_shards groups,
+    each starting on a Table-3 tile boundary, with disjoint shard ids."""
+    hw = Hierarchy(tiles_per_node=4, cores_per_tile=2, mcus_per_core=2)
+    grids = {"w": (1, 4, 2)}
+    pls = place_tiles(grids, hw, hints={"w": 0}, n_shards=2)["w"]
+    by_shard = {}
+    for t in pls:
+        by_shard.setdefault(t.shard, []).append(t)
+    assert sorted(by_shard) == [0, 1]
+    rows = {s: {t.tile_rc[1] for t in ts} for s, ts in by_shard.items()}
+    assert rows[0] == {0, 1} and rows[1] == {2, 3}
+    # shard 1's first MCU starts on a tile boundary (mcus_per_tile = 4)
+    first_mcu_s1 = min(t.mcu for t in by_shard[1])
+    assert first_mcu_s1 % hw.mcus_per_tile == 0
+    mcus = [t.mcu for t in pls]
+    assert len(set(mcus)) == len(mcus)
+
+
+def test_unhinted_placement_matches_legacy_numbering():
+    """Without hints, place_tiles keeps the seed-era contiguous numbering
+    (partition_and_place delegates to it — placement must not drift)."""
+    hw = Hierarchy()
+    pls = place_tiles({"a": (1, 2, 2), "b": (1, 1, 1)}, hw)
+    assert [t.mcu for t in pls["a"]] == [0, 1, 2, 3]
+    assert [t.mcu for t in pls["b"]] == [4]
+
+
+def test_sharded_compile_prices_same_compute():
+    """Sharding relocates tiles; it must not change the compute priced."""
+    params, plan = _two_leaf()
+    rules = (PlanRule("a/*", mapped=True, grad="operand",
+                      fidelity=FidelityConfig(adc_bits_fwd=6, adc_bits_bwd=9,
+                                              shard_dim=0)),
+             PlanRule("b/*", mapped=True, grad="dense"))
+    plan_sh = resolve_plan(params, rules)
+    hw = Hierarchy()
+    base = pc.report(pc.compile_plan(params, plan, tokens=4, hw=hw))
+    shard = pc.report(pc.compile_plan(params, plan_sh, tokens=4, hw=hw,
+                                      n_shards=2))
+    for leaf in ("a/w", "b/w"):
+        for cat in ("mvm", "mtvm"):
+            assert shard["per_leaf_nj"][leaf][cat] == pytest.approx(
+                base["per_leaf_nj"][leaf][cat])
+
+
+# ----------------------------- priced schedules -----------------------------
+
+
+def test_hetero_adc_prices_below_lossless():
+    """The fig10 mechanism end to end: a coarser-ADC plan over the same
+    params compiles to a measurably cheaper step."""
+    params, _ = _two_leaf()
+    lossless = resolve_plan(params, (PlanRule("*", mapped=True, grad="operand"),))
+    coarse = resolve_plan(params, (PlanRule(
+        "*", mapped=True, grad="operand",
+        fidelity=FidelityConfig(adc_bits_fwd=6, adc_bits_bwd=6)),))
+    e_full = pc.report(pc.compile_plan(params, lossless, tokens=8))["total_nj"]
+    e_coarse = pc.report(pc.compile_plan(params, coarse, tokens=8))["total_nj"]
+    assert e_coarse < e_full
+    assert (e_full - e_coarse) / e_full > 1e-3
+
+
+def test_systems_summary_mlp_in_paper_bands():
+    """The §7.3 headline re-derived from the packed plan schedule: the paper
+    MLP at SGD lands in the fig11/fig13 bands, and the serial-write
+    advantage amortizes at minibatch (§7.4)."""
+    dims = [(1024, 256), (256, 512), (512, 512), (512, 10)]
+    params = {f"dense{i}": {"w": jax.ShapeDtypeStruct(d, jnp.float32)}
+              for i, d in enumerate(dims)}
+    plan = resolve_plan(params, (PlanRule("*", mapped=True, grad="operand"),))
+    sgd = pc.systems_summary(pc.compile_plan(params, plan, tokens=1))
+    assert 6.0 < sgd["vs_digital"] < 9.0, sgd
+    assert 25.0 < sgd["vs_serial_write"] < 60.0, sgd
+    mb = pc.systems_summary(pc.compile_plan(params, plan, tokens=64))
+    assert 1.0 < mb["vs_serial_write"] < 3.0, mb
+    assert mb["vs_serial_write"] < sgd["vs_serial_write"]
+    assert sgd["time_vs_serial_write"] > 1.0
+
+
+def test_tiki_taka_momentum_traffic_visible_per_leaf():
+    params, plan = _two_leaf()
+    plain = pc.report(pc.compile_plan(
+        params, plan, tokens=2, opt_cfg=PantherConfig(stochastic_round=False)))
+    tt = pc.report(pc.compile_plan(
+        params, plan, tokens=2,
+        opt_cfg=tiki_taka(PantherConfig(stochastic_round=False))))
+    assert tt["total_nj"] > plain["total_nj"]
+    for leaf in ("a/w", "b/w"):
+        extra = (tt["per_leaf_nj"][leaf].get("mem", 0.0)
+                 - plain["per_leaf_nj"][leaf].get("mem", 0.0))
+        assert extra > 0, leaf  # the momentum buffer's RMW traffic, per leaf
+
+
+def test_crs_amortizes_with_period():
+    params, plan = _two_leaf()
+    fast = pc.report(pc.compile_plan(params, plan, tokens=1,
+                                     opt_cfg=PantherConfig(crs_every=10)))
+    slow = pc.report(pc.compile_plan(params, plan, tokens=1,
+                                     opt_cfg=PantherConfig(crs_every=1000)))
+    assert fast["per_leaf_nj"]["a/w"]["crs"] == pytest.approx(
+        100 * slow["per_leaf_nj"]["a/w"]["crs"])
+
+
+def test_nonideal_device_prices_verify_overhead():
+    from repro.models.common import DeviceModel
+
+    params, _ = _two_leaf()
+    ideal = resolve_plan(params, (PlanRule("*", mapped=True, grad="operand"),))
+    noisy = resolve_plan(params, (PlanRule(
+        "*", mapped=True, grad="operand",
+        fidelity=FidelityConfig(device=DeviceModel(write_noise=0.05))),))
+    e_ideal = pc.report(pc.compile_plan(params, ideal, tokens=1))
+    e_noisy = pc.report(pc.compile_plan(params, noisy, tokens=1))
+    assert (e_noisy["per_leaf_nj"]["a/w"]["opa"]
+            == pytest.approx(e_ideal["per_leaf_nj"]["a/w"]["opa"] * 1.25))
+
+
+# ------------------------------- serving clock ------------------------------
+
+
+def test_isa_clock_prices_known_keys_without_calibration():
+    from repro.serve.scheduler import IsaClock
+
+    clk = IsaClock(s_per_token=1e-6, n_slots=8)
+    assert ("prefill", 32) in clk and clk[("prefill", 32)] == pytest.approx(32e-6)
+    assert clk[("cont", 16, 48)] == pytest.approx(16e-6)
+    assert clk[("round", 4)] == pytest.approx(4 * 8 * 1e-6)
+    assert ("something", 3) not in clk  # unknown keys fall through to dict
+    clk[("something", 3)] = 0.5
+    assert clk[("something", 3)] == 0.5
+
+
+def test_isa_clock_from_plan_matches_token_latency():
+    from repro.serve.scheduler import IsaClock
+
+    params, plan = _two_leaf()
+    ns = pc.token_latency_ns(params, plan, DEFAULT_ENERGY)
+    clk = IsaClock.from_plan(params, plan, n_slots=4)
+    assert ns > 0
+    assert clk[("prefill", 10)] == pytest.approx(10 * ns * 1e-9)
