@@ -1,0 +1,152 @@
+"""CI gate over ``BENCH_coverage.json`` (the coverage-smoke artifact).
+
+The acceptance gate for the generalized analog operand API: the committed
+record must show, per architecture config, that the crossbar path carries
+the training compute — not just the vanilla attention/MLP matmuls but the
+structured operands (im2col conv stems, Mamba/xLSTM projection stacks, MoE
+expert tiles) the operand API generalized to. A fresh record fails when
+
+1. any number anywhere in the record is non-finite;
+2. a config is missing, or carries no analog FLOPs at all — the plan no
+   longer maps its eligible layers;
+3. any config's ``coverage`` (analog / (analog + dense_eligible) FLOPs at
+   the reference token count) drops below 0.90;
+4. ``coverage < default_coverage`` anywhere — ``coverage_rules`` must never
+   map *less* compute than the default rules;
+5. a dense or excluded leaf row is missing its ``reason`` — every FLOP that
+   stays off the crossbar must say why, or the report is not an accounting;
+6. the reference token count moved off the pinned value (ratios across
+   records would silently stop being comparable);
+7. (with ``--baseline``) any config's coverage drifts beyond ``--drift-tol``
+   from the committed record, or the modes differ — the report is analytic
+   and deterministic, so drift means a mapping change that needs a blessed
+   baseline.
+
+Refreshing the baseline after an intended mapping change::
+
+    JAX_PLATFORMS=cpu python -m benchmarks.coverage_report
+    git add BENCH_coverage.json   # commit alongside the plan-rule change
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .gate_common import check_modes, finite, load_json, refresh_hint, run_gate
+
+COVERAGE_FLOOR = 0.90
+REFERENCE_TOKENS = 4096
+
+ARCHS = (
+    "zamba2_1p2b", "musicgen_large", "deepseek_v2_lite_16b",
+    "granite_moe_1b_a400m", "xlstm_125m", "minicpm_2b", "gemma2_9b",
+    "gemma_2b", "phi4_mini_3p8b", "chameleon_34b",
+)
+
+REFRESH_HINT = refresh_hint(
+    "JAX_PLATFORMS=cpu python -m benchmarks.coverage_report",
+    "BENCH_coverage.json",
+    "this change (a plan-rule change, a new operand group kind, a config "
+    "edit)",
+)
+
+
+def _walk_finite(node, path: str, failures: list[str]) -> None:
+    if isinstance(node, dict):
+        for k, v in sorted(node.items()):
+            _walk_finite(v, f"{path}.{k}", failures)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _walk_finite(v, f"{path}[{i}]", failures)
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        if not finite(node):
+            failures.append(f"{path} = {node!r} — non-finite number in the record")
+
+
+def check_meta(fresh: dict) -> list[str]:
+    failures = []
+    ref = fresh.get("_meta", {}).get("reference_tokens")
+    if ref != REFERENCE_TOKENS:
+        failures.append(
+            f"_meta.reference_tokens = {ref!r}, pinned value {REFERENCE_TOKENS} "
+            f"— coverage ratios across records are no longer comparable"
+        )
+    return failures
+
+
+def check_configs(fresh: dict) -> list[str]:
+    failures: list[str] = []
+    configs = fresh.get("configs", {})
+    for arch in ARCHS:
+        rec = configs.get(arch)
+        if rec is None:
+            failures.append(f"configs.{arch} missing — the report no longer "
+                            f"covers every architecture")
+            continue
+        cov, base = rec.get("coverage"), rec.get("default_coverage")
+        analog = rec.get("analog_tflops")
+        if not finite(analog) or analog <= 0:
+            failures.append(f"configs.{arch}: analog_tflops = {analog!r} — "
+                            f"no compute mapped to the crossbar path at all")
+            continue
+        if not finite(cov) or cov < COVERAGE_FLOOR:
+            failures.append(
+                f"configs.{arch}: coverage = {cov!r} < {COVERAGE_FLOOR} — "
+                f"eligible FLOPs fell off the analog path; see the config's "
+                f"dense_eligible rows for what stayed dense"
+            )
+        if finite(cov) and finite(base) and cov < base - 1e-9:
+            failures.append(
+                f"configs.{arch}: coverage {cov:.4f} < default_coverage "
+                f"{base:.4f} — coverage_rules mapped LESS than default_rules"
+            )
+        for section in ("dense_eligible", "excluded"):
+            for i, row in enumerate(rec.get(section, [])):
+                if not row.get("reason"):
+                    failures.append(
+                        f"configs.{arch}.{section}[{i}] ({row.get('path')}): "
+                        f"missing reason — off-crossbar FLOPs must be "
+                        f"accounted for, not just counted"
+                    )
+    return failures
+
+
+def check_drift(base: dict, fresh: dict, tol: float) -> list[str]:
+    failures = list(check_modes(base, fresh, what="coverage reports"))
+    for arch in ARCHS:
+        b = base.get("configs", {}).get(arch, {}).get("coverage")
+        f = fresh.get("configs", {}).get(arch, {}).get("coverage")
+        if finite(b) and finite(f) and abs(f - b) > tol:
+            failures.append(
+                f"configs.{arch}: coverage moved {b:.6f} -> {f:.6f} "
+                f"(|delta| > {tol}) — the mapping changed; bless the baseline"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default="BENCH_coverage.json")
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--drift-tol", type=float, default=1e-6)
+    args = ap.parse_args(argv)
+
+    fresh = load_json(args.fresh)
+    failures: list[str] = []
+    _walk_finite(fresh, "record", failures)
+    failures += check_meta(fresh)
+    failures += check_configs(fresh)
+    if args.baseline:
+        failures += check_drift(load_json(args.baseline), fresh, args.drift_tol)
+
+    n = len(fresh.get("configs", {}))
+    return run_gate(
+        "COVERAGE", failures,
+        f"coverage gate OK: {n} configs, every one >= {COVERAGE_FLOOR:.0%} "
+        f"analog FLOPs with off-crossbar leaves accounted for",
+        REFRESH_HINT,
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

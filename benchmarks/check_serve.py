@@ -11,6 +11,11 @@ Checks a freshly-produced serving record for:
 * **tier frontier shape** — both SLA tiers served requests, the bulk tier's
   ADC resolution is below the premium tier's, and its throughput is higher
   (lower-resolution reads are priced faster on the virtual clock).
+* **the crossbar clock** (``--require-crossbar-clock``) — the record must
+  have been produced with ``--isa-clock`` (``_meta.isa_clock``) and carry
+  the ``crossbar_clock`` section: tokens/sec priced in compiled crossbar
+  cycles, finite, positive, and consistent with the headline speedup. A
+  host-calibrated record cannot satisfy this check.
 
 Mode guard (mirrors ``check_regression``): when ``--baseline`` is given, the
 baseline and fresh records must agree on ``_meta.smoke`` — smoke shrinks the
@@ -20,7 +25,7 @@ calibrated per machine), plus the committed full record's internal claims.
 
 Refreshing the committed record after an intended scheduler change::
 
-    JAX_PLATFORMS=cpu python -m repro.launch.serve --trace --out BENCH_serve.json
+    JAX_PLATFORMS=cpu python -m repro.launch.serve --trace --isa-clock --out BENCH_serve.json
     git add BENCH_serve.json
 """
 from __future__ import annotations
@@ -35,9 +40,34 @@ LATENCY_KEYS = ("tokens_per_sec", "per_token_p50_ms", "per_token_p99_ms",
                 "ttft_p50_ms", "ttft_p99_ms", "makespan_s")
 
 REFRESH_HINT = refresh_hint(
-    "JAX_PLATFORMS=cpu python -m repro.launch.serve --trace --out BENCH_serve.json",
+    "JAX_PLATFORMS=cpu python -m repro.launch.serve --trace --isa-clock --out BENCH_serve.json",
     "BENCH_serve.json", "this change (e.g. a scheduler policy change)",
 )
+
+
+def check_crossbar_clock(fresh: dict) -> list[str]:
+    """The ``--require-crossbar-clock`` column: present, crossbar-priced,
+    finite, and telling the same story as the headline summaries."""
+    if not fresh.get("_meta", {}).get("isa_clock"):
+        return ["_meta.isa_clock is not set — the record was produced on the "
+                "host-calibrated clock; rerun the bench with --isa-clock"]
+    cc = fresh.get("crossbar_clock")
+    if not isinstance(cc, dict):
+        return ["crossbar_clock section missing despite _meta.isa_clock — "
+                "the bench stopped emitting the crossbar tokens/sec column"]
+    failures = []
+    for k in ("static_tokens_per_sec", "continuous_tokens_per_sec", "speedup"):
+        v = cc.get(k)
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
+            failures.append(f"crossbar_clock.{k} is not finite-positive: {v!r}")
+    if not failures:
+        head = fresh.get("speedup")
+        if isinstance(head, (int, float)) and abs(cc["speedup"] - head) > 1e-9:
+            failures.append(
+                f"crossbar_clock.speedup {cc['speedup']!r} disagrees with the "
+                f"headline speedup {head!r} — the column desynced from the run"
+            )
+    return failures
 
 
 def _finite_summary(name: str, s: dict) -> list[str]:
@@ -114,6 +144,9 @@ def main(argv=None) -> int:
     ap.add_argument("--min-speedup", type=float, default=1.1,
                     help="continuous/static tokens-per-sec floor (default 1.1 "
                          "for smoke; the full committed record clears 1.5)")
+    ap.add_argument("--require-crossbar-clock", action="store_true",
+                    help="fail unless the record was produced with "
+                         "--isa-clock and carries the crossbar_clock column")
     args = ap.parse_args(argv)
 
     fresh = load_json(args.fresh)
@@ -123,6 +156,8 @@ def main(argv=None) -> int:
                                 what="models and traces")
     if not failures:
         failures = check(fresh, args.min_speedup)
+        if args.require_crossbar_clock:
+            failures += check_crossbar_clock(fresh)
 
     ok = (
         f"serve gate OK: speedup {fresh.get('speedup', float('nan')):.2f}x >= "

@@ -1,0 +1,212 @@
+"""Per-config analog-FLOPs coverage report (``BENCH_coverage.json``).
+
+The tentpole readout for the generalized operand API: for every
+architecture config, how much of the training compute actually runs on the
+crossbar path under ``repro.plan.coverage_rules`` — and, leaf by leaf, what
+stays dense/digital and *why*. Everything is analytic and deterministic
+(``jax.eval_shape`` the param tree, resolve the plan, count FLOPs at a
+fixed reference token count) — no training, no timing, no smoke mode.
+
+Accounting model, per weight leaf, at ``REFERENCE_TOKENS`` tokens:
+
+* three compute components, mirroring the paper's per-layer trio — the
+  forward MVM, the backward-``dx`` MᵀVM, and the weight update (OPA deposit
+  vs dense gradient + write);
+* each component costs ``2 * T_eff * M * N * stack`` FLOPs with
+  ``(M, N) = shape[-2:]`` and ``stack = prod(shape[:-2])`` — for im2col
+  conv leaves that is ``2*T*K*C`` per layer (the depthwise im2col matmul),
+  and expert-group leaves replace ``T`` with the per-expert capacity token
+  count ``Ctot`` (the same formula ``train.step`` uses for the operand
+  slots), the expert axis riding ``stack``;
+* a component is *analog* when the plan runs it on the crossbar: forward
+  and backward iff the leaf is ``mapped`` (planes live on tiles; MVM and
+  the MᵀVM transpose read are crossbar ops), the update iff
+  ``grad == "operand"`` (the fused OPA deposit);
+* leaves the operand path cannot represent are *excluded* from the
+  coverage ratio and itemized with a reason: vectors (VFU territory), the
+  embedding gather / tied LM-head readout, ``shared`` subtrees (applied
+  more than once per step), the sLSTM recurrent matrix (consumed inside
+  the cell scan), and matrices below the crossbar tile minimum;
+* ``coverage = analog / (analog + dense_eligible)`` over the remaining
+  components — the number the CI gate (``benchmarks.check_coverage``)
+  holds above 0.90 for every config, alongside ``default_coverage`` (the
+  same ratio under ``default_rules``) so the report shows exactly what the
+  generalized operand API bought.
+
+Refreshing the committed record after an intended mapping change::
+
+    JAX_PLATFORMS=cpu python -m benchmarks.coverage_report
+    git add BENCH_coverage.json
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import lm
+from repro.optim import PantherConfig
+from repro.plan import coverage_rules, default_rules, plan_by_path, resolve_plan
+
+COVERAGE_JSON = os.environ.get("BENCH_COVERAGE_JSON", "BENCH_coverage.json")
+
+REFERENCE_TOKENS = 4096
+
+# keys the operand path cannot represent, with the why (the gate requires
+# every excluded leaf to carry one of these)
+_REASON_VECTOR = "vector parameter — runs on the VFU, not a crossbar MVM"
+_REASON_EMBED = ("token-embedding gather (and tied LM-head readout) — a row "
+                 "gather, not a crossbar MVM")
+_REASON_SHARED = ("'shared' subtree, applied more than once per step — a "
+                  "single OPA deposit site cannot fold repeated use")
+_REASON_RECURRENT = ("recurrent cell matrix consumed inside the sLSTM scan — "
+                     "no single crossbar matmul site")
+_REASON_SMALL = "below the crossbar tile minimum (min(shape[-2:]) < min_dim)"
+
+
+def _exclusion_reason(ps: str, shape, mapped: bool, min_dim: int) -> str | None:
+    parts = ps.split("/")
+    if len(shape) < 2 or parts[-1] == "scale":
+        # norm scales are per-layer vectors even when the layer stack makes
+        # the leaf 2-D — elementwise VFU work, not a matmul
+        return _REASON_VECTOR
+    if parts[-1] == "embed":
+        return _REASON_EMBED
+    if "shared" in parts:
+        return _REASON_SHARED
+    if parts[-1] == "r":
+        return _REASON_RECURRENT
+    if not mapped:
+        return _REASON_SMALL
+    return None
+
+
+def _dense_reason(ps: str, pl) -> str:
+    if not pl.mapped:
+        return "planes not mapped — dense matmul"
+    if ps.split("/")[-1] == "lm_head":
+        return ("untied LM-head readout: its gradient couples to the fused "
+                "softmax-crossentropy kernel, so the update rides the dense "
+                "deposit path (forward/backward MVMs still run on the tiles)")
+    return ("no operand cotangent at this call site — the update rides the "
+            "(bit-compatible) dense gradient deposit")
+
+
+def _expert_tokens(cfg, tokens: int) -> int:
+    """Per-expert capacity token count — the ``train.step`` slot formula."""
+    from repro.models.mlp import MOE_GROUP
+
+    sg = min(MOE_GROUP, tokens)
+    cap = max(cfg.moe.top_k,
+              int(cfg.moe.capacity_factor * sg * cfg.moe.top_k / cfg.moe.n_experts))
+    return (tokens // sg) * cap
+
+
+def _component_flops(cfg, shape, group: str | None, tokens: int) -> float:
+    m, n = shape[-2], shape[-1]
+    stack = math.prod(shape[:-2]) if len(shape) > 2 else 1
+    t_eff = _expert_tokens(cfg, tokens) if group == "expert" else tokens
+    return 2.0 * t_eff * m * n * stack
+
+
+def _config_record(arch: str, opt_cfg: PantherConfig) -> dict:
+    cfg = configs.get(arch)
+    shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    plan = plan_by_path(resolve_plan(shapes, coverage_rules(opt_cfg)))
+    base_plan = plan_by_path(resolve_plan(shapes, default_rules(opt_cfg)))
+
+    def tally(by_path):
+        analog = dense = 0.0
+        dense_rows, excluded_rows = [], []
+        n_leaves = {"analog": 0, "dense_eligible": 0, "excluded": 0}
+        for ps, pl in sorted(by_path.items()):
+            leaf = leaf_shapes[ps]
+            reason = _exclusion_reason(ps, leaf.shape, pl.mapped, opt_cfg.min_dim)
+            if reason is not None:
+                fl = (3 * _component_flops(cfg, leaf.shape, pl.group, REFERENCE_TOKENS)
+                      if len(leaf.shape) >= 2 else 0.0)
+                excluded_rows.append(
+                    {"path": ps, "shape": list(leaf.shape),
+                     "tflops": fl / 1e12, "reason": reason})
+                n_leaves["excluded"] += 1
+                continue
+            comp = _component_flops(cfg, leaf.shape, pl.group, REFERENCE_TOKENS)
+            # forward MVM + backward MᵀVM: crossbar iff the planes live there
+            parts = {"fwd": pl.mapped, "bwd_dx": pl.mapped,
+                     "update": pl.grad == "operand"}
+            leaf_dense = [k for k, on_xbar in parts.items() if not on_xbar]
+            for on_xbar in parts.values():
+                if on_xbar:
+                    analog += comp
+                else:
+                    dense += comp
+            if leaf_dense:
+                n_leaves["dense_eligible"] += 1
+                dense_rows.append(
+                    {"path": ps, "shape": list(leaf.shape),
+                     "components": leaf_dense,
+                     "tflops": len(leaf_dense) * comp / 1e12,
+                     "reason": _dense_reason(ps, pl)})
+            else:
+                n_leaves["analog"] += 1
+        cov = analog / (analog + dense) if (analog + dense) > 0 else 0.0
+        return cov, analog, dense, dense_rows, excluded_rows, n_leaves
+
+    leaf_shapes = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    from repro.models.common import path_str
+
+    for p, leaf in flat:
+        leaf_shapes[path_str(p)] = leaf
+
+    cov, analog, dense, dense_rows, excluded_rows, n_leaves = tally(plan)
+    base_cov, *_ = tally(base_plan)
+    group_counts = {"im2col": 0, "expert": 0}
+    for pl in plan.values():
+        if pl.group:
+            group_counts[pl.group] += 1
+    return {
+        "coverage": cov,
+        "default_coverage": base_cov,
+        "analog_tflops": analog / 1e12,
+        "dense_eligible_tflops": dense / 1e12,
+        "excluded_tflops": sum(r["tflops"] for r in excluded_rows),
+        "n_leaves": n_leaves,
+        "group_counts": group_counts,
+        "dense_eligible": dense_rows,
+        "excluded": excluded_rows,
+    }
+
+
+def main() -> None:
+    opt_cfg = PantherConfig()
+    record = {
+        "_meta": {
+            "smoke": False,
+            "generator": "benchmarks.coverage_report",
+            "reference_tokens": REFERENCE_TOKENS,
+            "note": ("analytic per-leaf FLOPs accounting under "
+                     "plan.coverage_rules; coverage = analog / (analog + "
+                     "dense_eligible), excluded leaves itemized with reasons"),
+        },
+        "configs": {},
+    }
+    for arch in configs.ARCH_IDS:
+        rec = _config_record(arch, opt_cfg)
+        record["configs"][arch] = rec
+        print(f"{arch}: coverage={rec['coverage']:.4f} "
+              f"(default {rec['default_coverage']:.4f}) "
+              f"analog={rec['analog_tflops']:.1f}T "
+              f"dense={rec['dense_eligible_tflops']:.1f}T "
+              f"groups={rec['group_counts']}")
+    with open(COVERAGE_JSON, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True)
+    print(f"wrote {COVERAGE_JSON}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,24 +3,21 @@ per-layer energy/latency report against all three baselines — the Fig 11/13
 pipeline end to end (graph capture -> partition -> fuse -> schedule ->
 cycle/energy simulation).
 
-This is the seed-era *layer-list* pipeline (``compile_model`` is
-deprecated); the modern plan-aware report — per-leaf schedules compiled
+This is the seed-era *layer-list* pipeline (the public ``compile_model``
+entry was removed; this example drives the internal ``_compile_layers``
+stage directly); the modern plan-aware report — per-leaf schedules compiled
 from a resolved ``CrossbarPlan`` — is ``examples/energy_report.py``.
 
     PYTHONPATH=src python examples/isa_energy_report.py
 """
-import warnings
-
-from repro.isa.compiler import compile_model
+from repro.isa.compiler import _compile_layers
 from repro.isa.graph import MLP_L4
 from repro.isa.simulator import model_report, simulate
 
 
 def main():
-    with warnings.catch_warnings():
-        # this example demonstrates the legacy entry on purpose
-        warnings.simplefilter("ignore", DeprecationWarning)
-        g, placements, prog = compile_model(MLP_L4, batch=1, variant="v2")
+    # the legacy looped-schedule pipeline, on purpose
+    g, placements, prog = _compile_layers(MLP_L4, batch=1, variant="v2")
     n_tiles = sum(m.n_tiles() for m in g.matrices.values())
     print(f"graph: {len(g.nodes)} nodes; {n_tiles} crossbar tiles placed; "
           f"{prog.total_instrs()} instructions on {len(prog.cores)} cores")

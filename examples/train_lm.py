@@ -48,11 +48,15 @@ def main():
                     help="crossbar-in-the-loop preset (ideal|adc9|adc6|adc6_bwd|"
                          "adc6_fwd): forward MVM + backward MᵀVM read the live "
                          "planes at finite ADC resolution")
-    ap.add_argument("--plan", default=None, choices=["default", "hetero"],
+    ap.add_argument("--plan", default=None,
+                    choices=["default", "hetero", "moe-hetero"],
                     help="declarative per-leaf mapping plan (repro.plan): "
                          "'default' resolves + prints the behavior-preserving "
                          "plan; 'hetero' demos per-layer-group heterogeneity "
-                         "(two slice specs + two ADC resolutions in one model)")
+                         "(two slice specs + two ADC resolutions in one model); "
+                         "'moe-hetero' swaps in a MoE config, puts the expert "
+                         "stacks on the grouped-crossbar operand path, and "
+                         "gives popular experts premium ADC (expert_groups)")
     args = ap.parse_args()
 
     cfg = config_100m()
@@ -71,10 +75,33 @@ def main():
         from repro.models.common import FidelityConfig
         from repro.plan import PlanRule, default_rules, plan_summary, resolve_plan
 
-        if args.fidelity and args.plan == "hetero":
-            raise SystemExit("--plan hetero attaches per-leaf fidelity itself; "
-                             "drop --fidelity")
-        if args.plan == "hetero":
+        if args.fidelity and args.plan in ("hetero", "moe-hetero"):
+            raise SystemExit(f"--plan {args.plan} attaches per-leaf fidelity "
+                             "itself; drop --fidelity")
+        if args.plan == "moe-hetero":
+            # a granite-style MoE variant of the demo model: every expert
+            # stack trains through the grouped-crossbar operand path
+            # (coverage_rules maps experts_{gate,up,down} with
+            # group="expert"), and expert_groups splits the expert axis by
+            # popularity — routers concentrate load on a few hot experts,
+            # which earn 9-bit ADC reads while the cold tail serves at 6
+            # bits on cheaper converters (paper Fig. 10 heterogeneity,
+            # applied WITHIN one leaf)
+            from repro.models.common import MoECfg
+            from repro.plan import coverage_rules
+
+            cfg = dataclasses.replace(
+                cfg, arch_id="gemma-moe-100m", dtype=jnp.float32,
+                pattern=(("moe", 12),), d_ff=512,
+                moe=MoECfg(n_experts=16, top_k=4, d_ff_expert=512),
+            )
+            rules = coverage_rules(opt_cfg) + (
+                PlanRule("*/experts_*", expert_groups=(
+                    (4, FidelityConfig(adc_bits_fwd=9, adc_bits_bwd=9)),
+                    (12, FidelityConfig(adc_bits_fwd=6, adc_bits_bwd=6)),
+                )),
+            )
+        elif args.plan == "hetero":
             # split the 12 layers into two scanned groups so rules can give
             # each its own crossbar configuration
             cfg = dataclasses.replace(cfg, dtype=jnp.float32,

@@ -107,7 +107,7 @@ def param_specs(params, mesh=None, plan=None) -> Any:
 
 
 def operand_grad_spec(path_str: str, wshape: tuple, mesh, mb_batch: int | None,
-                      hint: tuple | None = None):
+                      hint: tuple | None = None, group: str | None = None):
     """Sharding for an outer-product gradient leaf ``OuterProductGrad(x, dh)``
     of the weight at ``path_str`` with dense shape ``wshape`` [*stack, M, N].
 
@@ -115,8 +115,17 @@ def operand_grad_spec(path_str: str, wshape: tuple, mesh, mb_batch: int | None,
     axes (tokens flatten [B, S] with B leading, so B-divisibility carries
     over), and the feature axis inherits the weight's own M/N rule — x
     columns align with W rows, dh columns with W columns. Returns an
-    ``OuterProductGrad`` of PartitionSpecs (x: [*stack, T, M], dh:
-    [*stack, T, N]).
+    ``OuterProductGrad`` of PartitionSpecs whose kind aux matches the
+    gradient the model emits (pytree equality under the mesh), per the
+    plan leaf's ``group``:
+
+    - matmul (``group=None``): x ``[*stack, T, M]``, dh ``[*stack, T, N]``
+    - ``"im2col"`` (weight ``[*lead, K, C]``): x ``[*lead, C, T, K]``, dh
+      ``[*lead, C, T, 1]`` — the channel axis inherits the weight's C rule
+      and the tap/unit axes replicate
+    - ``"expert"``: per-expert capacity buffers — the expert axis rides the
+      stack (EP over 'model'); capacity positions don't align with the
+      batch axis, so the token axis replicates
     """
     from repro.models.common import OuterProductGrad  # local: avoid cycles
 
@@ -126,6 +135,17 @@ def operand_grad_spec(path_str: str, wshape: tuple, mesh, mb_batch: int | None,
     dp = None
     if mesh is not None and mb_batch is not None:
         dp = tuple(data_spec(mesh, mb_batch, 1))[0]
+    if group == "im2col":
+        return OuterProductGrad(
+            x=P(*stack, n_ax, dp, m_ax),
+            dh=P(*stack, n_ax, dp, None),
+            kind="im2col",
+        )
+    if group == "expert":
+        return OuterProductGrad(
+            x=P(*stack, None, m_ax),
+            dh=P(*stack, None, n_ax),
+        )
     return OuterProductGrad(
         x=P(*stack, dp, m_ax),
         dh=P(*stack, dp, n_ax),

@@ -8,10 +8,12 @@ Two entry points share these stages:
   per-leaf tile schedules (packed bit-plane MVM rounds, MᵀVM transpose
   reads, fused-OPA vs serial read/write updates), using this module's
   placement (:func:`place_tiles`) and fusion (:func:`fuse`).
-* :func:`compile_model` — the seed-era looped-schedule entry over
-  ``FCLayer``/``ConvLayer`` lists. **Deprecated**: it prices every MVM as
-  one opaque 16-bit tile-op and knows nothing about plans, bit-plane
-  packing, or sharding.
+* ``_compile_layers`` — the seed-era looped-schedule pipeline over
+  ``FCLayer``/``ConvLayer`` lists, kept for the legacy simulator tests and
+  ``examples/isa_energy_report.py``. It prices every MVM as one opaque
+  16-bit tile-op and knows nothing about plans, bit-plane packing, or
+  sharding; its public entry :func:`compile_model` graduated from
+  DeprecationWarning to a hard ``RuntimeError``.
 
 Pipeline stages mirroring the paper's PUMA extension:
   1. *Partition*: every weight matrix is cut into 128x128 tiles.
@@ -32,7 +34,6 @@ Pipeline stages mirroring the paper's PUMA extension:
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from collections import defaultdict
 
 from .graph import Graph, Node
@@ -244,17 +245,16 @@ def _no_dep(a: Instr, b: Instr) -> bool:
 
 
 def compile_model(layers, batch: int = 1, variant: str = "v2", hw: Hierarchy = Hierarchy()):
-    """Seed-era looped-schedule entry. Deprecated: use
+    """Removed seed-era looped-schedule entry (deprecated through PR 7-9;
+    graduated to a hard error). Use
     :func:`repro.isa.plan_compile.compile_plan`, which lowers a resolved
     per-leaf plan (packed bit-plane rounds, per-slice ADC pricing, OPA vs
     serial-write selection) instead of opaque 16-bit tile-ops."""
-    warnings.warn(
-        "repro.isa.compiler.compile_model prices the seed-era looped "
-        "schedule; use repro.isa.plan_compile.compile_plan to lower a "
-        "resolved CrossbarPlan to the packed per-leaf schedule instead",
-        DeprecationWarning, stacklevel=2,
+    raise RuntimeError(
+        "repro.isa.compiler.compile_model was removed; use "
+        "repro.isa.plan_compile.compile_plan(plan, ...) to lower a resolved "
+        "CrossbarPlan to the packed per-leaf schedule"
     )
-    return _compile_layers(layers, batch=batch, variant=variant, hw=hw)
 
 
 def _compile_layers(layers, batch: int = 1, variant: str = "v2", hw: Hierarchy = Hierarchy()):

@@ -12,7 +12,7 @@ Two pricers over compiled per-core instruction streams:
   Energy is keyed per *leaf path* — the joules/step table of
   ``plan_compile.report``.
 * :func:`simulate` — the seed-era pricer (opaque 16-bit tile-ops) kept for
-  the deprecated ``compile_model`` path and the analytic fig11-14 layer
+  the legacy ``_compile_layers`` path and the analytic fig11-14 layer
   model below.
 
 Shared mechanics:
@@ -37,7 +37,7 @@ from __future__ import annotations
 import dataclasses
 from collections import defaultdict
 
-from .compiler import Hierarchy, XBAR, compile_model
+from .compiler import Hierarchy, XBAR
 from .energy import DEFAULT_ENERGY, EnergyModel
 from .graph import ConvLayer, FCLayer
 from .isa import MVM_BIT, MTVM_BIT, OPA_BIT, Opcode

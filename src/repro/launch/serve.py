@@ -171,6 +171,17 @@ def run_trace_bench(args):
         "lossless_loss": lossless_loss,
         "tiers": tiers,
     }
+    if args.isa_clock:
+        # the headline summaries above already ran on the crossbar clock;
+        # this column restates the claim in its own section so the gate can
+        # require it by name (and a host-calibrated record can't satisfy it)
+        out["crossbar_clock"] = {
+            "static_tokens_per_sec": results["static"]["tokens_per_sec"],
+            "continuous_tokens_per_sec": results["continuous"]["tokens_per_sec"],
+            "speedup": speedup,
+            "note": ("tokens/sec priced in compiled crossbar cycles "
+                     "(repro.isa.plan_compile schedules), not host wall time"),
+        }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
     print(f"wrote {args.out}")

@@ -20,10 +20,22 @@ from repro.core.slicing import DEFAULT_SPEC, SliceSpec
 #
 # PANTHER's update is an in-crossbar outer product: the weight gradient is
 # never formed as a dense [M, N] matrix; the crossbar consumes the operands
-# (x, dh) directly. The TPU mapping mirrors that: crossbar-mapped linear
-# layers route through ``xbar_linear`` below, whose backward returns the
+# (x, dh) directly. The TPU mapping mirrors that: crossbar-mapped layers
+# route through the ``xbar_*`` wrappers below, whose backwards return the
 # operands as the weight cotangent, and the optimizer feeds them straight to
 # the fused quantize+deposit kernel (``kernels.sliced_opa.opa_fused_update``).
+#
+# The operand contract is *structured*, not matmul-only: ``kind`` names how
+# the operand pair folds into the crossbar layout —
+#
+# * ``"matmul"`` — the plain linear case, x [*stack, T, M] / dh [*stack, T, N]
+#   (lax.scan layer stacks AND grouped MoE expert tiles both ride the leading
+#   stack dims: one crossbar tile per stacked layer / expert).
+# * ``"im2col"`` — depthwise-conv patches: x [*stack, C, T, K] windowed input
+#   patches per channel, dh [*stack, C, T, 1] output cotangents. The per-cell
+#   sums are the 1705.08014 im2col mapping of a conv onto cross-point outer
+#   products; the channel axis joins the stack so the deposit is the same
+#   elementwise saturating accumulate, just relabeled.
 
 
 @jax.tree_util.register_pytree_node_class
@@ -31,28 +43,35 @@ class OuterProductGrad:
     """A weight cotangent in operand form: ``dW = x^T @ dh``, unmaterialized.
 
     ``x``: ``[*stack, T, M]`` flattened-token layer inputs; ``dh``:
-    ``[*stack, T, N]`` output cotangents. Leading ``stack`` dims are lax.scan
-    layer stacks. Registered as a pytree node so it flows through
+    ``[*stack, T, N]`` output cotangents (see the module comment for the
+    per-``kind`` layouts). Leading ``stack`` dims are lax.scan layer stacks
+    or grouped expert tiles. Registered as a pytree node so it flows through
     ``jax.grad``/``lax.scan``/``jit`` transparently; optimizer code treats a
     whole node as one gradient leaf (``is_leaf=is_outer_product_grad``).
+    ``kind`` is static aux data: two operand groups with different kinds are
+    different pytree structures (they map to different crossbar layouts).
     """
 
-    __slots__ = ("x", "dh")
+    __slots__ = ("x", "dh", "kind")
 
-    def __init__(self, x, dh):
+    def __init__(self, x, dh, kind: str = "matmul"):
         self.x = x
         self.dh = dh
+        self.kind = kind
 
     def tree_flatten(self):
-        return (self.x, self.dh), None
+        return (self.x, self.dh), self.kind
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, kind=aux)
 
     @property
     def shape(self):
         """Shape of the (virtual) dense gradient."""
+        if self.kind == "im2col":
+            # x [*stack, C, T, K] patches, dh [*stack, C, T, 1] -> dense [K, C]
+            return (*self.x.shape[:-3], self.x.shape[-1], self.x.shape[-3])
         return (*self.x.shape[:-2], self.x.shape[-1], self.dh.shape[-1])
 
     @property
@@ -60,15 +79,21 @@ class OuterProductGrad:
         return self.x.shape[-2]
 
     def materialize(self, dtype=None):
-        """Dense ``[*stack, M, N]`` gradient — debug/fallback only (this is
-        exactly the HBM materialization the fused path exists to avoid)."""
+        """Dense gradient in the *weight's* layout — debug/fallback only
+        (this is exactly the HBM materialization the fused path avoids)."""
         g = jnp.einsum("...tm,...tn->...mn", self.x, self.dh,
                        preferred_element_type=jnp.float32)
+        if self.kind == "im2col":
+            # [*stack, C, K, 1] -> [*stack, K, C], the conv weight layout
+            g = jnp.swapaxes(g[..., 0], -1, -2)
         return g if dtype is None else g.astype(dtype)
 
     def scale_dh(self, c):
         """dW is linear in dh: fold a scalar (e.g. 1/microbatches) into it."""
-        return OuterProductGrad(self.x, (self.dh.astype(jnp.float32) * c).astype(self.dh.dtype))
+        return OuterProductGrad(
+            self.x, (self.dh.astype(jnp.float32) * c).astype(self.dh.dtype),
+            kind=self.kind,
+        )
 
     # token-chunk size for sq_norm: bounds the Gram intermediate to
     # [SQ_NORM_CHUNK, T] instead of [T, T] for long token axes
@@ -112,6 +137,13 @@ class OuterProductGrad:
         if rem:
             total = total + rows(x[..., nc * C :, :], dh[..., nc * C :, :])
         return total
+
+
+# Public name for the structured operand contract: an OperandGroup is an
+# OuterProductGrad with a ``kind`` — the matmul case is just the default
+# kind. Kept as one class so every consumer (optimizer, sharding, train-step
+# microbatch merge) handles all kinds through a single pytree node.
+OperandGroup = OuterProductGrad
 
 
 def is_outer_product_grad(x) -> bool:
@@ -227,6 +259,30 @@ class FidelityConfig:
     # non-ideal ReRAM physics at the deposit/read sites (None = ideal device;
     # bit-identical to the pre-DeviceModel code paths)
     device: DeviceModel | None = None
+    # per-expert-group ADC heterogeneity for grouped (MoE expert) leaves: a
+    # tuple of ``(count, FidelityConfig | None)`` segments partitioning the
+    # leading expert axis in order — ``None`` means "this group reads at the
+    # base config". Popular experts can serve a high-resolution ADC while the
+    # long tail reads cheap (the fig10 heterogeneity argument, per expert
+    # tile instead of per layer). Hashable (tuple of frozen dataclasses), so
+    # it stays jit-static aux like everything else here. ``None`` = uniform.
+    expert_groups: tuple | None = None
+
+    def group_slices(self, n_experts: int):
+        """Yield ``(start, stop, fid)`` per expert-group segment, covering
+        ``[0, n_experts)``; the tail beyond the declared segments (or the
+        whole axis when ``expert_groups`` is None) reads at the base config
+        (self, with ``expert_groups`` cleared so per-expert reads are rank-3
+        single-tile reads)."""
+        base = dataclasses.replace(self, expert_groups=None)
+        start = 0
+        for count, gfid in self.expert_groups or ():
+            stop = min(start + int(count), n_experts)
+            if stop > start:
+                yield start, stop, (gfid if gfid is not None else base)
+            start = stop
+        if start < n_experts:
+            yield start, n_experts, base
 
 
 @jax.tree_util.register_pytree_node_class
@@ -408,6 +464,276 @@ def xbar_linear(x, w, dtype=None):
             return _xbar_linear_fid(x, w)
         return _xbar_linear(x, w)
     return x @ w.astype(dtype if dtype is not None else x.dtype)
+
+
+# ------------------- grouped (per-expert) crossbar linears -------------------
+
+
+@jax.custom_vjp
+def _xbar_grouped(x, ww):
+    return jnp.einsum("ecd,edf->ecf", x, ww.w.astype(x.dtype))
+
+
+def _xbar_grouped_fwd(x, ww):
+    return jnp.einsum("ecd,edf->ecf", x, ww.w.astype(x.dtype)), (x, ww.w)
+
+
+def _xbar_grouped_bwd(res, dy):
+    x, w = res
+    dx = jnp.einsum("ecf,edf->ecd", dy, w.astype(dy.dtype))
+    # matmul-kind operands with the expert axis as a leading stack dim: each
+    # expert tile deposits its own x[e]^T @ dy[e] — the stacked fused-OPA
+    # scan consumes it unchanged, one crossbar tile per expert.
+    dw = XbarWeight(jnp.zeros_like(w), OuterProductGrad(x, dy))
+    return dx, dw
+
+
+_xbar_grouped.defvjp(_xbar_grouped_fwd, _xbar_grouped_bwd)
+
+
+def _grouped_fid_read(ww, v, transpose=False):
+    """Finite-ADC read of every expert tile: planes ``[E, S, M, N]`` driven
+    per expert through ``fidelity_read``, with ``fid.expert_groups``
+    selecting a (possibly different) ADC per contiguous expert segment."""
+    from repro.core.mvm import fidelity_read  # lazy: core stays model-free
+
+    E = v.shape[0]
+    fb = jnp.broadcast_to(jnp.asarray(ww.frac_bits, jnp.int32), (E,))
+    outs = []
+    for start, stop, gfid in ww.fid.group_slices(E):
+        def body(_, args, _fid=gfid):
+            p, f, vi = args
+            return None, fidelity_read(p, f, vi, _fid, transpose=transpose)
+
+        _, y = jax.lax.scan(
+            body, None, (ww.planes[start:stop], fb[start:stop], v[start:stop])
+        )
+        outs.append(y)
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+
+
+@jax.custom_vjp
+def _xbar_grouped_fid(x, ww):
+    y, _ = _xbar_grouped_fid_fwd(x, ww)
+    return y
+
+
+def _xbar_grouped_fid_fwd(x, ww):
+    if ww.fid.fwd:
+        y = _grouped_fid_read(ww, x).astype(x.dtype)
+    else:
+        y = jnp.einsum("ecd,edf->ecf", x, ww.w.astype(x.dtype))
+    return y, (x, ww)
+
+
+def _xbar_grouped_fid_bwd(res, dy):
+    x, ww = res
+    if ww.fid.bwd:
+        dx = _grouped_fid_read(ww, dy, transpose=True).astype(dy.dtype)
+    else:
+        dx = jnp.einsum("ecf,edf->ecd", dy, ww.w.astype(dy.dtype))
+    ct = XbarWeight(
+        jnp.zeros_like(ww.w),
+        OuterProductGrad(x, dy),
+        planes=_float0_zeros(ww.planes),
+        frac_bits=_float0_zeros(ww.frac_bits),
+        fid=ww.fid,
+    )
+    return dx, ct
+
+
+_xbar_grouped_fid.defvjp(_xbar_grouped_fid_fwd, _xbar_grouped_fid_bwd)
+
+
+def xbar_grouped_linear(x, w, dtype=None):
+    """Per-expert batched linear ``y[e] = x[e] @ w[e]`` (``ecd,edf->ecf``)
+    where ``w`` may be a plain ``[E, d, f]`` array or an ``XbarWeight``.
+
+    The crossbar mapping treats each expert as its own grouped tile: the
+    weight cotangent is a matmul-kind ``OperandGroup`` with the expert axis
+    as a leading stack dim, so ``optim.panther`` deposits every expert's
+    outer product through the same stacked fused-OPA scan — no dense
+    ``[E, d, f]`` gradient in HBM. With planes + a ``FidelityConfig`` the
+    forward/backward reads go through the finite-ADC engine per expert tile,
+    honoring ``fid.expert_groups`` (heterogeneous ADC by expert popularity).
+    """
+    if isinstance(w, XbarWeight):
+        if dtype is not None:
+            x = x.astype(dtype)
+        if w.fid is not None and w.planes is not None:
+            return _xbar_grouped_fid(x, w)
+        return _xbar_grouped(x, w)
+    return jnp.einsum("ecd,edf->ecf", x, w.astype(dtype if dtype is not None else x.dtype))
+
+
+# ------------------- depthwise conv on the crossbar (im2col) -----------------
+
+
+def _dwconv_val(xp, w):
+    """Depthwise causal conv: ``out[b, t, c] = sum_k xp[b, t+k, c] * w[k, c]``
+    with ``xp`` already left-padded ``[B, L+K-1, C]`` and ``w [K, C]``."""
+    K = w.shape[0]
+    L = xp.shape[1] - K + 1
+    out = xp[:, 0:L] * w[0]
+    for k in range(1, K):
+        out = out + xp[:, k : k + L] * w[k]
+    return out
+
+
+def _dwconv_operands(xp, dy):
+    """Fold the depthwise-conv weight cotangent into im2col operand form:
+    patches ``x' [C, B*L, K]`` (``x'[c, (b,t), k] = xp[b, t+k, c]``) against
+    ``dh' [C, B*L, 1]`` — ``materialize()`` recovers the dense ``[K, C]``
+    conv gradient exactly (property-tested bit-identical in f32)."""
+    B, L, C = dy.shape
+    K = xp.shape[1] - L + 1
+    pat = jnp.stack([xp[:, k : k + L] for k in range(K)], axis=-1)  # [B, L, C, K]
+    x2 = jnp.moveaxis(pat, 2, 0).reshape(C, B * L, K)
+    dy2 = jnp.moveaxis(dy, 2, 0).reshape(C, B * L, 1)
+    return OuterProductGrad(x2, dy2, kind="im2col")
+
+
+@jax.custom_vjp
+def _xbar_dwconv(xp, ww):
+    return _dwconv_val(xp, ww.w.astype(xp.dtype))
+
+
+def _xbar_dwconv_fwd(xp, ww):
+    return _dwconv_val(xp, ww.w.astype(xp.dtype)), (xp, ww.w)
+
+
+def _dwconv_dx(dy, w):
+    """Input cotangent of the depthwise conv: ``dxp[b, t+k, c] += dy[b, t, c]
+    * w[k, c]`` (the transpose of the sliding-window sum)."""
+    K = w.shape[0]
+    B, L, C = dy.shape
+    dxp = jnp.zeros((B, L + K - 1, C), dy.dtype)
+    for k in range(K):
+        dxp = dxp.at[:, k : k + L].add(dy * w[k])
+    return dxp
+
+
+def _xbar_dwconv_bwd(res, dy):
+    xp, w = res
+    dxp = _dwconv_dx(dy, w.astype(dy.dtype))
+    dw = XbarWeight(jnp.zeros_like(w), _dwconv_operands(xp, dy))
+    return dxp, dw
+
+
+_xbar_dwconv.defvjp(_xbar_dwconv_fwd, _xbar_dwconv_bwd)
+
+
+def _dwconv_fidelity_read(planes, frac_bits, v, fid, transpose=False):
+    """Finite-ADC crossbar read of the depthwise conv (im2col mapping).
+
+    ``planes`` int8 ``[S, K, C]`` digit planes of the conv kernel. Forward
+    (``transpose=False``): ``v`` is the padded input ``[B, L+K-1, C]``; each
+    output (t, c) is the analog sum of the K cells in channel c's column
+    driven by the windowed input bits — K rows per column, so the ADC full
+    scale is ``K * plane_max`` (exactly ``mvm_sliced``'s ``n_rows`` rule).
+    Transpose (the layer-gradient read): ``v`` is ``dy [B, L, C]``; each
+    (k, c) cell is driven from its single output column (n_rows = 1) and the
+    digitized per-cell products scatter-add back over the K taps. With
+    ``adc_bits=None`` both directions are exact in f32, bit-identical to the
+    dense conv against ``dequantize_planes`` (same property the matmul
+    engine's ideal-ADC reads satisfy).
+    """
+    from repro.core.fixed_point import choose_frac_bits, exp2i, quantize
+    from repro.core.mvm import _adc, bit_planes, shift_add_scales
+    from repro.core.slicing import LOGICAL_BITS
+
+    spec = fid.spec
+    adc_bits = fid.adc_bits_bwd if transpose else fid.adc_bits_fwd
+    xf = choose_frac_bits(v, word_bits=fid.io_bits, margin_bits=fid.margin_bits,
+                          clip_to_word=False)
+    v_q = quantize(v, xf, fid.io_bits)
+    w = planes.astype(jnp.float32)  # [S, K, C]
+    K = planes.shape[-2]
+    pm = jnp.asarray(spec.plane_max, jnp.float32)  # [S]
+
+    if not transpose:
+        L = v.shape[1] - K + 1
+        if adc_bits is None:
+            win = jnp.stack([v_q[:, k : k + L] for k in range(K)], axis=2)
+            cols = jnp.einsum("btkc,skc->btsc", win.astype(jnp.float32), w)
+            s_scale = jnp.exp2(LOGICAL_BITS * jnp.arange(spec.n_slices, dtype=jnp.float32))
+            acc = jnp.einsum("btsc,s->btc", cols, s_scale)
+        else:
+            bp = bit_planes(v_q, fid.io_bits).astype(jnp.float32)  # [T, B, L+K-1, C]
+            bw = jnp.stack([bp[:, :, k : k + L] for k in range(K)], axis=3)
+            cols = jnp.einsum("tblkc,skc->tblsc", bw, w)
+            cols = _adc(cols, (K * pm)[:, None], adc_bits)
+            acc = jnp.einsum("tblsc,ts->blc", cols, shift_add_scales(spec, fid.io_bits))
+    else:
+        B, L, C = v.shape
+        if adc_bits is None:
+            g = jnp.einsum("btc,skc->btskc", v_q.astype(jnp.float32), w)
+            s_scale = jnp.exp2(LOGICAL_BITS * jnp.arange(spec.n_slices, dtype=jnp.float32))
+            g = jnp.einsum("btskc,s->btkc", g, s_scale)
+        else:
+            bp = bit_planes(v_q, fid.io_bits).astype(jnp.float32)  # [T, B, L, C]
+            cols = jnp.einsum("tblc,skc->tblskc", bp, w)
+            cols = _adc(cols, pm[:, None, None], adc_bits)
+            g = jnp.einsum("tblskc,ts->blkc", cols, shift_add_scales(spec, fid.io_bits))
+        acc = jnp.zeros((B, L + K - 1, C), jnp.float32)
+        for k in range(K):
+            acc = acc.at[:, k : k + L].add(g[:, :, k])
+    return acc * exp2i(-(xf + jnp.asarray(frac_bits, jnp.int32)))
+
+
+@jax.custom_vjp
+def _xbar_dwconv_fid(xp, ww):
+    y, _ = _xbar_dwconv_fid_fwd(xp, ww)
+    return y
+
+
+def _xbar_dwconv_fid_fwd(xp, ww):
+    if ww.fid.fwd:
+        y = _dwconv_fidelity_read(ww.planes, ww.frac_bits, xp, ww.fid).astype(xp.dtype)
+    else:
+        y = _dwconv_val(xp, ww.w.astype(xp.dtype))
+    return y, (xp, ww)
+
+
+def _xbar_dwconv_fid_bwd(res, dy):
+    xp, ww = res
+    if ww.fid.bwd:
+        dxp = _dwconv_fidelity_read(
+            ww.planes, ww.frac_bits, dy, ww.fid, transpose=True
+        ).astype(dy.dtype)
+    else:
+        dxp = _dwconv_dx(dy, ww.w.astype(dy.dtype))
+    ct = XbarWeight(
+        jnp.zeros_like(ww.w),
+        _dwconv_operands(xp, dy),
+        planes=_float0_zeros(ww.planes),
+        frac_bits=_float0_zeros(ww.frac_bits),
+        fid=ww.fid,
+    )
+    return dxp, ct
+
+
+_xbar_dwconv_fid.defvjp(_xbar_dwconv_fid_fwd, _xbar_dwconv_fid_bwd)
+
+
+def xbar_dwconv(xp, w, dtype=None):
+    """Depthwise causal conv where ``w [K, C]`` may be crossbar-mapped.
+
+    ``xp`` is the left-padded input ``[B, L+K-1, C]``; returns ``[B, L, C]``.
+    Plain arrays take the ordinary windowed sum with dense AD. An
+    ``XbarWeight`` takes the custom-vjp path whose weight cotangent is an
+    im2col-kind ``OperandGroup`` — the K·C conv cells deposit their
+    patch-by-cotangent outer products in the crossbar without ever forming
+    the dense ``[K, C]`` gradient (the 1705.08014 conv-on-cross-point
+    mapping). With planes + a ``FidelityConfig`` the forward read and the
+    backward ``dxp`` go through the finite-ADC im2col read."""
+    if isinstance(w, XbarWeight):
+        if dtype is not None:
+            xp = xp.astype(dtype)
+        if w.fid is not None and w.planes is not None:
+            return _xbar_dwconv_fid(xp, w)
+        return _xbar_dwconv(xp, w)
+    return _dwconv_val(xp, w.astype(dtype if dtype is not None else xp.dtype))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -25,7 +25,7 @@ from .common import LMConfig, dense_init, embed_init, rms_norm, rms_norm_init, s
 from .common import is_paged_cache as common_is_paged
 from .common import paged_gather as common_paged_gather
 from .common import xbar_linear as common_xbar_linear
-from .mlp import mlp_apply, mlp_init, moe_apply, moe_aux_loss, moe_init
+from .mlp import mlp_apply, mlp_init, moe_apply, moe_init
 
 
 class BlockDef(NamedTuple):
@@ -188,8 +188,9 @@ def _moe_init(cfg, key):
 
 def _moe_apply(cfg, p, h, ctx):
     h = att.attn_apply(cfg, p["attn"], h, ctx["positions"])
-    aux = moe_aux_loss(cfg, p["moe"], h)
-    return moe_apply(cfg, p["moe"], h), aux
+    # single router read per step: the aux loss shares moe_apply's logits
+    # (an operand-mapped router weight must not be read twice)
+    return moe_apply(cfg, p["moe"], h, with_aux=True)
 
 
 def _moe_prefill(cfg, p, h, ctx):
@@ -252,8 +253,8 @@ def _mla_moe_init(cfg, key):
 
 def _mla_moe_apply(cfg, p, h, ctx):
     h = att.mla_apply(cfg, p["attn"], h, ctx["positions"])
-    aux = moe_aux_loss(cfg, p["moe"], h)
-    return moe_apply(cfg, p["moe"], h), aux
+    # single router read per step (see _moe_apply)
+    return moe_apply(cfg, p["moe"], h, with_aux=True)
 
 
 def _mla_moe_prefill(cfg, p, h, ctx):

@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import LMConfig, dense_init, rms_norm, rms_norm_init
+from .common import LMConfig, dense_init, rms_norm, rms_norm_init, xbar_dwconv, xbar_linear
 
 
 def _dims(cfg: LMConfig):
@@ -56,17 +56,18 @@ def _causal_conv(xbc, conv_w, conv_b, prev=None):
     if prev is None:
         prev = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
     xp = jnp.concatenate([prev, xbc], axis=1)
-    out = sum(xp[:, i : i + xbc.shape[1]] * conv_w[i].astype(xbc.dtype) for i in range(K))
+    out = xbar_dwconv(xp, conv_w, xbc.dtype)
     return jax.nn.silu(out + conv_b.astype(xbc.dtype)), xp[:, -(K - 1) :]
 
 
 def _split_in(cfg, p, x):
-    z = x @ p["w_z"].astype(x.dtype)
+    z = xbar_linear(x, p["w_z"], x.dtype)
     xbc = jnp.concatenate(
-        [x @ p["w_x"].astype(x.dtype), x @ p["w_B"].astype(x.dtype), x @ p["w_C"].astype(x.dtype)],
+        [xbar_linear(x, p["w_x"], x.dtype), xbar_linear(x, p["w_B"], x.dtype),
+         xbar_linear(x, p["w_C"], x.dtype)],
         axis=-1,
     )
-    dt = x @ p["w_dt"].astype(x.dtype)
+    dt = xbar_linear(x, p["w_dt"], x.dtype)
     return z, xbc, dt
 
 
@@ -149,7 +150,7 @@ def mamba2_apply(cfg: LMConfig, p, h, with_state: bool = False, state=None):
     y = y + x.reshape(B, nq * Q, H, hd)[:, :S] * p["D"][None, None, :, None].astype(y.dtype)
     y = y.reshape(B, S, d_inner)
     y = rms_norm(p["out_ln"], y * jax.nn.silu(z), cfg.norm_eps)
-    out = h + y @ p["w_out"].astype(h.dtype)
+    out = h + xbar_linear(y, p["w_out"], h.dtype)
     if with_state:
         return out, {"ssd": final_state, "conv": conv_tail}
     return out
@@ -176,7 +177,7 @@ def mamba2_decode(cfg: LMConfig, p, h, cache, pos):
     y = y + xh * p["D"][None, :, None]
     y = y.reshape(B, 1, d_inner).astype(h.dtype)
     y = rms_norm(p["out_ln"], y * jax.nn.silu(z), cfg.norm_eps)
-    return h + y @ p["w_out"].astype(h.dtype), {"ssd": state, "conv": conv_tail}
+    return h + xbar_linear(y, p["w_out"], h.dtype), {"ssd": state, "conv": conv_tail}
 
 
 def mamba2_cache_spec(cfg: LMConfig, batch: int, max_seq: int, dtype):

@@ -4,7 +4,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import LMConfig, dense_init, rms_norm, rms_norm_init, xbar_linear
+from .common import (
+    LMConfig,
+    dense_init,
+    rms_norm,
+    rms_norm_init,
+    xbar_grouped_linear,
+    xbar_linear,
+)
 
 
 def _act(name: str):
@@ -59,7 +66,7 @@ def moe_init(cfg: LMConfig, key) -> dict:
 MOE_GROUP = 1024  # tokens per dispatch group (GShard-style)
 
 
-def moe_apply(cfg: LMConfig, p, h):
+def moe_apply(cfg: LMConfig, p, h, with_aux: bool = False):
     """Capacity-bounded dense-dispatch MoE (GShard style, EP-friendly).
 
     Tokens are split into groups of <= MOE_GROUP; capacity is enforced
@@ -68,6 +75,14 @@ def moe_apply(cfg: LMConfig, p, h):
     ~quadratic and blows HBM at 0.5M tokens/step). Experts live on the
     'model' mesh axis; the group dim shards over DP axes; SPMD lowers the
     dispatch einsums to all-to-alls.
+
+    The router and expert weights route through the ``xbar_*`` wrappers, so
+    under an operand plan the router is one crossbar read and every expert a
+    grouped crossbar tile. ``with_aux=True`` additionally returns the
+    load-balance loss computed from the SAME router logits — operand
+    cotangents don't sum across call sites, so training must not read the
+    router a second time for the aux loss (that's what the old
+    ``moe_aux_loss``-after-``moe_apply`` composition did).
     """
     m = cfg.moe
     act = _act(cfg.act)
@@ -81,7 +96,7 @@ def moe_apply(cfg: LMConfig, p, h):
     E, K = m.n_experts, m.top_k
     C = max(K, int(m.capacity_factor * sg * K / E))  # per-expert per-group capacity
 
-    logits = jnp.einsum("gsd,de->gse", xt, p["router"].astype(xt.dtype)).astype(jnp.float32)
+    logits = xbar_linear(xt, p["router"], xt.dtype).astype(jnp.float32)  # [G,S,E]
     gates = jax.nn.softmax(logits, axis=-1)
     topw, topi = jax.lax.top_k(gates, K)  # [G,S,K]
     topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)  # renormalize
@@ -105,28 +120,40 @@ def moe_apply(cfg: LMConfig, p, h):
         comb = comb + dk * topw[..., k, None, None].astype(xt.dtype)
 
     xe = jnp.einsum("gsec,gsd->egcd", disp, xt).reshape(E, G * C, d)
-    ye = act(jnp.einsum("ecd,edf->ecf", xe, p["experts_gate"].astype(xt.dtype)))
-    ye = ye * jnp.einsum("ecd,edf->ecf", xe, p["experts_up"].astype(xt.dtype))
-    ye = jnp.einsum("ecf,efd->ecd", ye, p["experts_down"].astype(xt.dtype))  # [E,G*C,d]
+    ye = act(xbar_grouped_linear(xe, p["experts_gate"], xt.dtype))
+    ye = ye * xbar_grouped_linear(xe, p["experts_up"], xt.dtype)
+    ye = xbar_grouped_linear(ye, p["experts_down"], xt.dtype)  # [E,G*C,d]
     yt = jnp.einsum("gsec,egcd->gsd", comb, ye.reshape(E, G, C, d))
 
     if m.n_shared > 0:
-        # shared experts run densely on every token (DeepSeek-style)
+        # shared experts run densely on every token (DeepSeek-style); the
+        # weights stay dense-grad (multi-invocation across MoE layers)
         sh = p["shared"]
         ys = act(jnp.einsum("gsd,df->gsf", xt, sh["wi_gate"].astype(xt.dtype)))
         ys = ys * jnp.einsum("gsd,df->gsf", xt, sh["wi_up"].astype(xt.dtype))
         yt = yt + jnp.einsum("gsf,fd->gsd", ys, sh["wo"].astype(xt.dtype))
 
-    return h + yt.reshape(B, S, d)
+    out = h + yt.reshape(B, S, d)
+    if with_aux:
+        return out, _aux_from_logits(m, logits)
+    return out
 
 
-def moe_aux_loss(cfg: LMConfig, p, h) -> jax.Array:
-    """Load-balance auxiliary loss (Switch): E * sum(frac_tokens * frac_prob)."""
-    m = cfg.moe
-    x = rms_norm(p["ln"], h, cfg.norm_eps).reshape(-1, h.shape[-1])
-    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)
-    gates = jax.nn.softmax(logits, axis=-1)
+def _aux_from_logits(m, logits) -> jax.Array:
+    """Load-balance auxiliary loss (Switch): E * sum(frac_tokens * frac_prob),
+    from already-computed router logits ([..., E], any leading dims)."""
+    gates = jax.nn.softmax(logits.reshape(-1, logits.shape[-1]).astype(jnp.float32), axis=-1)
     topi = jnp.argmax(gates, axis=-1)
     frac_tokens = jnp.mean(jax.nn.one_hot(topi, m.n_experts, dtype=jnp.float32), axis=0)
     frac_prob = jnp.mean(gates, axis=0)
     return m.n_experts * jnp.sum(frac_tokens * frac_prob)
+
+
+def moe_aux_loss(cfg: LMConfig, p, h) -> jax.Array:
+    """Standalone load-balance loss (recomputes the router read). Training
+    uses ``moe_apply(..., with_aux=True)`` instead: an operand-mapped router
+    weight must be read exactly once per step (operand cotangents don't sum
+    across call sites)."""
+    x = rms_norm(p["ln"], h, cfg.norm_eps).reshape(-1, h.shape[-1])
+    logits = xbar_linear(x, p["router"], x.dtype)
+    return _aux_from_logits(cfg.moe, logits)

@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import LMConfig, dense_init, rms_norm, rms_norm_init
+from .common import LMConfig, dense_init, rms_norm, rms_norm_init, xbar_dwconv, xbar_linear
 
 
 def _dims(cfg: LMConfig):
@@ -51,12 +51,12 @@ def _mlstm_qkv(cfg, p, xu):
     K = p["conv_w"].shape[0]
     pad = jnp.zeros((B, K - 1, d_up), xu.dtype)
     xp = jnp.concatenate([pad, xu], axis=1)
-    conv = sum(xp[:, i : i + S] * p["conv_w"][i].astype(xu.dtype) for i in range(K))
+    conv = xbar_dwconv(xp, p["conv_w"], xu.dtype)
     conv = jax.nn.silu(conv + p["conv_b"].astype(xu.dtype))
-    q = (conv @ p["wq"].astype(xu.dtype)).reshape(B, S, H, hd)
-    k = (conv @ p["wk"].astype(xu.dtype)).reshape(B, S, H, hd) / jnp.sqrt(jnp.asarray(hd, xu.dtype))
-    v = (xu @ p["wv"].astype(xu.dtype)).reshape(B, S, H, hd)
-    gif = (xu @ p["w_if"].astype(xu.dtype)).astype(jnp.float32) + p["if_bias"]
+    q = xbar_linear(conv, p["wq"], xu.dtype).reshape(B, S, H, hd)
+    k = xbar_linear(conv, p["wk"], xu.dtype).reshape(B, S, H, hd) / jnp.sqrt(jnp.asarray(hd, xu.dtype))
+    v = xbar_linear(xu, p["wv"], xu.dtype).reshape(B, S, H, hd)
+    gif = xbar_linear(xu, p["w_if"], xu.dtype).astype(jnp.float32) + p["if_bias"]
     i_pre, f_pre = jnp.split(gif, 2, axis=-1)  # [B,S,H]
     return q, k, v, i_pre, f_pre
 
@@ -73,8 +73,8 @@ def mlstm_apply(cfg: LMConfig, p, h, with_state: bool = False):
     B, S, d = h.shape
     d_up, H, hd = _dims(cfg)
     x = rms_norm(p["ln"], h, cfg.norm_eps)
-    xu = x @ p["w_up"].astype(h.dtype)
-    gate = jax.nn.silu(x @ p["w_gate"].astype(h.dtype))
+    xu = xbar_linear(x, p["w_up"], h.dtype)
+    gate = jax.nn.silu(xbar_linear(x, p["w_gate"], h.dtype))
     q, k, v, i_pre, f_pre = _mlstm_qkv(cfg, p, xu)
 
     Q = min(MLSTM_CHUNK, S)
@@ -133,7 +133,7 @@ def mlstm_apply(cfg: LMConfig, p, h, with_state: bool = False):
     y = ys.swapaxes(0, 1).reshape(B, S, d_up).astype(h.dtype)
 
     y = rms_norm(p["out_ln"], y, cfg.norm_eps) * gate
-    out = h + y @ p["w_down"].astype(h.dtype)
+    out = h + xbar_linear(y, p["w_down"], h.dtype)
     if not with_state:
         return out
     K = p["conv_w"].shape[0]
@@ -146,16 +146,16 @@ def mlstm_decode(cfg: LMConfig, p, h, cache, pos):
     B = h.shape[0]
     d_up, H, hd = _dims(cfg)
     x = rms_norm(p["ln"], h, cfg.norm_eps)
-    xu = x @ p["w_up"].astype(h.dtype)  # [B,1,d_up]
-    gate = jax.nn.silu(x @ p["w_gate"].astype(h.dtype))
+    xu = xbar_linear(x, p["w_up"], h.dtype)  # [B,1,d_up]
+    gate = jax.nn.silu(xbar_linear(x, p["w_gate"], h.dtype))
 
     K = p["conv_w"].shape[0]
     xp = jnp.concatenate([cache["conv"].astype(xu.dtype), xu], axis=1)  # [B,K,d_up]
-    conv = jax.nn.silu((xp * p["conv_w"].astype(xu.dtype)).sum(1, keepdims=True) + p["conv_b"].astype(xu.dtype))
-    q = (conv @ p["wq"].astype(xu.dtype)).reshape(B, H, hd).astype(jnp.float32)
-    k = ((conv @ p["wk"].astype(xu.dtype)).reshape(B, H, hd) / jnp.sqrt(jnp.asarray(hd, xu.dtype))).astype(jnp.float32)
-    v = (xu @ p["wv"].astype(xu.dtype)).reshape(B, H, hd).astype(jnp.float32)
-    gif = (xu @ p["w_if"].astype(xu.dtype)).astype(jnp.float32)[:, 0] + p["if_bias"]
+    conv = jax.nn.silu(xbar_dwconv(xp, p["conv_w"], xu.dtype) + p["conv_b"].astype(xu.dtype))
+    q = xbar_linear(conv, p["wq"], xu.dtype).reshape(B, H, hd).astype(jnp.float32)
+    k = (xbar_linear(conv, p["wk"], xu.dtype).reshape(B, H, hd) / jnp.sqrt(jnp.asarray(hd, xu.dtype))).astype(jnp.float32)
+    v = xbar_linear(xu, p["wv"], xu.dtype).reshape(B, H, hd).astype(jnp.float32)
+    gif = xbar_linear(xu, p["w_if"], xu.dtype).astype(jnp.float32)[:, 0] + p["if_bias"]
     i_pre, f_pre = jnp.split(gif, 2, axis=-1)  # [B,H]
 
     logf = jax.nn.log_sigmoid(f_pre)
@@ -167,7 +167,7 @@ def mlstm_decode(cfg: LMConfig, p, h, cache, pos):
     denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), jnp.exp(-m_new))
     y = (jnp.einsum("bhde,bhd->bhe", C, q) / denom[..., None]).reshape(B, 1, d_up).astype(h.dtype)
     y = rms_norm(p["out_ln"], y, cfg.norm_eps) * gate
-    out = h + y @ p["w_down"].astype(h.dtype)
+    out = h + xbar_linear(y, p["w_down"], h.dtype)
     return out, {"C": C, "n": n, "m": m_new, "conv": xp[:, -(K - 1) :].astype(jnp.float32)}
 
 
@@ -230,7 +230,7 @@ def slstm_apply(cfg: LMConfig, p, hseq, with_state: bool = False):
     H = cfg.xlstm.n_heads
     hd = d // H
     x = rms_norm(p["ln"], hseq, cfg.norm_eps)
-    xg_all = (x @ p["w_x"].astype(hseq.dtype)).astype(jnp.float32) + p["bias"]
+    xg_all = xbar_linear(x, p["w_x"], hseq.dtype).astype(jnp.float32) + p["bias"]
 
     state0 = {
         "h": jnp.zeros((B, H, hd), jnp.float32),
@@ -246,9 +246,11 @@ def slstm_apply(cfg: LMConfig, p, hseq, with_state: bool = False):
     final, hs = jax.lax.scan(step, state0, xg_all.swapaxes(0, 1))
     y = hs.swapaxes(0, 1).reshape(B, S, d).astype(hseq.dtype)
     out = hseq + y
-    # post-FFN (xLSTM sLSTM block)
+    # post-FFN (xLSTM sLSTM block); the per-step recurrent ``r`` stays on the
+    # dense-grad path (used once per token inside the cell scan — its
+    # cotangent sums across steps, which the operand form cannot express)
     xf = rms_norm(p["ffn_ln"], out, cfg.norm_eps)
-    out = out + jax.nn.gelu(xf @ p["ffn_up"].astype(out.dtype)) @ p["ffn_down"].astype(out.dtype)
+    out = out + xbar_linear(jax.nn.gelu(xbar_linear(xf, p["ffn_up"], out.dtype)), p["ffn_down"], out.dtype)
     if with_state:
         return out, final
     return out
@@ -257,13 +259,13 @@ def slstm_apply(cfg: LMConfig, p, hseq, with_state: bool = False):
 def slstm_decode(cfg: LMConfig, p, h, cache, pos):
     B = h.shape[0]
     x = rms_norm(p["ln"], h, cfg.norm_eps)
-    xg = ((x @ p["w_x"].astype(h.dtype)).astype(jnp.float32) + p["bias"])[:, 0]
+    xg = (xbar_linear(x, p["w_x"], h.dtype).astype(jnp.float32) + p["bias"])[:, 0]
     st = _slstm_cell(cfg, p, xg, cache)
     d = cfg.d_model
     y = st["h"].reshape(B, 1, d).astype(h.dtype)
     out = h + y
     xf = rms_norm(p["ffn_ln"], out, cfg.norm_eps)
-    out = out + jax.nn.gelu(xf @ p["ffn_up"].astype(out.dtype)) @ p["ffn_down"].astype(out.dtype)
+    out = out + xbar_linear(jax.nn.gelu(xbar_linear(xf, p["ffn_up"], out.dtype)), p["ffn_down"], out.dtype)
     return out, st
 
 

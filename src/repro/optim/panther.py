@@ -1,23 +1,49 @@
 """PANTHER sliced-SGD: the paper's technique as a first-class JAX optimizer.
 
-Every matrix-shaped parameter ("crossbar-mapped", ndim >= 2) lives as int8
-digit planes ``[S, *shape]`` plus a per-tensor fixed-point scale. The update
-is the paper's OPA: quantize ``-lr * grad`` onto the weight grid (stochastic
-rounding) and deposit it into the planes with per-plane saturating carry
-accumulation. A Carry Resolution Step re-canonicalizes every ``crs_every``
-steps (paper default 1024). Vector parameters (norm scales, biases, SSM
-``A_log``/dt, conv1d taps) take the paper's digital-VFU path: plain float
-SGD.
+Every crossbar-mapped parameter lives as int8 digit planes ``[S, *shape]``
+plus a per-tensor fixed-point scale. The update is the paper's OPA: quantize
+``-lr * grad`` onto the weight grid (stochastic rounding) and deposit it
+into the planes with per-plane saturating carry accumulation. A Carry
+Resolution Step re-canonicalizes every ``crs_every`` steps (paper default
+1024). Vector parameters (norm scales, biases, SSM ``A_log``/dt) take the
+paper's digital-VFU path: plain float SGD.
+
+Gradients arrive in one of two forms per leaf. *Dense* leaves carry the
+materialized ``[M, N]`` gradient (quantize + ``opa_deposit``). *Operand*
+leaves carry an :class:`~repro.models.common.OperandGroup` — the activation
+/ cotangent factor pair of the outer product — and go through
+``opa_fused_update``: the dense gradient never exists in HBM, exactly the
+paper's in-crossbar OPA. The operand contract is no longer matmul-only;
+``OperandGroup.kind`` selects the layout:
+
+``"matmul"``
+    ``x [*stack, T, M]``, ``dh [*stack, T, N]`` — linear layers, and MoE
+    expert banks whose expert axis rides the leading stack (the grouped
+    einsum's per-expert token buffers are the operands).
+``"im2col"``
+    ``x [*stack, C, T, K]``, ``dh [*stack, C, T, 1]`` — depthwise-conv taps
+    stored as ``[K, C]`` tiles. The deposit runs on a channel-as-stack
+    transposed view of the planes (``[S, ..., C, K, 1]``), an elementwise
+    bijection, then transposes back; CRS always applies on the stored
+    ``[S, ..., K, C]`` layout.
+
+:func:`operandize` manufactures the zero-slot cotangent structure the
+model's custom-vjp sites thread real operands through — per leaf, shaped by
+the plan's ``group`` kind (``expert_tokens`` supplies the MoE capacity
+token count, which differs from the flattened batch token count).
 
 MCU variants (paper §4): V1/V2/V3 have identical *step-level* numerics (the
 ISA simulator models their scheduling/energy differences); the trainer
 records the variant for the benchmark layer.
 
 Which leaves live as planes — and at which per-leaf slice spec, gradient
-path, and ADC configuration — is decided by a resolved ``repro.plan`` tree
-(pass ``plan=`` to ``init``/``update``/``operandize``/...); with no plan the
-behavior-preserving ``repro.plan.default_rules(cfg)`` applies (matrix dims
-[-2:] >= ``min_dim``, float dtype, single-use matmul weights flow operands).
+path, operand group kind, and ADC configuration — is decided by a resolved
+``repro.plan`` tree (pass ``plan=`` to ``init``/``update``/``operandize``/
+...); with no plan the behavior-preserving ``repro.plan.default_rules(cfg)``
+applies (matrix dims [-2:] >= ``min_dim``, float dtype, single-use matmul
+weights flow operands). ``repro.plan.coverage_rules`` extends the mapping to
+conv/einsum/MoE weights; ``benchmarks/coverage_report.py`` accounts for the
+analog-FLOPs fraction each plan achieves.
 """
 from __future__ import annotations
 
@@ -138,6 +164,22 @@ def _grad_leaf(x) -> bool:
     return is_outer_product_grad(x)
 
 
+def _opa_operand_update(planes, g, lr, frac_bits, spec, **kwargs):
+    """``opa_fused_update`` for any operand kind. An ``"im2col"`` operand
+    carries the channel axis in its stack with per-channel ``[K, 1]`` outer
+    products, while the leaf's planes are stored ``[S, ..., K, C]`` — so the
+    deposit runs on the transposed channel-as-stack view ``[S, ..., C, K,
+    1]`` and transposes back. The reshuffle is an elementwise bijection:
+    deposit numerics are unchanged, and the caller applies CRS on the
+    original stored layout."""
+    if getattr(g, "kind", "matmul") != "im2col":
+        return opa_fused_update(planes, g.x, g.dh, lr, frac_bits, spec, **kwargs)
+    lead = planes.ndim - 3  # [S, *lead, K, C]
+    p2 = jnp.moveaxis(planes, -1, 1 + lead)[..., None]
+    p2 = opa_fused_update(p2, g.x, g.dh, lr, frac_bits, spec, **kwargs)
+    return jnp.moveaxis(p2[..., 0], 1 + lead, -1)
+
+
 def _fid_leaves(s: SlicedTensor, stack: tuple):
     """Planes/frac_bits of one leaf, re-laid-out for the layer scan: the S
     slice dim moves behind the ``stack`` dims (lax.scan slices the leading
@@ -148,22 +190,45 @@ def _fid_leaves(s: SlicedTensor, stack: tuple):
     return planes, frac
 
 
-def operandize(params, sliced, tokens: int, act_dtype, fid=None, plan=None):
+def _operand_slots(p, group: str | None, tokens: int, expert_tokens: int | None, act_dtype):
+    """Zero cotangent slots matching what the model's xbar site will emit for
+    this leaf — the custom-vjp aval contract is exact, so each group kind
+    gets its own layout (see the module docstring for the shapes)."""
+    stack = p.shape[:-2]
+    if group == "im2col":
+        # p [*lead, K, C]: per-channel [K, 1] outer products over the window
+        xz = jnp.zeros((*stack, p.shape[-1], tokens, p.shape[-2]), act_dtype)
+        dhz = jnp.zeros((*stack, p.shape[-1], tokens, 1), act_dtype)
+        return OuterProductGrad(xz, dhz, kind="im2col")
+    t = expert_tokens if (group == "expert" and expert_tokens is not None) else tokens
+    xz = jnp.zeros((*stack, t, p.shape[-2]), act_dtype)
+    dhz = jnp.zeros((*stack, t, p.shape[-1]), act_dtype)
+    return OuterProductGrad(xz, dhz)
+
+
+def operandize(params, sliced, tokens: int, act_dtype, fid=None, plan=None,
+               expert_tokens: int | None = None):
     """Wrap operand-eligible crossbar leaves of a materialized param tree in
     ``XbarWeight`` so the model's backward returns ``OuterProductGrad``
     weight cotangents instead of dense ``[M, N]`` matrices.
 
     ``tokens`` is the flattened token count per differentiated forward (one
     microbatch: ``B * S``); the zero slots give the custom-vjp backward a
-    matching cotangent structure to thread the real operands through.
+    matching cotangent structure to thread the real operands through. The
+    slot layout follows the plan leaf's ``group`` kind: matmul leaves stash
+    ``[T, M]``/``[T, N]`` factors, ``"im2col"`` conv taps stash windowed
+    patch operands, and ``"expert"`` MoE banks stash per-expert capacity
+    buffers of ``expert_tokens`` tokens (the MoE dispatch capacity
+    ``G * C``, which the train step computes from its MoE config — required
+    because the custom-vjp cotangent aval must match exactly).
     Eligibility: the leaf has optimizer planes (``sliced`` non-None) and
     either its resolved ``plan`` leaf says ``grad="operand"`` or — with no
     plan — its path passes the default operand rule
     (``repro.plan.operand_eligible_path``: single-use matmul weights only).
 
     With ``fid`` (a ``FidelityConfig``, or per-leaf ``plan.fidelity``), each
-    wrap additionally carries the leaf's digit planes + frac_bits so
-    ``xbar_linear`` reads them through the finite-ADC engine — forward MVM,
+    wrap additionally carries the leaf's digit planes + frac_bits so the
+    ``xbar_*`` sites read them through the finite-ADC engine — forward MVM,
     backward MᵀVM ``dx`` — while the weight cotangent stays in operand form
     for the fused OPA deposit: the model trains against the same crossbar
     state the optimizer writes.
@@ -178,17 +243,16 @@ def operandize(params, sliced, tokens: int, act_dtype, fid=None, plan=None):
             if pl.grad != "operand":
                 return p
             leaf_fid = pl.fidelity
+            group = pl.group
         else:
             if not operand_eligible_path(_leaf_path_str(path)):
                 return p
             leaf_fid = fid
-        stack = p.shape[:-2]
-        xz = jnp.zeros((*stack, tokens, p.shape[-2]), act_dtype)
-        dhz = jnp.zeros((*stack, tokens, p.shape[-1]), act_dtype)
-        g = OuterProductGrad(xz, dhz)
+            group = None
+        g = _operand_slots(p, group, tokens, expert_tokens, act_dtype)
         if leaf_fid is None:
             return XbarWeight(p, g)
-        planes, frac = _fid_leaves(s, stack)
+        planes, frac = _fid_leaves(s, p.shape[:-2])
         return XbarWeight(p, g, planes=planes, frac_bits=frac, fid=leaf_fid)
 
     if plan is None:
@@ -343,8 +407,8 @@ def update(
         dev = _leaf_device(pl)
         if is_outer_product_grad(g_eff):
             # operand path: X^T@dH -> quantize -> deposit in one fused pass
-            planes = opa_fused_update(
-                s.planes, g_eff.x, g_eff.dh, lr, s.frac_bits, spec,
+            planes = _opa_operand_update(
+                s.planes, g_eff, lr, s.frac_bits, spec,
                 stochastic=cfg.stochastic_round, key=key, rng_mode=cfg.rng_mode,
                 use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
                 device=dev,
@@ -468,8 +532,8 @@ def update_split(grads, digital, sliced, step, lr, cfg: PantherConfig = PantherC
         key = jax.random.fold_in(base_key, i)
         dev = _leaf_device(pl)
         if is_outer_product_grad(g):
-            planes = opa_fused_update(
-                s.planes, g.x, g.dh, lr, s.frac_bits, spec,
+            planes = _opa_operand_update(
+                s.planes, g, lr, s.frac_bits, spec,
                 stochastic=cfg.stochastic_round, key=key, rng_mode=cfg.rng_mode,
                 use_kernel=cfg.opa_use_kernel, interpret=cfg.opa_interpret,
                 device=dev,

@@ -21,9 +21,15 @@ Core objects
     (``"operand"`` = outer-product operands through the fused OPA kernel,
     ``"dense"`` = materialized gradient + quantize/deposit), ``fidelity``
     (a :class:`~repro.models.common.FidelityConfig` for finite-ADC
-    crossbar-in-the-loop reads, or ``None`` for the lossless fast path), and
+    crossbar-in-the-loop reads, or ``None`` for the lossless fast path),
     ``shard`` (a trailing-dims sharding hint overriding the name rules in
-    ``distributed.sharding``).
+    ``distributed.sharding``), ``group`` (the operand *kind* the leaf's
+    gradient arrives as: ``None`` for plain matmul cotangents, ``"im2col"``
+    for depthwise-conv taps carried as windowed patch operands, ``"expert"``
+    for MoE banks whose expert axis rides the operand stack), and
+    ``expert_groups`` (``((count, FidelityConfig|None), ...)`` segments
+    giving contiguous expert ranges their own read fidelity — per-expert ADC
+    by popularity; folded into ``fidelity.expert_groups`` at resolution).
 
 :class:`PlanRule`
     ``pattern`` is a glob over the '/'-joined leaf path (``fnmatch``
@@ -40,6 +46,14 @@ Core objects
     across all ten ``configs/``): matrix-shaped float leaves map to planes
     at the optimizer spec, single-use matmul weights under ``attn``/``mlp``
     flow operand gradients, everything else is dense/digital.
+
+:func:`coverage_rules`
+    The generalized-operand layering on top of :func:`default_rules`:
+    Mamba2/xLSTM projections flow matmul operands, depthwise conv taps map
+    as ``group="im2col"`` [K, C] tiles, MoE routers read once per step and
+    expert banks map as ``group="expert"`` grouped tiles. What stays dense
+    (shared subtrees, embeddings/tied heads, recurrent cells) is accounted
+    per config by ``benchmarks/coverage_report.py``.
 
 :func:`resolve_plan`
     ``(params, rules, tokens=None) -> pytree of LeafPlan`` mirroring the
@@ -74,16 +88,22 @@ plan=plan)``), and checkpointing (``save_checkpoint(..., plan=plan)``
 persists the layout so a mismatched restore fails loudly instead of
 corrupting planes). ``benchmarks/fig10_hetero.py`` runs this end to end.
 
-Resolution normalizes two things: a leaf whose ``grad`` is not ``"operand"``
-drops its ``fidelity`` (the finite-ADC engine rides the ``xbar_linear``
-custom-vjp sites, which are exactly the operand sites), and an attached
-``FidelityConfig`` has its ``spec`` synced to the leaf's plan spec (the
-engine must read the planes the optimizer writes).
+Resolution normalizes a few things: a leaf whose ``grad`` is not
+``"operand"`` drops its ``fidelity`` (the finite-ADC engine rides the
+``xbar_*`` custom-vjp sites, which are exactly the operand sites) along with
+any ``group``/``expert_groups``; an attached ``FidelityConfig`` has its
+``spec`` — and every expert-group segment's spec — synced to the leaf's
+plan spec (the engine must read the planes the optimizer writes); leaf-level
+``expert_groups`` fold into ``fidelity.expert_groups``; and a rule that
+puts ``grad="operand"`` on a leaf the operand pipeline structurally cannot
+serve (``shared`` subtrees, ``embed``, sLSTM ``r``) demotes to dense with a
+one-time warning naming the leaf instead of silently mis-resolving.
 """
 from __future__ import annotations
 
 import dataclasses
 import fnmatch
+import warnings
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -118,6 +138,9 @@ class LeafInfo(NamedTuple):
     tokens: int | None  # flattened tokens per differentiated forward, if known
 
 
+GROUP_KINDS = (None, "im2col", "expert")
+
+
 @dataclasses.dataclass(frozen=True)
 class LeafPlan:
     """How one parameter leaf maps to hardware. See module docstring."""
@@ -127,12 +150,21 @@ class LeafPlan:
     grad: str = "dense"  # "operand" | "dense"
     fidelity: FidelityConfig | None = None
     shard: tuple | None = None  # trailing-dims sharding hint (None = name rules)
+    group: str | None = None  # operand group kind: None (matmul) | "im2col" | "expert"
+    expert_groups: tuple | None = None  # ((count, FidelityConfig|None), ...) per-expert fids
 
     def __post_init__(self):
         if self.grad not in ("operand", "dense"):
             raise ValueError(f"LeafPlan.grad must be 'operand' or 'dense', got {self.grad!r}")
+        if self.group not in GROUP_KINDS:
+            raise ValueError(f"LeafPlan.group must be one of {GROUP_KINDS}, got {self.group!r}")
         if self.shard is not None:
             object.__setattr__(self, "shard", _tuplify(self.shard))
+        if self.expert_groups is not None:
+            object.__setattr__(
+                self, "expert_groups",
+                tuple((int(n), g) for n, g in self.expert_groups),
+            )
 
     @property
     def category(self) -> str:
@@ -142,7 +174,7 @@ class LeafPlan:
         return "operand" if self.grad == "operand" else "dense"
 
 
-_OVERRIDE_FIELDS = ("mapped", "spec", "grad", "fidelity", "shard")
+_OVERRIDE_FIELDS = ("mapped", "spec", "grad", "fidelity", "shard", "group", "expert_groups")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,6 +188,8 @@ class PlanRule:
     grad: Any = UNSET
     fidelity: Any = UNSET
     shard: Any = UNSET
+    group: Any = UNSET
+    expert_groups: Any = UNSET
 
     def matches(self, info: LeafInfo) -> bool:
         if not fnmatch.fnmatchcase(info.path, self.pattern):
@@ -256,25 +290,146 @@ def default_rules(cfg=None, fidelity: FidelityConfig | None = None,
     return tuple(rules)
 
 
+# Single-use matmul projections the generalized operand API serves beyond the
+# historical attn/mlp set: Mamba2's five input heads + out-proj (zamba2 puts
+# them both at groups/<i>/mamba/* and directly at groups/<i>/*), xLSTM's
+# mLSTM projections and sLSTM input/FFN matmuls. All flow matmul-kind
+# operands through the same xbar_linear sites as attention weights.
+_STRUCTURED_MATMUL_KEYS = (
+    "w_z", "w_x", "w_B", "w_C", "w_dt", "w_out",  # mamba2
+    "wq", "wk", "wv", "w_if", "w_up", "w_gate", "w_down",  # xlstm mlstm
+    "ffn_up", "ffn_down",  # xlstm slstm FFN
+)
+
+
+def coverage_rules(cfg=None, fidelity: FidelityConfig | None = None) -> tuple:
+    """:func:`default_rules` plus the generalized-operand extensions: every
+    structurally-eligible matmul weight flows operand gradients, depthwise
+    conv taps map as ``group="im2col"`` crossbar tiles ([K, C] — explicitly,
+    since K=4 fails the ``min_dim`` heuristic), and MoE router/expert banks
+    map with experts as ``group="expert"`` grouped tiles. ``shared``
+    subtrees, the embedding/tied head, and sLSTM's recurrent ``r`` stay off
+    the operand path (multi-use / gather / sequential — see
+    ``benchmarks/coverage_report.py`` for the accounting). Layered strictly
+    after :func:`default_rules`, which stays behavior-identical on its own.
+    """
+    spec = getattr(cfg, "spec", DEFAULT_SPEC)
+    min_ndim = getattr(cfg, "min_ndim", 2)
+    min_dim = getattr(cfg, "min_dim", 8)
+
+    def eligible(i: LeafInfo) -> bool:
+        return (
+            crossbar_eligible(i.shape, i.dtype, min_ndim, min_dim)
+            and "shared" not in i.path.split("/")
+        )
+
+    def conv_eligible(i: LeafInfo) -> bool:
+        # conv_w is [..., K, C]: the crossbar tile is [K, C]; only the
+        # channel count must clear the minimum-dim bar (K is the tap count)
+        import jax.numpy as jnp
+
+        return (
+            len(i.shape) >= 2
+            and i.shape[-1] >= min_dim
+            and i.dtype in (jnp.float32, jnp.bfloat16, jnp.float16)
+            and "shared" not in i.path.split("/")
+        )
+
+    rules = list(default_rules(cfg, fidelity=fidelity))
+    for key in _STRUCTURED_MATMUL_KEYS:
+        rules.append(PlanRule(f"*/{key}", where=eligible, grad="operand"))
+    # router: exactly one crossbar read per step (moe_apply(with_aux=True)
+    # derives the load-balance loss from the same logits)
+    rules.append(PlanRule("*/router", where=eligible, grad="operand"))
+    rules.append(
+        PlanRule("*/conv_w", where=conv_eligible, mapped=True, spec=spec,
+                 grad="operand", group="im2col")
+    )
+    for key in ("experts_gate", "experts_up", "experts_down"):
+        rules.append(PlanRule(f"*/{key}", where=eligible, grad="operand", group="expert"))
+    return tuple(rules)
+
+
 # ------------------------------- resolution ---------------------------------
 
 
-def _normalize(plan: LeafPlan) -> LeafPlan:
-    # the finite-ADC engine rides the operand (xbar_linear) sites only; a
+# Leaf keys the operand pipeline can never serve, no matter what a rule says:
+# the embedding table is consumed by gather (and usually doubles as the tied
+# output head — two call sites), and sLSTM's recurrent ``r`` is applied once
+# per token inside the cell scan (its cotangent sums across steps). ``shared``
+# subtrees (zamba shared transformer, MoE shared experts) are multi-invocation
+# for the same reason. Resolution demotes such leaves to dense-gradient with a
+# one-time warning instead of silently handing the optimizer an operand leaf
+# whose cotangent the model can never produce.
+_UNMAPPABLE_OPERAND_KEYS = frozenset({"r", "embed"})
+_warned_unmappable: set[str] = set()
+
+
+def _operand_unmappable(path: str) -> str | None:
+    parts = path.split("/")
+    if "shared" in parts:
+        return "lives under a 'shared' subtree (applied more than once per step)"
+    if parts[-1] in _UNMAPPABLE_OPERAND_KEYS:
+        return "is consumed by gather/recurrent ops, not a single xbar matmul site"
+    return None
+
+
+def _sync_fid_spec(fid: FidelityConfig, spec: SliceSpec) -> FidelityConfig:
+    """Return ``fid`` with its spec — and every expert-group segment's spec —
+    equal to the leaf's plane layout (the engine must read the planes the
+    optimizer writes)."""
+    changed = fid.spec != spec
+    groups = fid.expert_groups
+    if groups is not None:
+        synced = tuple(
+            (n, g if g is None or g.spec == spec else dataclasses.replace(g, spec=spec))
+            for n, g in groups
+        )
+        if synced != groups:
+            changed, groups = True, synced
+    if not changed:
+        return fid
+    return dataclasses.replace(fid, spec=spec, expert_groups=groups)
+
+
+def _normalize(plan: LeafPlan, path: str = "") -> LeafPlan:
+    # the finite-ADC engine rides the operand (xbar_*) sites only; a
     # read-only fidelity config on any other leaf is inert — drop it so plans
     # compare cleanly. A DeviceModel, though, applies at EVERY mapped leaf's
     # deposit (dense-gradient leaves write through opa_device_update), so a
     # device-bearing fidelity survives on mapped non-operand leaves with its
     # read-side ADC fields intact-but-inert. An attached fid's spec must
     # equal the leaf's plane layout.
+    if plan.grad == "operand" and path:
+        reason = _operand_unmappable(path)
+        if reason is not None:
+            if path not in _warned_unmappable:
+                _warned_unmappable.add(path)
+                warnings.warn(
+                    f"plan: leaf {path!r} {reason}; the operand gradient path "
+                    "cannot serve it — demoting to grad='dense'. Narrow the "
+                    "rule pattern to silence this.",
+                    UserWarning,
+                    stacklevel=3,
+                )
+            plan = dataclasses.replace(plan, grad="dense", group=None, expert_groups=None)
+    if plan.grad != "operand" and (plan.group is not None or plan.expert_groups is not None):
+        # group kind / per-expert fids only describe the operand pipeline
+        plan = dataclasses.replace(plan, group=None, expert_groups=None)
+    if plan.expert_groups is not None:
+        # fold the leaf-level expert-group declaration into the fidelity the
+        # engine actually consumes (FidelityConfig.expert_groups)
+        base = plan.fidelity if plan.fidelity is not None else FidelityConfig(spec=plan.spec)
+        plan = dataclasses.replace(
+            plan, fidelity=dataclasses.replace(base, expert_groups=plan.expert_groups)
+        )
     if plan.fidelity is not None:
         if not plan.mapped or (plan.grad != "operand"
                                and plan.fidelity.device is None):
             return dataclasses.replace(plan, fidelity=None)
-        if plan.fidelity.spec != plan.spec:
-            return dataclasses.replace(
-                plan, fidelity=dataclasses.replace(plan.fidelity, spec=plan.spec)
-            )
+        synced = _sync_fid_spec(plan.fidelity, plan.spec)
+        if synced is not plan.fidelity:
+            return dataclasses.replace(plan, fidelity=synced)
     return plan
 
 
@@ -283,7 +438,7 @@ def resolve_leaf(path: str, shape, dtype, rules, tokens: int | None = None) -> L
     plan = LeafPlan()
     for r in rules:
         plan = r.apply(plan, info)
-    return _normalize(plan)
+    return _normalize(plan, path)
 
 
 def resolve_plan(params, rules, tokens: int | None = None):
@@ -396,9 +551,26 @@ def _tuplify(x):
     return tuple(_tuplify(e) for e in x) if isinstance(x, (list, tuple)) else x
 
 
+def _expert_groups_to_list(groups) -> list | None:
+    if groups is None:
+        return None
+    return [[int(n), None if g is None else _fidelity_to_dict(g)] for n, g in groups]
+
+
+def _expert_groups_from_list(raw) -> tuple | None:
+    if raw is None:
+        return None
+    return tuple(
+        (int(n), None if g is None else _fidelity_from_dict(g)) for n, g in raw
+    )
+
+
 def _fidelity_to_dict(fid: FidelityConfig) -> dict:
     d = dataclasses.asdict(fid)
     d["spec"] = fid.spec.name()
+    # asdict recursed into nested segment FidelityConfigs with raw specs —
+    # re-serialize them through the same converter
+    d["expert_groups"] = _expert_groups_to_list(fid.expert_groups)
     return d
 
 
@@ -408,6 +580,8 @@ def _fidelity_from_dict(d: dict) -> FidelityConfig:
     # dataclasses.asdict nests DeviceModel as a plain dict — rebuild it
     if d.get("device") is not None:
         d["device"] = DeviceModel(**d["device"])
+    if d.get("expert_groups") is not None:
+        d["expert_groups"] = _expert_groups_from_list(d["expert_groups"])
     return FidelityConfig(**d)
 
 
@@ -422,6 +596,8 @@ def leaf_plan_to_dict(pl: LeafPlan) -> dict:
         "shard": None if pl.shard is None else list(
             list(s) if isinstance(s, tuple) else s for s in pl.shard
         ),
+        "group": pl.group,
+        "expert_groups": _expert_groups_to_list(pl.expert_groups),
     }
 
 
@@ -432,6 +608,8 @@ def leaf_plan_from_dict(d: dict) -> LeafPlan:
         grad=d["grad"],
         fidelity=None if d.get("fidelity") is None else _fidelity_from_dict(d["fidelity"]),
         shard=None if d.get("shard") is None else _tuplify(d["shard"]),
+        group=d.get("group"),
+        expert_groups=_expert_groups_from_list(d.get("expert_groups")),
     )
 
 
@@ -513,6 +691,7 @@ __all__ = [
     "PlanRule",
     "attach_fidelity_shard_dims",
     "check_plan_compat",
+    "coverage_rules",
     "crossbar_eligible",
     "default_rules",
     "leaf_plan_from_dict",

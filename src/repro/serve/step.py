@@ -27,7 +27,6 @@ the DP axes, crossbar tile blocks over 'model' (pass ``mesh`` to
 from __future__ import annotations
 
 import contextlib
-import types
 
 import jax
 import jax.numpy as jnp
@@ -43,40 +42,29 @@ from repro.optim import panther
 def fidelity_params(params, sliced, fid=None, plan=None, mesh=None):
     """Wrap a served (materialized) param tree for finite-ADC reads.
 
-    ``sliced`` is the trainer's plane tree (``TrainState.sliced``); ``fid``
-    a ``models.common.FidelityConfig`` applied to every operand-eligible
-    leaf, or pass a resolved ``repro.plan`` tree via ``plan`` for
-    heterogeneous per-layer ADC (each leaf serves at its own
-    ``plan.fidelity``; leaves without one stay on the lossless fast path).
-    Returns params whose wrapped leaves are forward-only ``XbarWeight``
-    wraps — feed them to the prefill / decode fns built below.
-    Forward-only: do not differentiate through them.
+    ``sliced`` is the trainer's plane tree (``TrainState.sliced``); pass a
+    resolved ``repro.plan`` tree via ``plan`` — each leaf serves at its own
+    ``plan.fidelity`` (heterogeneous per-layer ADC); leaves without one stay
+    on the lossless fast path. Returns params whose wrapped leaves are
+    forward-only ``XbarWeight`` wraps — feed them to the prefill / decode
+    fns built below. Forward-only: do not differentiate through them.
 
     With ``mesh``, each wrap's FidelityConfig carries the tile-shard hint
-    (``shard_dim``) the sharded engine path uses — a global ``fid`` is first
-    resolved into a per-leaf plan (same default rules the trainer uses) so
-    wqkv-style column-parallel and wo-style row-parallel leaves get their
-    own hints. Serve through fns built with the same ``mesh`` so the reads
-    actually trace inside the ShardCtx.
+    (``shard_dim``) the sharded engine path uses, attached from the plan
+    shard hints / name rules. Serve through fns built with the same ``mesh``
+    so the reads actually trace inside the ShardCtx.
     """
     from repro import plan as planlib
 
-    if plan is None and fid is not None:
-        # legacy uniform-fid spelling rides the equivalent default rule set
-        # (per-leaf plan is the single source of truth now)
-        import warnings
-
-        warnings.warn(
-            "fidelity_params(fid=...) is deprecated; pass a resolved plan= "
-            "built from repro.plan.default_rules(cfg, fidelity=...)",
-            DeprecationWarning, stacklevel=2,
+    if fid is not None:
+        raise TypeError(
+            "fidelity_params(fid=...) was removed; pass plan="
+            "repro.plan.resolve_plan(params, repro.plan.default_rules(opt_cfg, "
+            "fidelity=fid)) — the per-leaf plan is the single source of truth"
         )
-        duck = types.SimpleNamespace(spec=fid.spec)  # min_ndim/min_dim default
-        plan = planlib.resolve_plan(params, planlib.default_rules(duck, fidelity=fid))
-        fid = None
     if mesh is not None and plan is not None:
         plan = planlib.attach_fidelity_shard_dims(plan, mesh, params)
-    return panther.fidelitize(params, sliced, fid, plan=plan)
+    return panther.fidelitize(params, sliced, None, plan=plan)
 
 
 def _fid_scope(mesh, global_batch):

@@ -17,11 +17,15 @@ optimizer feeds the operands to ``kernels.sliced_opa.opa_fused_update``
 never exists in HBM), microbatch accumulation concatenates per-microbatch
 token tiles through the gradient scan's stacked outputs, and the grad-norm
 metric comes from the Gram identity ``||X^T dH||_F^2 = <XX^T, dHdH^T>``.
-Remaining dense-grad leaves: embeddings / tied LM head (gather + multi-use
+Under ``repro.plan.coverage_rules`` the operand pipeline extends past plain
+linears: depthwise-conv taps flow ``kind="im2col"`` patch operands,
+Mamba2/xLSTM projections flow matmul operands, and MoE expert banks flow
+grouped per-expert operands (``expert_tokens`` capacity buffers). Remaining
+dense-grad leaves: embeddings / tied LM head (gather + multi-use
 cotangents), zamba/MoE ``shared`` weights (multi-invocation — operand
-cotangents do not sum), and conv/mamba2/xlstm layers (non-matmul
-structure); they take the seed quantize + ``opa_deposit`` path, which is
-bit-compatible per leaf.
+cotangents do not sum), and sLSTM's recurrent ``r`` (per-step cell reuse);
+they take the seed quantize + ``opa_deposit`` path, which is bit-compatible
+per leaf.
 """
 from __future__ import annotations
 
@@ -139,7 +143,8 @@ def grad_specs(
         hint = pl.shard if pl is not None else None
         mapped = pl is not None and pl.mapped
         if operand and mapped and pl.grad == "operand":
-            return shd.operand_grad_spec(ps, leaf.shape, mesh, mb_batch, hint=hint)
+            return shd.operand_grad_spec(ps, leaf.shape, mesh, mb_batch, hint=hint,
+                                         group=pl.group)
         base = shd.leaf_spec(ps, leaf.ndim, hint=hint)
         if mesh is not None:
             base = shd.sanitize_spec(base, leaf.shape, mesh)
@@ -191,8 +196,9 @@ def make_train_step(
     docstring); ``False`` is the seed dense-grad path, kept for
     equivalence testing and as a fallback.
 
-    ``fidelity`` (a ``models.common.FidelityConfig``, defaulting to
-    ``cfg.fidelity``) turns on crossbar-in-the-loop training: operand-
+    ``cfg.fidelity`` (a ``models.common.FidelityConfig``; the legacy
+    ``fidelity=`` argument was removed and now raises ``TypeError`` — attach
+    fidelity through the plan) turns on crossbar-in-the-loop training: operand-
     eligible linears run their forward through the packed finite-ADC
     sliced-MVM engine and their ``dx`` backward through the MᵀVM transpose
     read, on the SAME int8 planes the OPA deposit writes — the Fig-9/10
@@ -222,23 +228,17 @@ def make_train_step(
     ``repro.plan.operand_stash_rule`` to the default rules: leaves whose
     operand stash would outweigh the dense gradient fall back to the
     (bit-compatible) dense deposit path."""
-    explicit_fid = fidelity is not None
-    fidelity = fidelity if fidelity is not None else cfg.fidelity
+    if fidelity is not None:
+        raise TypeError(
+            "make_train_step(fidelity=...) was removed; pass plan_rules="
+            "repro.plan.default_rules(opt_cfg, fidelity=...) (or a resolved plan=)"
+        )
+    fidelity = cfg.fidelity
     if (plan is not None or plan_rules is not None) and fidelity is not None:
         raise ValueError("with an explicit plan, attach fidelity per-leaf via "
-                         "PlanRule(fidelity=...) instead of the fidelity arg")
+                         "PlanRule(fidelity=...) instead of cfg.fidelity")
     if plan is not None and plan_rules is not None:
         raise ValueError("pass either a resolved plan or plan_rules, not both")
-    if explicit_fid:
-        import warnings
-
-        warnings.warn(
-            "make_train_step(fidelity=...) is deprecated; pass plan_rules="
-            "repro.plan.default_rules(opt_cfg, fidelity=...) (or a resolved "
-            "plan=) — the declarative plan is the single source of truth for "
-            "per-leaf fidelity",
-            DeprecationWarning, stacklevel=2,
-        )
     if stash_fallback and (plan is not None or plan_rules is not None):
         # an explicit plan/rule list owns its rule set: appending behind the
         # caller's back would reorder overrides — append operand_stash_rule()
@@ -268,9 +268,8 @@ def make_train_step(
     # token-dependent rules (operand-stash fallback) can flip leaves.
     rules = tuple(plan_rules) if plan_rules is not None else None
     if rules is None and plan is None and (stash_fallback or fidelity is not None):
-        # the legacy fidelity= spelling (and cfg.fidelity) rides the
-        # equivalent default rule set — byte-identical to the old direct
-        # path (tested: test_uniform_plan_fidelity_matches_legacy_arg)
+        # cfg.fidelity rides the equivalent default rule set — byte-identical
+        # to the old direct threading (test_uniform_plan_fidelity_matches_legacy_arg)
         rules = planlib.default_rules(opt_cfg, fidelity=fidelity,
                                       stash_fallback=stash_fallback)
         fidelity = None  # rides the plan from here on
@@ -400,6 +399,20 @@ def make_train_step(
                 tokens = inp.shape[-2] * inp.shape[-1]
             else:
                 tokens = inp.shape[-3] * inp.shape[-2]
+            # expert-group leaves stash per-expert capacity buffers, not
+            # per-token ones: the custom-vjp cotangent aval must match the
+            # grouped einsum's dispatch shape exactly, so recompute the MoE
+            # capacity token count (G groups x C slots) the model will use
+            expert_tokens = None
+            if cfg.moe is not None:
+                from repro.models.mlp import MOE_GROUP
+
+                sg = min(MOE_GROUP, tokens)
+                cap = max(
+                    cfg.moe.top_k,
+                    int(cfg.moe.capacity_factor * sg * cfg.moe.top_k / cfg.moe.n_experts),
+                )
+                expert_tokens = (tokens // sg) * cap
             if use_plan:
                 # trace-time re-resolution: token-dependent rules (the
                 # operand-stash fallback) see the real microbatch size.
@@ -411,7 +424,7 @@ def make_train_step(
                 if rules is not None and mesh is None:
                     plan_t = planlib.resolve_plan(params, rules, tokens=tokens)
                 params = panther.operandize(params, state.sliced, tokens, cfg.dtype,
-                                            plan=plan_t)
+                                            plan=plan_t, expert_tokens=expert_tokens)
             else:
                 params = panther.operandize(params, state.sliced, tokens, cfg.dtype,
                                             fid=fidelity)
@@ -480,12 +493,14 @@ def make_train_step(
 
             def cat(o):
                 # [G, *stack, T, d] -> [*stack, G*T, d]: microbatch tiles
-                # become extra token tiles of one fused deposit
+                # become extra token tiles of one fused deposit (the token
+                # axis is -2 for every operand kind, so this covers im2col
+                # and expert-group operands too)
                 def m(a):
                     a = jnp.moveaxis(a, 0, -3)
                     return a.reshape(*a.shape[:-3], a.shape[-3] * a.shape[-2], a.shape[-1])
 
-                return OuterProductGrad(m(o.x), m(o.dh)).scale_dh(1.0 / microbatches)
+                return OuterProductGrad(m(o.x), m(o.dh), kind=o.kind).scale_dh(1.0 / microbatches)
 
             ops_merged = jax.tree.map(cat, ops_y, is_leaf=_is_opg)
             leaves_acc = pdef.flatten_up_to(gsum)

@@ -393,10 +393,13 @@ def test_fidelity_step_mla_arch_runs():
 
 
 def test_fidelity_requires_operand_pipeline():
-    cfg = _f32_cfg()
+    cfg = _f32_cfg(fidelity=FidelityConfig())
     opt = PantherConfig()
-    with pytest.raises(ValueError), pytest.warns(DeprecationWarning):
-        make_train_step(cfg, opt, constant(0.1), operand_grads=False,
+    with pytest.raises(ValueError, match="operand pipeline"):
+        make_train_step(cfg, opt, constant(0.1), operand_grads=False)
+    # the removed kwarg spelling fails loudly with a migration pointer
+    with pytest.raises(TypeError, match="plan_rules"):
+        make_train_step(_f32_cfg(), opt, constant(0.1),
                         fidelity=FidelityConfig())
 
 

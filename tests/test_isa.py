@@ -1,7 +1,7 @@
 """ISA, compiler, and simulator tests — including the paper-ratio gates."""
 import pytest
 
-from repro.isa.compiler import Hierarchy, compile_model, partition_and_place
+from repro.isa.compiler import Hierarchy, _compile_layers, compile_model, partition_and_place
 from repro.isa.graph import ConvLayer, FCLayer, Graph, MLP_L4, VGG16, build_training_graph
 from repro.isa.isa import MVM_BIT, MTVM_BIT, OPA_BIT, Opcode
 from repro.isa.simulator import layer_energy, layer_time, model_report, simulate
@@ -39,15 +39,15 @@ def test_placement_round_robin():
 
 
 def _legacy_compile(*args, **kw):
-    """compile_model is deprecated in favor of plan_compile.compile_plan;
-    these tests cover the legacy pipeline on purpose, and assert the
-    pointer-to-the-plan-path warning while they're at it."""
-    with pytest.warns(DeprecationWarning, match="plan_compile.compile_plan"):
-        return compile_model(*args, **kw)
+    """compile_model graduated to a hard error (use plan_compile.compile_plan);
+    these tests cover the legacy looped-schedule pipeline on purpose through
+    its internal entry."""
+    return _compile_layers(*args, **kw)
 
 
-def test_compile_model_warns_deprecated():
-    _legacy_compile(MLP_L4, batch=1, variant="v2")
+def test_compile_model_raises_removed():
+    with pytest.raises(RuntimeError, match="plan_compile.compile_plan"):
+        compile_model(MLP_L4, batch=1, variant="v2")
 
 
 def test_compile_fuses_mcu_ops():

@@ -331,6 +331,107 @@ def test_fused_step_loss_decreases():
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
 
 
+# ------------------- structured operand kinds (im2col / expert) -------------
+
+
+def test_dwconv_im2col_cotangent_matches_dense_grad():
+    """The depthwise-conv weight cotangent in im2col operand form: its
+    materialize() is bit-identical (f32) to the dense conv gradient computed
+    the same im2col way (one patch-by-cotangent contraction per channel),
+    and agrees with plain AD of the windowed sum to reduction-order
+    rounding. dx through the custom vjp matches plain AD the same way."""
+    from repro.models.common import XbarWeight, xbar_dwconv
+    from repro.models.common import _dwconv_val
+
+    rng = np.random.default_rng(0)
+    B, L, K, C = 3, 40, 4, 32
+    xp = jnp.asarray(rng.normal(size=(B, L + K - 1, C)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, C)), jnp.float32)
+    co = jnp.asarray(rng.normal(size=(B, L, C)), jnp.float32)
+
+    gx_d, gw_d = jax.grad(
+        lambda xp, w: jnp.sum(_dwconv_val(xp, w) * co), argnums=(0, 1)
+    )(xp, w)
+    ww = XbarWeight(w, OuterProductGrad(
+        jnp.zeros((C, B * L, K)), jnp.zeros((C, B * L, 1)), kind="im2col"))
+    gx_o, gw_o = jax.grad(
+        lambda xp, ww: jnp.sum(xbar_dwconv(xp, ww) * co), argnums=(0, 1)
+    )(xp, ww)
+
+    assert gw_o.g.kind == "im2col"
+    # the im2col patches fold the SAME contraction the dense [K, C] gradient
+    # is: materialize must be bit-identical to the patch einsum
+    pat = jnp.stack([xp[:, k : k + L] for k in range(K)], axis=-1)
+    dense_im2col = jnp.einsum("blck,blc->kc", pat, co)
+    np.testing.assert_array_equal(
+        np.asarray(gw_o.g.materialize()), np.asarray(dense_im2col))
+    # plain AD of the windowed sum reduces in a different order — close, not
+    # bit-equal (same situation as cached-decode vs forward logits)
+    np.testing.assert_allclose(np.asarray(gw_o.g.materialize()),
+                               np.asarray(gw_d), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gx_o), np.asarray(gx_d),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("stacked", [False, True], ids=["flat", "stacked"])
+def test_im2col_operand_update_matches_dense_deposit(stacked):
+    """The im2col deposit transform (planes [.., K, C] viewed as C stacked
+    [K, 1] columns) is bit-identical to quantize(-lr * dense) + opa_deposit
+    on the original layout — the PR-1 bit-compat contract extended to the
+    conv kind."""
+    from repro.optim.panther import _opa_operand_update
+
+    rng = np.random.default_rng(1)
+    K, C, t = 4, 48, 96
+    lead = (3,) if stacked else ()
+    x = jnp.asarray(rng.normal(size=(*lead, C, t, K)), jnp.float32)
+    dh = jnp.asarray(rng.normal(size=(*lead, C, t, 1)) * 1e-2, jnp.float32)
+    g = OuterProductGrad(x, dh, kind="im2col")
+    dense = jnp.einsum("...ctk,...cto->...kc", x, dh)
+    np.testing.assert_array_equal(np.asarray(g.materialize()), np.asarray(dense))
+
+    q = jnp.asarray(rng.integers(-(2**27), 2**27, size=(*lead, K, C)), jnp.int32)
+    planes = slice_weights(q, DEFAULT_SPEC)
+    lr, fbits = jnp.float32(0.05), jnp.int32(20)
+    want = opa_deposit(planes, quantize(-lr * dense, fbits, stochastic=False),
+                       DEFAULT_SPEC)
+    got = _opa_operand_update(planes, g, lr, fbits, DEFAULT_SPEC,
+                              stochastic=False)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_expert_group_deposit_matches_per_expert_dense():
+    """MoE expert stacks: the grouped-crossbar cotangent (one matmul-kind
+    operand group, expert axis riding the stack dim) deposits bit-identically
+    to updating each expert's tile stack from its own dense gradient."""
+    from repro.models.common import XbarWeight, xbar_grouped_linear
+
+    rng = np.random.default_rng(23)
+    E, Ct, d, f = 4, 24, 32, 16
+    x = jnp.asarray(rng.normal(size=(E, Ct, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(E, d, f)), jnp.float32)
+    co = jnp.asarray(rng.normal(size=(E, Ct, f)) * 1e-2, jnp.float32)
+
+    ww = XbarWeight(w, OuterProductGrad(jnp.zeros((E, Ct, d)),
+                                        jnp.zeros((E, Ct, f))))
+    gw = jax.grad(lambda ww: jnp.sum(xbar_grouped_linear(x, ww) * co))(ww)
+    assert isinstance(gw.g, OuterProductGrad) and gw.g.kind == "matmul"
+    np.testing.assert_array_equal(np.asarray(gw.g.x), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(gw.g.dh), np.asarray(co))
+
+    q = jnp.asarray(rng.integers(-(2**27), 2**27, size=(E, d, f)), jnp.int32)
+    planes = slice_weights(q, DEFAULT_SPEC)
+    lr, fbits = jnp.float32(0.05), jnp.int32(20)
+    got = opa_fused_update(planes, gw.g.x, gw.g.dh, lr, fbits, DEFAULT_SPEC,
+                           stochastic=False)
+    for e in range(E):
+        dense_e = jnp.einsum("tm,tn->mn", x[e], co[e])
+        want_e = opa_deposit(planes[:, e],
+                             quantize(-lr * dense_e, fbits, stochastic=False),
+                             DEFAULT_SPEC)
+        assert (np.asarray(got[:, e]) == np.asarray(want_e)).all(), e
+
+
 def test_update_split_mixed_dense_and_operand_leaves():
     """update_split dispatches dense arrays and OuterProductGrad leaves in
     one tree with identical per-leaf keys (bit-compat across modes)."""

@@ -33,6 +33,7 @@ from repro.plan import (
     LeafPlan,
     PlanRule,
     check_plan_compat,
+    coverage_rules,
     default_rules,
     leaf_plan_from_dict,
     leaf_plan_to_dict,
@@ -118,6 +119,94 @@ def test_default_plan_reproduces_legacy_partition(arch):
         if by_path[ps].mapped:
             assert by_path[ps].spec == cfg.spec
     assert counts == GOLDEN_PARTITION[arch], (arch, counts)
+
+
+# Golden snapshot for ``coverage_rules``: category counts plus how many
+# operand leaves carry each structured group kind. Regenerate ONLY for a
+# deliberate mapping change:
+#   PYTHONPATH=src python -c "import tests.test_plan as t; t.regen_golden_coverage()"
+GOLDEN_COVERAGE = {
+    "zamba2_1p2b": {"digital": 15, "dense": 7, "operand": 14, "im2col": 2, "expert": 0},
+    "musicgen_large": {"digital": 1, "dense": 3, "operand": 5, "im2col": 0, "expert": 0},
+    "deepseek_v2_lite_16b": {"digital": 4, "dense": 9, "operand": 15, "im2col": 0, "expert": 3},
+    "granite_moe_1b_a400m": {"digital": 1, "dense": 3, "operand": 6, "im2col": 0, "expert": 3},
+    "xlstm_125m": {"digital": 15, "dense": 3, "operand": 22, "im2col": 2, "expert": 0},
+    "minicpm_2b": {"digital": 1, "dense": 3, "operand": 5, "im2col": 0, "expert": 0},
+    "gemma2_9b": {"digital": 1, "dense": 9, "operand": 10, "im2col": 0, "expert": 0},
+    "gemma_2b": {"digital": 1, "dense": 3, "operand": 5, "im2col": 0, "expert": 0},
+    "phi4_mini_3p8b": {"digital": 1, "dense": 3, "operand": 5, "im2col": 0, "expert": 0},
+    "chameleon_34b": {"digital": 1, "dense": 6, "operand": 5, "im2col": 0, "expert": 0},
+}
+
+
+def _coverage_counts(plan) -> dict:
+    cats = {"digital": 0, "dense": 0, "operand": 0, "im2col": 0, "expert": 0}
+    for pl in plan_by_path(plan).values():
+        cats[pl.category] += 1
+        if pl.group:
+            cats[pl.group] += 1
+    return cats
+
+
+def regen_golden_coverage():  # pragma: no cover - maintenance helper
+    for arch in ARCH_IDS:
+        cfg = get(arch)
+        shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+        plan = resolve_plan(shapes, coverage_rules(PantherConfig()))
+        print(f'    "{arch}": {_coverage_counts(plan)},')
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_coverage_plan_partition_golden(arch):
+    """``coverage_rules`` extends (never shrinks) the default operand set:
+    structured matmuls, conv stems (im2col), and MoE expert stacks (expert
+    groups) move onto the analog update path; group kinds appear only on
+    operand leaves."""
+    cfg = get(arch)
+    shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    plan = resolve_plan(shapes, coverage_rules(PantherConfig()))
+    counts = _coverage_counts(plan)
+    assert counts == GOLDEN_COVERAGE[arch], (arch, counts)
+    assert counts["operand"] >= GOLDEN_PARTITION[arch]["operand"]
+    for ps, pl in plan_by_path(plan).items():
+        if pl.group is not None:
+            assert pl.grad == "operand" and pl.mapped, (ps, pl)
+        if pl.grad == "operand":
+            assert "shared" not in ps.split("/"), ps
+
+
+def test_unmappable_operand_rule_warns_and_demotes():
+    """The silent-fallback footgun: a rule flowing operand gradients at a
+    leaf the operand path can't actually map (shared subtree / gather- or
+    recurrence-consumed keys) must say so — once, naming the leaf — and
+    resolve dense instead of silently dropping updates."""
+    import warnings
+
+    from repro import plan as planlib
+
+    params = {
+        "shared": {"wq": jnp.zeros((64, 64))},
+        "groups": [{"attn": {"wq": jnp.zeros((64, 64))}}],
+        "slstm": {"r": jnp.zeros((4, 64, 64))},
+    }
+    rules = default_rules(PantherConfig()) + (
+        PlanRule("*/wq", grad="operand"),
+        PlanRule("*/r", grad="operand", group="im2col"),
+    )
+    planlib._warned_unmappable.clear()
+    with pytest.warns(UserWarning) as rec:
+        plan = plan_by_path(resolve_plan(params, rules))
+    msgs = [str(w.message) for w in rec]
+    assert any("shared/wq" in m for m in msgs), msgs
+    assert any("slstm/r" in m for m in msgs), msgs
+    assert plan["shared/wq"].grad == "dense" and plan["shared/wq"].group is None
+    assert plan["slstm/r"].grad == "dense" and plan["slstm/r"].group is None
+    # the mappable twin keeps its operand flow
+    assert plan["groups/0/attn/wq"].grad == "operand"
+    # warn-once: a second resolve over the same paths stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        resolve_plan(params, rules)
 
 
 def test_xlstm_wq_style_leaves_resolve_dense():
@@ -259,20 +348,23 @@ def test_heterogeneous_plan_trains_and_serves():
     assert np.isfinite(np.asarray(logits)).all()
 
 
-def test_uniform_plan_fidelity_matches_legacy_arg():
-    """A plan carrying one global FidelityConfig is bit-identical to the
-    legacy ``make_train_step(fidelity=...)`` threading."""
+def test_removed_fidelity_arg_and_cfg_fidelity_equivalence():
+    """``make_train_step(fidelity=...)`` graduated from DeprecationWarning to
+    a hard ``TypeError``; the two supported spellings — ``cfg.fidelity`` and
+    an explicit ``default_rules(fidelity=...)`` rule set — stay bit-identical
+    (the cfg path resolves to exactly that rule set internally)."""
     cfg = dataclasses.replace(get_smoke("gemma_2b"), dtype=jnp.float32)
     opt = PantherConfig(stochastic_round=False, crs_every=64)
     fid = FidelityConfig(adc_bits_fwd=6, adc_bits_bwd=6)
+    with pytest.raises(TypeError, match="plan_rules"):
+        make_train_step(cfg, opt, constant(0.3), fidelity=fid)
     batch = {
         "inputs": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab),
         "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0, cfg.vocab),
     }
     s0 = train_state_init(cfg, opt, jax.random.PRNGKey(0))
-    with pytest.warns(DeprecationWarning, match="plan_rules"):
-        legacy = make_train_step(cfg, opt, constant(0.3), fidelity=fid)
-    sa, ma = jax.jit(legacy)(s0, batch)
+    cfg_fid = dataclasses.replace(cfg, fidelity=fid)
+    sa, ma = jax.jit(make_train_step(cfg_fid, opt, constant(0.3)))(s0, batch)
     rules = default_rules(opt, fidelity=fid)
     sb, mb = jax.jit(make_train_step(cfg, opt, constant(0.3), plan_rules=rules))(s0, batch)
     assert float(ma["loss"]) == float(mb["loss"])
@@ -284,9 +376,18 @@ def test_plan_arg_conflicts_raise():
     cfg = dataclasses.replace(get_smoke("gemma_2b"), dtype=jnp.float32)
     opt = PantherConfig()
     rules = default_rules(opt)
-    with pytest.raises(ValueError):
+    # the removed kwarg errors FIRST, even next to other plan args
+    with pytest.raises(TypeError, match="plan_rules"):
         make_train_step(cfg, opt, constant(0.1), plan_rules=rules,
                         fidelity=FidelityConfig())
+    # cfg.fidelity + an explicit plan is still the original conflict
+    with pytest.raises(ValueError, match="cfg.fidelity"):
+        make_train_step(dataclasses.replace(cfg, fidelity=FidelityConfig()),
+                        opt, constant(0.1), plan_rules=rules)
+    from repro.serve.step import fidelity_params
+
+    with pytest.raises(TypeError, match="single source of truth"):
+        fidelity_params({}, {}, fid=FidelityConfig())
     with pytest.raises(ValueError):
         shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
         make_train_step(cfg, opt, constant(0.1),
@@ -335,6 +436,12 @@ def test_leaf_plan_dict_round_trip():
                                         stuck_seed=7, read_noise=0.02))),
         LeafPlan(mapped=True, grad="dense", shard=(None, "model")),
         LeafPlan(mapped=True, shard=(("pod", "data"), None)),
+        LeafPlan(mapped=True, spec=SliceSpec.uniform(6), grad="operand",
+                 group="im2col"),
+        LeafPlan(mapped=True, grad="operand", group="expert",
+                 expert_groups=((4, FidelityConfig(adc_bits_fwd=9)),
+                                (12, None)),
+                 fidelity=FidelityConfig(adc_bits_fwd=6)),
     ]
     for pl in pls:
         rt = leaf_plan_from_dict(leaf_plan_to_dict(pl))
